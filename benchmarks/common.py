@@ -1,0 +1,41 @@
+"""Shared benchmark utilities: timing, result tables, artifact IO."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+
+
+def save_result(name: str, payload: dict):
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    with open(os.path.join(ARTIFACTS, f"{name}.json"), "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+
+
+def load_result(name: str):
+    p = os.path.join(ARTIFACTS, f"{name}.json")
+    if os.path.exists(p):
+        with open(p) as f:
+            return json.load(f)
+    return None
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.perf_counter() - self.t0
+
+
+def fmt_table(rows: list, headers: list) -> str:
+    widths = [max(len(str(h)), *(len(str(r[i])) for r in rows)) if rows else len(str(h))
+              for i, h in enumerate(headers)]
+    out = ["  ".join(str(h).ljust(w) for h, w in zip(headers, widths))]
+    out.append("  ".join("-" * w for w in widths))
+    for r in rows:
+        out.append("  ".join(str(c).ljust(w) for c, w in zip(r, widths)))
+    return "\n".join(out)

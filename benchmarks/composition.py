@@ -1,0 +1,25 @@
+"""Fig. 6: composition of output edges (p / n / h proportions)."""
+from __future__ import annotations
+
+from benchmarks.common import fmt_table, save_result
+from repro.core import summarize
+from repro.graphs import datasets
+
+
+def run(quick: bool = True):
+    names = datasets.names()[:6] if quick else datasets.names()
+    T = 10 if quick else 20
+    rows, payload = [], {}
+    for name in names:
+        g = datasets.load(name)
+        s = summarize(g, T=T, seed=0)
+        comp = s.composition()
+        tot = max(1, sum(comp.values()))
+        fr = {k: v / tot for k, v in comp.items()}
+        rows.append([name, comp["pos"], comp["neg"], comp["h"],
+                     f"{100*fr['pos']:.1f}%", f"{100*fr['neg']:.1f}%", f"{100*fr['h']:.1f}%"])
+        payload[name] = {"counts": comp, "fractions": fr}
+    print("\n== Composition (Fig 6): output edge types ==")
+    print(fmt_table(rows, ["dataset", "|P+|", "|P-|", "|H|", "p%", "n%", "h%"]))
+    save_result("composition", payload)
+    return payload

@@ -1,0 +1,55 @@
+"""§VIII-B: partial-decompression latency — neighbor queries directly on the
+summary, plus PageRank run on the compressed representation (§VIII-C)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import fmt_table, save_result
+from repro.core import summarize
+from repro.graphs import datasets
+
+
+def pagerank_on_summary(s, n, iters=5, d=0.85):
+    r = np.full(n, 1.0 / n)
+    deg = np.array([len(s.neighbors(u)) for u in range(n)], dtype=np.float64)
+    for _ in range(iters):
+        new = np.zeros(n)
+        for u in range(n):
+            nb = s.neighbors(u)
+            if len(nb):
+                new[nb] += r[u] / deg[u]
+        r = d * new + (1 - d) / n
+    return r
+
+
+def run(quick: bool = True):
+    names = ["PR", "FA", "CA"] if quick else datasets.names()[:8]
+    rows, payload = [], {}
+    for name in names:
+        g = datasets.load(name)
+        s = summarize(g, T=10, seed=0)
+        rng = np.random.default_rng(0)
+        qs = rng.integers(0, g.n, size=min(2000, g.n))
+        s.neighbors(int(qs[0]))  # warm caches
+        t0 = time.perf_counter()
+        for u in qs:
+            s.neighbors(int(u))
+        dt = (time.perf_counter() - t0) / len(qs)
+        # PageRank on the compressed representation vs on the raw graph
+        pr_c = pagerank_on_summary(s, g.n, iters=3)
+        r = np.full(g.n, 1.0 / g.n)
+        deg = np.maximum(g.degree(), 1)
+        for _ in range(3):
+            new = np.zeros(g.n)
+            for u in range(g.n):
+                new[g.neighbors(u)] += r[u] / deg[u]
+            r = 0.85 * new + 0.15 / g.n
+        corr = float(np.corrcoef(pr_c, r)[0, 1])
+        rows.append([name, f"{dt*1e6:.1f}µs", f"{corr:.5f}"])
+        payload[name] = {"neighbor_query_us": dt * 1e6, "pagerank_corr": corr}
+    print("\n== Partial decompression (§VIII-B): per-query latency; PageRank on summary ==")
+    print(fmt_table(rows, ["dataset", "query", "PR corr"]))
+    save_result("decompression", payload)
+    return payload

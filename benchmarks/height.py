@@ -1,0 +1,31 @@
+"""Table V: hierarchy-height bound H_b sweep — deeper trees, smaller output."""
+from __future__ import annotations
+
+from benchmarks.common import fmt_table, save_result
+from repro.core import summarize
+from repro.graphs import datasets
+
+
+def run(quick: bool = True):
+    bounds = [2, 5, 10, None] if quick else [2, 5, 7, 10, None]
+    names = ["PR", "FA", "CN"] if quick else datasets.names()
+    T = 10 if quick else 20
+    rows, payload = [], {}
+    for name in names:
+        g = datasets.load(name)
+        rel, dep = [], []
+        for hb in bounds:
+            s = summarize(g, T=T, seed=0, height_bound=hb)
+            assert s.validate_lossless(g)
+            if hb is not None:
+                assert all(h <= hb for h in s.tree_heights())
+            st = s.stats(g)
+            rel.append(st["relative_size"])
+            dep.append(st["avg_leaf_depth"])
+        rows.append([name] + [f"{d:.2f}" for d in dep] + [f"{r:.3f}" for r in rel])
+        payload[name] = {"bounds": [str(b) for b in bounds], "avg_depth": dep, "relative_size": rel}
+    labels = [str(b) if b else "∞" for b in bounds]
+    print("\n== Height bound (Table V): avg leaf depth | relative size per H_b ==")
+    print(fmt_table(rows, ["dataset"] + [f"d@{l}" for l in labels] + [f"size@{l}" for l in labels]))
+    save_result("height", payload)
+    return payload

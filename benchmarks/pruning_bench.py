@@ -1,0 +1,32 @@
+"""Table IV: pruning-substep ablation — relative size, max height, avg leaf
+depth after substeps 0 (none), 1, 1+2, 1+2+3."""
+from __future__ import annotations
+
+from benchmarks.common import fmt_table, save_result
+from repro.core import summarize
+from repro.graphs import datasets
+
+
+def run(quick: bool = True):
+    names = ["PR", "FA", "DB", "CN"] if quick else datasets.names()
+    T = 10 if quick else 20
+    variants = [(), (1,), (1, 2), (1, 2, 3)]
+    rows, payload = [], {}
+    for name in names:
+        g = datasets.load(name)
+        rel, hts, dep = [], [], []
+        for steps in variants:
+            s = summarize(g, T=T, seed=0, prune_steps=steps)
+            assert s.validate_lossless(g)
+            st = s.stats(g)
+            rel.append(st["relative_size"])
+            hts.append(st["max_height"])
+            dep.append(st["avg_leaf_depth"])
+        rows.append([name] + [f"{r:.3f}" for r in rel] + [str(h) for h in hts] + [f"{d:.2f}" for d in dep])
+        payload[name] = {"relative_size": rel, "max_height": hts, "avg_leaf_depth": dep}
+    hdr = (["dataset"] + [f"size@{i}" for i in range(4)]
+           + [f"maxh@{i}" for i in range(4)] + [f"depth@{i}" for i in range(4)])
+    print("\n== Pruning ablation (Table IV): substeps 0/1/2/3 ==")
+    print(fmt_table(rows, hdr))
+    save_result("pruning", payload)
+    return payload

@@ -1,0 +1,121 @@
+"""Render EXPERIMENTS.md tables from artifacts/dryrun/*.json.
+
+  PYTHONPATH=src python -m benchmarks.render_experiments [--out artifacts/tables]
+
+Produces markdown fragments: dryrun_table.md (all 80 cells), roofline_table.md
+(single-pod baselines with the three terms + bottleneck + hint).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+HINTS = {
+    "compute": "reduce recompute (remat policy) / skip masked attention blocks",
+    "memory": "raise arithmetic intensity: larger per-device batch, fuse, or cut optimizer/grad traffic",
+    "collective": "reshard to cut all-gather/all-reduce volume; overlap with compute",
+}
+
+
+def _load(mesh):
+    cells = {}
+    for f in glob.glob(os.path.join(ART, f"*__{mesh}.json")):
+        d = json.load(open(f))
+        cells[(d["arch"], d["shape"])] = d
+    return cells
+
+
+def _fmt_t(x):
+    if x is None:
+        return "-"
+    return f"{x*1e3:.1f}ms" if x < 1 else f"{x:.2f}s"
+
+
+def dryrun_table(archs):
+    single, multi = _load("single"), _load("multi")
+    lines = [
+        "| arch | shape | mesh | status | HBM/dev (meas) | HBM/dev (analytic) | compile | collectives (count) |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in archs:
+        for shape in SHAPE_ORDER:
+            for mesh, cells in (("single(256)", single), ("multi(512)", multi)):
+                d = cells.get((arch, shape))
+                if d is None:
+                    lines.append(f"| {arch} | {shape} | {mesh} | MISSING | | | | |")
+                    continue
+                if d["status"] == "skipped":
+                    lines.append(f"| {arch} | {shape} | {mesh} | skip | — | — | — | {d['reason'].split('(')[0]} |")
+                    continue
+                if d["status"] != "ok":
+                    lines.append(f"| {arch} | {shape} | {mesh} | ERROR | | | | {d.get('error','')[:60]} |")
+                    continue
+                meas = d["per_device_hbm"] / 2**30
+                ana = d.get("analytic_hbm", {}).get("total")
+                ana_s = f"{ana/2**30:.2f} GiB" if ana else "-"
+                cnt = d["coll_breakdown"].get("count", {})
+                cc = ", ".join(f"{k.replace('all-','a')}:{v}" for k, v in cnt.items() if v)
+                lines.append(
+                    f"| {arch} | {shape} | {mesh} | ok | {meas:.2f} GiB | {ana_s} |"
+                    f" {d.get('compile_s',0):.0f}s | {cc or '—'} |")
+    return "\n".join(lines)
+
+
+def _fraction(d):
+    """Recompute the roofline fraction, adding the decode memory ideal for
+    artifacts written before model_bytes existed."""
+    from repro.configs.base import SHAPES
+    from repro.configs.registry import get_config
+    from repro.launch import roofline as RL
+
+    mb = d.get("model_bytes", 0.0)
+    if not mb and SHAPES[d["shape"]].kind == "decode":
+        mb = RL.ideal_decode_bytes(get_config(d["arch"]), SHAPES[d["shape"]])
+    ideal = max(d["model_flops"] / (d["chips"] * RL.PEAK_FLOPS),
+                mb / (d["chips"] * RL.HBM_BW))
+    return ideal / max(d["t_compute"], d["t_memory"], d["t_collective"], 1e-12)
+
+
+def roofline_table(archs):
+    single = _load("single")
+    lines = [
+        "| arch | shape | t_compute | t_memory | t_collective | bottleneck | MODEL_FLOPS | useful (6ND/HLO) | roofline frac | next lever |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in archs:
+        for shape in SHAPE_ORDER:
+            d = single.get((arch, shape))
+            if d is None or d["status"] != "ok":
+                continue
+            lines.append(
+                f"| {arch} | {shape} | {_fmt_t(d['t_compute'])} | {_fmt_t(d['t_memory'])} |"
+                f" {_fmt_t(d['t_collective'])} | **{d['bottleneck']}** |"
+                f" {d['model_flops']:.2e} | {d['useful_ratio']:.2f} |"
+                f" {_fraction(d):.3f} | {HINTS[d['bottleneck']]} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=os.path.join(os.path.dirname(__file__), "..", "artifacts", "tables"))
+    args = ap.parse_args()
+    from repro.configs.registry import ARCH_NAMES
+    os.makedirs(args.out, exist_ok=True)
+    dt = dryrun_table(ARCH_NAMES)
+    rt = roofline_table(ARCH_NAMES)
+    with open(os.path.join(args.out, "dryrun_table.md"), "w") as f:
+        f.write(dt + "\n")
+    with open(os.path.join(args.out, "roofline_table.md"), "w") as f:
+        f.write(rt + "\n")
+    print(dt[:400], "...\n")
+    print("wrote", args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Roofline report: aggregates the dry-run artifacts into the §Roofline table."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import fmt_table, save_result
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load_cells(mesh=None):
+    cells = []
+    for p in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(p) as f:
+            rec = json.load(f)
+        if mesh and rec.get("mesh") != mesh:
+            continue
+        cells.append(rec)
+    return cells
+
+
+def run(quick: bool = True, mesh="single"):
+    cells = [c for c in load_cells(mesh) if not c.get("variant")]
+    if not cells:
+        print("\n== Roofline: no dry-run artifacts found (run `python -m repro.launch.dryrun --all`) ==")
+        return {}
+    rows = []
+    for c in cells:
+        if c.get("status") == "skipped":
+            rows.append([c["arch"], c["shape"], "SKIP", "-", "-", "-", "-", "-", "-"])
+            continue
+        if c.get("status") != "ok":
+            rows.append([c["arch"], c["shape"], "ERR", "-", "-", "-", "-", "-", "-"])
+            continue
+        if "bottleneck" not in c:  # slugger-summarize extra row (no LM terms)
+            rows.append([
+                c["arch"], c["shape"], "memory",
+                f"{c.get('t_compute', 0)*1e3:.2f}", f"{c.get('t_memory', 0)*1e3:.2f}",
+                f"{c.get('t_collective', 0)*1e3:.2f}", "-", "-",
+                f"{c['per_device_hbm']/2**30:.1f}",
+            ])
+            continue
+        rows.append([
+            c["arch"], c["shape"], c["bottleneck"],
+            f"{c['t_compute']*1e3:.2f}", f"{c['t_memory']*1e3:.2f}", f"{c['t_collective']*1e3:.2f}",
+            f"{c['useful_ratio']:.2f}", f"{c['roofline_fraction']*100:.1f}%",
+            f"{c['per_device_hbm']/2**30:.1f}",
+        ])
+    print(f"\n== Roofline ({mesh}-pod, ms per step; fraction = MODEL_FLOPS@peak / max-term) ==")
+    print(fmt_table(rows, ["arch", "shape", "bound", "t_comp", "t_mem", "t_coll",
+                           "useful", "roofline", "GiB/dev"]))
+    save_result(f"roofline_{mesh}", {f"{c['arch']}__{c['shape']}": c for c in cells})
+    return cells

@@ -1,0 +1,44 @@
+"""Benchmark harness: one module per paper table/figure + the roofline report.
+
+  PYTHONPATH=src python -m benchmarks.run            # quick (default)
+  PYTHONPATH=src python -m benchmarks.run --full     # paper-scale settings
+  PYTHONPATH=src python -m benchmarks.run --only compactness,iterations
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from benchmarks import (compactness, composition, decompression, height,
+                        iterations, pruning_bench, roofline_report,
+                        scalability, speed)
+
+SUITES = {
+    "compactness": compactness.run,     # Fig 5a / Fig 1a
+    "speed": speed.run,                 # Fig 5b
+    "scalability": scalability.run,     # Fig 1b
+    "iterations": iterations.run,       # Table III
+    "pruning": pruning_bench.run,       # Table IV
+    "height": height.run,               # Table V
+    "composition": composition.run,     # Fig 6
+    "decompression": decompression.run, # §VIII-B
+    "roofline": roofline_report.run,    # framework §Roofline
+}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None, help="comma-separated suite names")
+    args = ap.parse_args(argv)
+    only = args.only.split(",") if args.only else list(SUITES)
+    t0 = time.time()
+    for name in only:
+        t1 = time.time()
+        SUITES[name](quick=not args.full)
+        print(f"   [{name} done in {time.time()-t1:.1f}s]")
+    print(f"\nAll benchmarks done in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Fig. 1(b): SLUGGER scales linearly with |E| (node-sampled series of the
+largest stand-in, as the paper samples UK-05)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Timer, fmt_table, save_result
+from repro.core import summarize
+from repro.graphs import datasets, generators
+
+
+def run(quick: bool = True):
+    base = datasets.load("SK" if quick else "U5")
+    fracs = [0.25, 0.5, 0.75, 1.0] if quick else [0.125, 0.25, 0.5, 0.75, 1.0]
+    T = 5
+    rows, payload = [], []
+    for f in fracs:
+        g = generators.sample_subgraph(base, int(base.n * f), seed=1)
+        with Timer() as t:
+            s = summarize(g, T=T, seed=0)
+        assert s.validate_lossless(g)
+        rows.append([f"{f:.3f}", g.n, g.m, f"{t.dt:.2f}s", f"{1e6*t.dt/max(g.m,1):.1f}"])
+        payload.append({"frac": f, "n": g.n, "m": g.m, "time_s": t.dt})
+    print("\n== Scalability (Fig 1b): time vs |E| (T=5) ==")
+    print(fmt_table(rows, ["frac", "n", "m", "time", "us/edge"]))
+    # linearity check: time per edge roughly constant (within 3x across range)
+    upe = [p["time_s"] / max(p["m"], 1) for p in payload]
+    ratio = max(upe) / max(min(upe), 1e-12)
+    print(f"   max/min time-per-edge ratio: {ratio:.2f} (linear ⇒ ≈ constant)")
+    save_result("scalability", {"series": payload, "tpe_ratio": ratio})
+    return payload

@@ -1,0 +1,34 @@
+"""Fig. 5(b): running time of SLUGGER vs baselines (means over trials)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Timer, fmt_table, save_result
+from repro.core import baselines, summarize
+from repro.graphs import datasets
+
+
+def run(quick: bool = True, trials: int = 1):
+    T = 10 if quick else 20
+    names = datasets.names()[:5] if quick else datasets.names()
+    rows, payload = [], {}
+    for name in names:
+        g = datasets.load(name)
+        times = {}
+        for algo, fn in [
+            ("slugger", lambda s: summarize(g, T=T, seed=s)),
+            ("sweg", lambda s: baselines.sweg(g, T=T, seed=s)),
+            ("sags", lambda s: baselines.sags_like(g, seed=s)),
+        ]:
+            ts = []
+            for s in range(trials):
+                with Timer() as t:
+                    fn(s)
+                ts.append(t.dt)
+            times[algo] = (float(np.mean(ts)), float(np.std(ts)))
+        rows.append([name, g.m] + [f"{times[a][0]:.2f}±{times[a][1]:.2f}s" for a in ("slugger", "sweg", "sags")])
+        payload[name] = {"m": g.m, "times": {k: v[0] for k, v in times.items()}}
+    print("\n== Speed (Fig 5b): wall time ==")
+    print(fmt_table(rows, ["dataset", "m", "slugger", "sweg", "sags"]))
+    save_result("speed", payload)
+    return payload

@@ -1,0 +1,47 @@
+"""Where the paper's technique legitimately touches the LM pillar
+(DESIGN.md §Arch-applicability): expert CO-ACTIVATION graphs from MoE router
+logs are real-world hierarchical graphs (experts specialize in nested topic
+clusters) — SLUGGER compresses them losslessly for storage/analysis.
+
+  PYTHONPATH=src python examples/moe_routing_graph.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_config
+from repro.core import summarize
+from repro.graphs.csr import Graph
+from repro.models.api import get_api
+from repro.models import moe as MOE
+
+cfg = get_config("deepseek-v2-lite-16b", smoke=True)
+api = get_api(cfg)
+params = api.init_params(cfg, jax.random.key(0))
+
+# run the router over a synthetic batch and log expert co-activations
+rng = np.random.default_rng(0)
+toks = jnp.asarray(rng.integers(0, cfg.vocab, size=(8, 64)), jnp.int32)
+from repro.models import transformer as T
+x = jnp.take(params["embed"], toks, axis=0)
+layer0 = jax.tree.map(lambda t: t[0], params["layers"])
+logits = jnp.einsum("gsd,de->gse", x, layer0["moe"]["router"].astype(x.dtype),
+                    preferred_element_type=jnp.float32)
+_, top_e = jax.lax.top_k(jax.nn.softmax(logits, -1), cfg.moe.top_k)
+top_e = np.asarray(top_e).reshape(-1, cfg.moe.top_k)
+
+edges = set()
+for row in top_e:  # experts co-activated on the same token
+    for i in range(len(row)):
+        for j in range(i + 1, len(row)):
+            a, b = int(row[i]), int(row[j])
+            if a != b:
+                edges.add((min(a, b), max(a, b)))
+g = Graph.from_edge_set(cfg.moe.n_experts, edges)
+print(f"expert co-activation graph: {g.n} experts, {g.m} co-activation edges")
+
+s = summarize(g, T=10, seed=0)
+print(f"SLUGGER summary: cost {s.cost()} (relative {s.relative_size(g):.3f}), "
+      f"lossless={s.validate_lossless(g)}")
+print("NOTE: this is offline analysis/storage — the MoE compute path itself "
+      "is untouched (the technique is not a neural-network layer).")

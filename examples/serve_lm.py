@@ -1,0 +1,9 @@
+"""Batched serving example: prefill + continuous batched decode.
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    serve_main(["--arch", "qwen2.5-3b", "--smoke", "--requests", "6",
+                "--prompt-len", "12", "--gen", "12"])

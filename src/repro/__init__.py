@@ -1,0 +1,2 @@
+"""repro: SLUGGER lossless hierarchical graph summarization — JAX framework."""
+__version__ = "1.0.0"

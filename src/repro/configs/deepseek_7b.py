@@ -1,0 +1,10 @@
+"""DeepSeek-7B [arXiv:2401.02954]: llama-architecture. 30L, d=4096,
+32 heads (MHA, kv=32), d_ff=11008, vocab=102400."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-7b", family="dense",
+    n_layers=30, d_model=4096, n_heads=32, n_kv_heads=32, d_ff=11008,
+    vocab=102400, head_dim=128,
+    train_microbatch=64,
+)

@@ -1,0 +1,223 @@
+"""Distributed (JAX) engine for SLUGGER.
+
+Deployment story (DESIGN.md §2.2/§6): the O(|E|) scans (hashing, segment-min
+shingles) and the O(k²) in-group scoring are device-side, sharded with
+``shard_map`` over the mesh's data axis; only the tiny, inherently sequential
+merge decisions run on host. On a real pod the edge list lives sharded in HBM
+and never leaves the devices; the host sees (n_roots,) shingles and per-group
+top-pairs.
+
+Engines:
+  * ``shingles_sharded``     — edge-sharded minhash shingles (pmin combine)
+  * ``greedy_group_matching``— vmapped on-device greedy matching per group
+  * ``summarize_jax``        — hybrid engine: device scoring + host decisions,
+                               exactness restored by the emission DP
+  * ``summarize_step_fn``    — the jit-able step used by the multi-pod dry-run
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.slugger import SluggerState, _emit_encoding
+from repro.core.pruning import prune
+from repro.graphs.csr import Graph
+
+MAXU = jnp.uint32(0xFFFFFFFF)
+
+
+def _hash_u32(x, a, b):
+    h = x.astype(jnp.uint32) * jnp.uint32(a) + jnp.uint32(b)
+    h = h ^ (h >> jnp.uint32(16))
+    h = h * jnp.uint32(0x7FEB352D)
+    h = h ^ (h >> jnp.uint32(15))
+    return h
+
+
+def node_shingles_dense(src, dst, n, a, b):
+    """Replicated-reference shingle computation (src/dst = directed edges)."""
+    h_self = _hash_u32(jnp.arange(n, dtype=jnp.uint32), a, b)
+    h_nbr = _hash_u32(dst.astype(jnp.uint32), a, b)
+    seg = jax.ops.segment_min(h_nbr, src, num_segments=n)
+    return jnp.minimum(h_self, seg)
+
+
+def shingles_sharded(mesh, data_axes=("data",)):
+    """Edge-sharded shingles: local segment-min + cross-shard pmin.
+
+    Returns a function (src, dst, n_static, a, b) -> (n,) uint32, where the
+    edge arrays are sharded along ``data_axes`` and padded with src == n
+    (padding rows fold into a dummy segment).
+    """
+
+    def _local(src, dst, h_self, a, b):
+        n = h_self.shape[0]
+        h_nbr = _hash_u32(dst.astype(jnp.uint32), a, b)
+        seg = jax.ops.segment_min(h_nbr, src, num_segments=n + 1)[:n]
+        local = jnp.minimum(h_self, seg)
+        for ax in data_axes:
+            local = jax.lax.pmin(local, ax)
+        return local
+
+    def fn(src, dst, n, a, b):
+        h_self = _hash_u32(jnp.arange(n, dtype=jnp.uint32), a, b)
+        edge_spec = P(data_axes if len(data_axes) > 1 else data_axes[0])
+        return jax.shard_map(
+            functools.partial(_local, a=a, b=b),
+            mesh=mesh,
+            in_specs=(edge_spec, edge_spec, P(None)),
+            out_specs=P(None),
+        )(src, dst, h_self)
+
+    return fn
+
+
+def root_shingles_jax(node_sh, root_of, n_ids):
+    return jax.ops.segment_min(node_sh, root_of, num_segments=n_ids)
+
+
+# --------------------------------------------------------------------------
+# On-device greedy matching within padded candidate groups
+# --------------------------------------------------------------------------
+def _match_one_group(scores, threshold, max_merges):
+    """Greedy maximum-score matching on a (K, K) score matrix.
+
+    Returns (max_merges, 2) int32 pair indices, padded with -1.
+    """
+    K = scores.shape[0]
+    scores = jnp.where(jnp.eye(K, dtype=bool), -jnp.inf, scores)
+
+    def body(carry, _):
+        sc, out, i = carry
+        flat = jnp.argmax(sc)
+        r, c = flat // K, flat % K
+        ok = sc[r, c] >= threshold
+        pair = jnp.where(ok, jnp.array([r, c], dtype=jnp.int32), jnp.array([-1, -1], dtype=jnp.int32))
+        # mask the merged pair's rows/cols
+        mask_r = (jnp.arange(K) == r) | (jnp.arange(K) == c)
+        sc = jnp.where(ok & (mask_r[:, None] | mask_r[None, :]), -jnp.inf, sc)
+        out = out.at[i].set(pair)
+        return (sc, out, i + 1), None
+
+    out0 = jnp.full((max_merges, 2), -1, dtype=jnp.int32)
+    (_, out, _), _ = jax.lax.scan(body, (scores, out0, 0), None, length=max_merges)
+    return out
+
+
+def greedy_group_matching(scores, threshold, max_merges=None):
+    """vmapped greedy matching: scores (G, K, K) -> (G, max_merges, 2)."""
+    G, K, _ = scores.shape
+    if max_merges is None:
+        max_merges = K // 2
+    return jax.vmap(lambda s: _match_one_group(s, threshold, max_merges))(scores)
+
+
+def _pack_bits_jax(memb_cols):
+    """(G, K, R) bool -> (G, K, W) uint32 packed."""
+    G, K, R = memb_cols.shape
+    W = (R + 31) // 32
+    pad = W * 32 - R
+    m = jnp.pad(memb_cols, ((0, 0), (0, 0), (0, pad)))
+    m = m.reshape(G, K, W, 32).astype(jnp.uint32)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    return (m * weights).sum(axis=-1).astype(jnp.uint32)
+
+
+def group_jaccard_scores(nbr_onehot):
+    """nbr_onehot: (G, K, R) bool neighbor indicators per group member.
+    Returns (G, K, K) Jaccard matrices (einsum form — MXU-friendly)."""
+    x = nbr_onehot.astype(jnp.float32)
+    inter = jnp.einsum("gkr,glr->gkl", x, x)
+    deg = x.sum(-1)
+    union = deg[:, :, None] + deg[:, None, :] - inter
+    return jnp.where(union > 0, inter / jnp.maximum(union, 1.0), 0.0)
+
+
+# --------------------------------------------------------------------------
+# The jit-able candidate-generation step used by the multi-pod dry-run
+# --------------------------------------------------------------------------
+def summarize_step_fn(n_nodes: int, hist: str = "sort"):
+    """One SLUGGER candidate-generation + scoring step over a sharded edge
+    list: shingles → candidate-group-size histogram. Lowered/compiled in the
+    dry-run.
+
+    ``hist``:
+      * "sort"    — exact group sizes via jnp.unique (paper-faithful baseline;
+        the sort's O(n log n) merge passes dominate HBM traffic),
+      * "scatter" — §Perf iteration: hash shingles into n/500 buckets and
+        scatter-add ones (O(n) traffic). Group sizes become bucket sizes —
+        exactly the cap-at-500 random split the paper applies anyway
+        (Sect. III-B2), so downstream semantics are unchanged.
+    """
+
+    def step(src, dst, root_of, seed):
+        a = jnp.uint32(2654435761) * (seed.astype(jnp.uint32) | jnp.uint32(1))
+        b = seed.astype(jnp.uint32) * jnp.uint32(0x9E3779B9)
+        h_self = _hash_u32(jnp.arange(n_nodes, dtype=jnp.uint32), a, b)
+        h_nbr = _hash_u32(dst.astype(jnp.uint32), a, b)
+        seg = jax.ops.segment_min(h_nbr, src, num_segments=n_nodes + 1)[:n_nodes]
+        node_sh = jnp.minimum(h_self, seg)
+        root_sh = jax.ops.segment_min(node_sh, root_of, num_segments=n_nodes)
+        if hist == "scatter":
+            n_buckets = max(n_nodes // 500, 1)
+            bucket = (_hash_u32(root_sh, a ^ jnp.uint32(0xA5A5A5A5), b) % jnp.uint32(n_buckets)).astype(jnp.int32)
+            counts = jax.ops.segment_sum(jnp.ones_like(bucket), bucket, num_segments=n_buckets)
+            return root_sh, counts[bucket]
+        # group-size histogram (how full candidate sets are)
+        _, inv, counts = jnp.unique(
+            root_sh, return_inverse=True, return_counts=True, size=n_nodes, fill_value=MAXU
+        )
+        return root_sh, counts[inv]
+
+    return step
+
+
+# --------------------------------------------------------------------------
+# Hybrid engine: device scoring, host decisions, DP emission for exactness
+# --------------------------------------------------------------------------
+def summarize_jax(
+    g: Graph,
+    T: int = 20,
+    seed: int = 0,
+    max_group: int = 128,
+    prune_steps=(1, 2, 3),
+    min_jaccard: float = 0.05,
+):
+    """Approximate-selection engine (merge picks by device-side Jaccard
+    matching, verified by host-side Saving ≥ θ). Lossless by construction —
+    the emission DP re-encodes the exact input graph."""
+    from repro.core.merging import GroupWorkspace
+    from repro.core.minhash import candidate_groups
+
+    state = SluggerState(g)
+    rng = np.random.default_rng(seed)
+    for t in range(1, T + 1):
+        theta = 0.0 if t == T else 1.0 / (1 + t)
+        alive = np.fromiter(state.alive, dtype=np.int64)
+        groups = candidate_groups(g, state.root_of, alive, seed=seed * 31337 + t, max_group=max_group)
+        if not groups:
+            continue
+        K = max(len(gr) for gr in groups)
+        for grp in groups:
+            ws = GroupWorkspace(state, grp)
+            k = len(grp)
+            R = ws.CNT.shape[1]
+            onehot = (ws.CNT > 0)[None, :, :]
+            scores = group_jaccard_scores(jnp.asarray(onehot))
+            pairs = np.asarray(greedy_group_matching(scores, min_jaccard, max_merges=k // 2))[0]
+            for r, c in pairs:
+                if r < 0:
+                    break
+                if not (ws.alive[r] and ws.alive[c]):
+                    continue
+                sav = ws.savings(int(r), np.array([int(c)]))
+                if sav[0] >= theta:
+                    ws.merge(int(r), int(c))
+    summary = _emit_encoding(state)
+    if prune_steps:
+        summary = prune(summary, steps=prune_steps)
+    return summary

@@ -1,0 +1,97 @@
+"""Candidate generation via min-hash shingles (Sect. III-B2).
+
+Roots whose (subnode-level) neighborhoods share their minimum hash value land
+in the same candidate set — a 1-permutation min-hash that groups roots within
+graph distance ≤ 2 with high probability (mergers at distance ≥ 3 always
+increase cost, Lemma 1). Oversized groups are re-shingled with fresh seeds up
+to ``max_rehash`` times (paper: 10) and finally split randomly to ≤
+``max_group`` (paper: 500).
+
+The numpy implementation below is the exact engine's; `repro.core.distributed`
+holds the jax/shard_map version and `repro.kernels.minhash` the Pallas kernel.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.graphs.csr import Graph
+
+_P = (1 << 61) - 1  # Mersenne prime for universal hashing
+
+
+def _hash(x: np.ndarray, seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    a = int(rng.integers(1, _P))
+    b = int(rng.integers(0, _P))
+    return (a * x.astype(np.int64) + b) % _P
+
+
+def node_level_min(g: Graph, seed: int) -> np.ndarray:
+    """min(h(u), min_{w ∈ N(u)} h(w)) per subnode — one O(|E|) pass."""
+    h = _hash(np.arange(g.n), seed)
+    nm = h.copy()
+    if g.indices.size:
+        src = np.repeat(np.arange(g.n), np.diff(g.indptr))
+        np.minimum.at(nm, src, h[g.indices])
+    return nm
+
+
+def root_shingles(g: Graph, root_of: np.ndarray, seed: int) -> dict:
+    """shingle(A) = min over leaves u ∈ A of node_level_min(u)."""
+    nm = node_level_min(g, seed)
+    out: dict = {}
+    # segment-min over root ids
+    order = np.argsort(root_of, kind="stable")
+    sorted_roots = root_of[order]
+    sorted_vals = nm[order]
+    boundaries = np.flatnonzero(np.diff(sorted_roots)) + 1
+    starts = np.concatenate([[0], boundaries])
+    ends = np.concatenate([boundaries, [sorted_roots.shape[0]]])
+    mins = np.minimum.reduceat(sorted_vals, starts)
+    for s, e, mn in zip(starts, ends, mins):
+        out[int(sorted_roots[s])] = int(mn)
+    return out
+
+
+def candidate_groups(
+    g: Graph,
+    root_of: np.ndarray,
+    alive_roots: np.ndarray,
+    seed: int,
+    max_group: int = 500,
+    max_rehash: int = 10,
+) -> list:
+    """Partition alive roots into candidate sets of size ≤ max_group."""
+    rng = np.random.default_rng(seed)
+    sh = root_shingles(g, root_of, seed)
+    buckets: dict = {}
+    for r in alive_roots:
+        buckets.setdefault(sh.get(int(r), int(r)), []).append(int(r))
+
+    groups: list = []
+    pending = [grp for grp in buckets.values() if len(grp) > 1]
+    rehash = 0
+    while pending:
+        oversized = [grp for grp in pending if len(grp) > max_group]
+        groups.extend(grp for grp in pending if 1 < len(grp) <= max_group)
+        if not oversized:
+            break
+        rehash += 1
+        if rehash > max_rehash:
+            # random split to max_group
+            for grp in oversized:
+                grp = list(grp)
+                rng.shuffle(grp)
+                for i in range(0, len(grp), max_group):
+                    chunk = grp[i : i + max_group]
+                    if len(chunk) > 1:
+                        groups.append(chunk)
+            break
+        sh2 = root_shingles(g, root_of, seed * 1000003 + rehash)
+        pending = []
+        for grp in oversized:
+            sub: dict = {}
+            for r in grp:
+                sub.setdefault(sh2.get(int(r), int(r)), []).append(r)
+            pending.extend(v for v in sub.values() if len(v) > 1)
+    return groups

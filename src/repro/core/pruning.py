@@ -1,0 +1,210 @@
+"""Pruning step (Sect. III-B4): remove supernodes that do not pay for their
+h-edges, without any information loss.
+
+  Step 1 — splice every non-leaf supernode with no incident p/n-edges
+           (−1 h-edge each; −#children when it is a root).
+  Step 2 — the paper's exactly-one-incident-non-loop-edge rule for roots:
+           push the edge down to the children (guaranteed net reduction ≥ 1).
+  Step 3 — the paper falls back to the *flat* encoding per root pair when
+           cheaper. Our emission DP's per-pair cost is ≤ flat by construction
+           (DESIGN.md §2.1), so the residual opportunity is in |H|: we
+           generalize to a benefit-tested *root flattening* — remove a root,
+           promote its children, re-attach its edges at child granularity —
+           applied whenever it strictly reduces |P⁺|+|P⁻|+|H|.
+
+All steps preserve the decompressed graph exactly (test-enforced).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.summary import Summary
+
+
+class _Work:
+    def __init__(self, s: Summary):
+        self.n = s.n_leaves
+        self.parent = {i: int(p) for i, p in enumerate(s.parent) if p != -2}
+        self.children: dict = {}
+        for i, p in self.parent.items():
+            if p >= 0:
+                self.children.setdefault(p, []).append(i)
+        # signed multiplicity per normalized pair
+        self.edges: dict = {}
+        for X, Y, sg in s.edges:
+            k = (int(min(X, Y)), int(max(X, Y)))
+            self.edges[k] = self.edges.get(k, 0) + int(sg)
+            if self.edges[k] == 0:
+                del self.edges[k]
+        self.incident: dict = {}
+        for (X, Y), c in self.edges.items():
+            self.incident.setdefault(X, set()).add((X, Y))
+            if X != Y:
+                self.incident.setdefault(Y, set()).add((X, Y))
+        self._size: dict = {}
+
+    # ---- helpers ----------------------------------------------------------
+    def size(self, x: int) -> int:
+        if x in self._size:
+            return self._size[x]
+        r = 1 if x < self.n else sum(self.size(c) for c in self.children.get(x, []))
+        self._size[x] = r
+        return r
+
+    def deg(self, x: int) -> int:
+        return len(self.incident.get(x, ()))
+
+    def _add(self, X: int, Y: int, sg: int):
+        k = (min(X, Y), max(X, Y))
+        c = self.edges.get(k, 0) + sg
+        if c == 0:
+            self.edges.pop(k, None)
+            self.incident.get(k[0], set()).discard(k)
+            if k[0] != k[1]:
+                self.incident.get(k[1], set()).discard(k)
+        else:
+            self.edges[k] = c
+            self.incident.setdefault(k[0], set()).add(k)
+            if k[0] != k[1]:
+                self.incident.setdefault(k[1], set()).add(k)
+
+    def _remove_node(self, a: int):
+        """Splice a out of the forest; children attach to a's parent."""
+        p = self.parent[a]
+        for c in self.children.get(a, []):
+            self.parent[c] = p
+            if p >= 0:
+                self.children.setdefault(p, []).append(c)
+        if p >= 0 and a in self.children.get(p, []):
+            self.children[p].remove(a)
+        self.children.pop(a, None)
+        del self.parent[a]
+        self._size.clear()
+
+    # ---- step 1 -----------------------------------------------------------
+    def step1(self) -> int:
+        removed = 0
+        queue = [x for x in list(self.parent) if x >= self.n]
+        while queue:
+            a = queue.pop()
+            if a not in self.parent or a < self.n:
+                continue
+            if self.deg(a) == 0 and self.children.get(a):
+                p = self.parent[a]
+                kids = list(self.children[a])
+                self._remove_node(a)
+                removed += 1
+                if p >= 0:
+                    queue.append(p)
+                queue.extend(k for k in kids if k >= self.n)
+        return removed
+
+    # ---- step 2 (paper Algorithm 3, lines 13-27) --------------------------
+    def step2(self) -> int:
+        removed = 0
+        queue = [x for x, p in list(self.parent.items()) if p == -1 and x >= self.n]
+        while queue:
+            a = queue.pop()
+            if a not in self.parent or self.parent[a] != -1 or not self.children.get(a):
+                continue
+            inc = list(self.incident.get(a, ()))
+            nonloop = [e for e in inc if e[0] != e[1]]
+            if len(inc) != 1 or len(nonloop) != 1 or abs(self.edges[nonloop[0]]) != 1:
+                continue
+            (X, Y) = nonloop[0]
+            b = Y if X == a else X
+            sg = 1 if self.edges[(X, Y)] > 0 else -1
+            kids = list(self.children[a])
+            self._add(X, Y, -self.edges[(X, Y)])
+            for c in kids:
+                self._add(c, b, sg)
+            self._remove_node(a)
+            removed += 1
+            queue.extend(k for k in kids if k >= self.n)
+        return removed
+
+    # ---- step 3 (benefit-tested splice of any non-leaf supernode) ----------
+    def _depth(self, x: int) -> int:
+        d = 0
+        while self.parent.get(x, -1) >= 0:
+            x = self.parent[x]
+            d += 1
+        return d
+
+    def step3(self) -> int:
+        removed = 0
+        nodes = [x for x in list(self.parent) if x >= self.n and self.children.get(x)]
+        # bottom-up: splice deepest first so parents see their final child lists
+        nodes.sort(key=self._depth, reverse=True)
+        queue = list(nodes)
+        while queue:
+            a = queue.pop(0)
+            if a not in self.parent or not self.children.get(a):
+                continue
+            kids = list(self.children[a])
+            big_kids = [c for c in kids if self.size(c) > 1]
+            is_root = self.parent[a] == -1
+            # h-edges saved: every child edge when a is a root (children get no
+            # replacement parent), else just a's own parent edge.
+            delta = -len(kids) if is_root else -1
+            plan: list = []
+            feasible = True
+            for (X, Y) in list(self.incident.get(a, ())):
+                cur = self.edges[(X, Y)]
+                if abs(cur) != 1:
+                    feasible = False
+                    break
+                sg = 1 if cur > 0 else -1
+                delta -= 1  # the removed edge itself
+                if X == Y:  # self-loop: expand to child pairs + child loops
+                    for i in range(len(kids)):
+                        for j in range(i + 1, len(kids)):
+                            plan.append((kids[i], kids[j], sg))
+                    for c in big_kids:
+                        plan.append((c, c, sg))
+                else:
+                    b = Y if X == a else X
+                    for c in kids:
+                        plan.append((c, b, sg))
+            if not feasible:
+                continue
+            for (u, v, sg) in plan:
+                k = (min(u, v), max(u, v))
+                delta += -1 if self.edges.get(k, 0) == -sg else 1
+            if delta <= 0 and (delta < 0 or not is_root):
+                for (X, Y) in list(self.incident.get(a, ())):
+                    self._add(X, Y, -self.edges[(X, Y)])
+                for (u, v, sg) in plan:
+                    self._add(u, v, sg)
+                self._remove_node(a)
+                removed += 1
+        return removed
+
+    # ---- export ------------------------------------------------------------
+    def to_summary(self, total_ids: int) -> Summary:
+        parent = np.full(total_ids, -2, dtype=np.int64)
+        for x, p in self.parent.items():
+            parent[x] = p
+        rows = []
+        for (X, Y), c in self.edges.items():
+            sg = 1 if c > 0 else -1
+            for _ in range(abs(c)):
+                rows.append((X, Y, sg))
+        edges = np.array(rows, dtype=np.int64) if rows else np.zeros((0, 3), dtype=np.int64)
+        return Summary(n_leaves=self.n, parent=parent, edges=edges)
+
+
+def prune(summary: Summary, steps=(1, 2, 3), rounds: int = 3) -> Summary:
+    """Run the selected pruning substeps (repeated until fixpoint, ≤ rounds)."""
+    w = _Work(summary)
+    for _ in range(rounds):
+        changed = 0
+        if 1 in steps:
+            changed += w.step1()
+        if 2 in steps:
+            changed += w.step2()
+        if 3 in steps:
+            changed += w.step3()
+        if not changed:
+            break
+    return w.to_summary(summary.parent.shape[0])

@@ -1,0 +1,162 @@
+"""SLUGGER (Algorithm 1): scalable lossless hierarchical graph summarization.
+
+Pipeline, exactly as the paper's:
+  1. initialize Ḡ = G (singleton supernodes, P⁺ = E)
+  2. T iterations of {candidate generation → in-group greedy merging with the
+     decaying threshold θ(t) = 1/(1+t), θ(T) = 0}
+  3. encoding emission (the paper maintains encodings incrementally with the
+     memoized ≤10-supernode local search; we defer to the exact per-pair DP —
+     see DESIGN.md §2.1: same model, search space a superset of the paper's,
+     so per-pair cost is never worse given the same merge forest)
+  4. pruning (three substeps, Sect. III-B4)
+
+Losslessness is structural: the emission DP re-encodes the *input* edges
+exactly, so any merge forest — however heuristic — yields an exact summary.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+from repro.core import encode_dp
+from repro.core.merging import process_group
+from repro.core.minhash import candidate_groups
+from repro.core.pruning import prune
+from repro.core.summary import Summary
+from repro.graphs.csr import Graph
+
+sys.setrecursionlimit(200_000)
+
+
+class SluggerState:
+    """Merge forest + root-level subedge counts, updated per merger."""
+
+    def __init__(self, g: Graph):
+        n = g.n
+        self.g = g
+        self.root_of = np.arange(n, dtype=np.int64)
+        self.parent: list[int] = [-1] * n
+        self.children: dict = {}
+        self.leaves: dict = {u: [u] for u in range(n)}
+        self.size: list[int] = [1] * n
+        self.height: list[int] = [0] * n
+        self.ndesc: list[int] = [0] * n
+        self.selfcnt: dict = {u: 0 for u in range(n)}
+        self.adj: dict = {u: {int(v): 1 for v in g.neighbors(u)} for u in range(n)}
+        self.alive: set = set(range(n))
+
+    def merge(self, A: int, B: int) -> int:
+        """Merge roots A, B under a fresh parent M; returns M's id."""
+        M = len(self.parent)
+        self.parent.append(-1)
+        self.parent[A] = M
+        self.parent[B] = M
+        self.children[M] = [A, B]
+        la, lb = self.leaves.pop(A), self.leaves.pop(B)
+        lm = la + lb
+        self.leaves[M] = lm
+        self.root_of[np.asarray(lm, dtype=np.int64)] = M
+        self.size.append(self.size[A] + self.size[B])
+        self.height.append(max(self.height[A], self.height[B]) + 1)
+        self.ndesc.append(self.ndesc[A] + self.ndesc[B] + 2)
+        na, nb = self.adj.pop(A), self.adj.pop(B)
+        cab = na.pop(B, 0)
+        nb.pop(A, None)
+        merged = na
+        for c, v in nb.items():
+            merged[c] = merged.get(c, 0) + v
+        for c in merged:
+            d = self.adj[c]
+            d.pop(A, None)
+            d.pop(B, None)
+            d[M] = merged[c]
+        self.adj[M] = merged
+        self.selfcnt[M] = self.selfcnt.pop(A) + self.selfcnt.pop(B) + cab
+        self.alive.discard(A)
+        self.alive.discard(B)
+        self.alive.add(M)
+        return M
+
+
+def _emit_encoding(state: SluggerState) -> Summary:
+    """Exact per-pair hierarchical encoding of the input graph over the
+    current merge forest (plays the paper's 'update of encoding' role)."""
+    g = state.g
+    n = g.n
+    pos_of = np.zeros(n, dtype=np.int64)
+    tvs: dict = {}
+    for r, lv in state.leaves.items():
+        arr = np.asarray(lv, dtype=np.int64)
+        pos_of[arr] = np.arange(arr.shape[0])
+        tvs[r] = encode_dp.TreeView(r, state.children, n)
+
+    el = g.edge_list()
+    edges_out: list = []
+    if el.size:
+        ra = state.root_of[el[:, 0]]
+        rb = state.root_of[el[:, 1]]
+        # normalize: endpoint order follows (min root, max root)
+        swap = ra > rb
+        u = np.where(swap, el[:, 1], el[:, 0])
+        v = np.where(swap, el[:, 0], el[:, 1])
+        ka, kb = np.minimum(ra, rb), np.maximum(ra, rb)
+        order = np.lexsort((kb, ka))
+        u, v, ka, kb = u[order], v[order], ka[order], kb[order]
+        key = ka * (np.max(kb) + 1) + kb
+        bounds = np.concatenate([[0], np.flatnonzero(np.diff(key)) + 1, [key.shape[0]]])
+        for i in range(bounds.shape[0] - 1):
+            s, e = bounds[i], bounds[i + 1]
+            A, B = int(ka[s]), int(kb[s])
+            if A == B:
+                pu, pv = pos_of[u[s:e]], pos_of[v[s:e]]
+                lo, hi = np.minimum(pu, pv), np.maximum(pu, pv)
+                _, ee = encode_dp.encode_self(tvs[A], lo, hi)
+            else:
+                pa, pb = pos_of[u[s:e]], pos_of[v[s:e]]
+                _, ee = encode_dp.encode_pair(tvs[A], tvs[B], pa, pb)
+            edges_out.extend(ee)
+
+    parent = np.array(state.parent, dtype=np.int64)
+    if edges_out:
+        arr = np.array(edges_out, dtype=np.int64)
+        lo = np.minimum(arr[:, 0], arr[:, 1])
+        hi = np.maximum(arr[:, 0], arr[:, 1])
+        arr = np.stack([lo, hi, arr[:, 2]], axis=1)
+    else:
+        arr = np.zeros((0, 3), dtype=np.int64)
+    return Summary(n_leaves=n, parent=parent, edges=arr)
+
+
+def summarize(
+    g: Graph,
+    T: int = 20,
+    seed: int = 0,
+    max_group: int = 500,
+    top_j: int = 16,
+    height_bound=None,
+    prune_steps=(1, 2, 3),
+    verbose: bool = False,
+) -> Summary:
+    """Run SLUGGER end to end. ``prune_steps=()`` skips pruning (paper's
+    'state 0' in Table IV); ``height_bound`` is the Table-V H_b variant."""
+    state = SluggerState(g)
+    rng = np.random.default_rng(seed)
+    for t in range(1, T + 1):
+        theta = 0.0 if t == T else 1.0 / (1 + t)
+        alive = np.fromiter(state.alive, dtype=np.int64)
+        groups = candidate_groups(g, state.root_of, alive, seed=seed * 7919 + t, max_group=max_group)
+        merges = 0
+        t0 = time.time()
+        for grp in groups:
+            merges += process_group(state, grp, theta, rng, top_j=top_j, height_bound=height_bound)
+        if verbose:
+            print(
+                f"[slugger] iter {t:3d}: θ={theta:.3f} groups={len(groups)} "
+                f"merges={merges} roots={len(state.alive)} ({time.time()-t0:.2f}s)"
+            )
+    summary = _emit_encoding(state)
+    if prune_steps:
+        summary = prune(summary, steps=prune_steps)
+    return summary

@@ -1,0 +1,193 @@
+"""The hierarchical graph summarization model  Ḡ = (S, P⁺, P⁻, H).
+
+Supernode ids: ``0..n_leaves-1`` are leaves (subnodes); larger ids are
+internal/root supernodes created by merging. The forest is stored as a parent
+array; ``H`` is implicit: one h-edge per retained supernode with a retained
+parent. An edge (u, v) exists in the decompressed graph iff
+
+    #{p-edges between (ancestors(u) ∪ {u}) × (ancestors(v) ∪ {v})}
+  > #{n-edges …}                                                   (Sect. II-B)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.graphs.csr import Graph
+
+
+@dataclass
+class Summary:
+    n_leaves: int
+    # parent id per supernode (index = supernode id), -1 for roots.
+    # Pruned supernodes have parent == -2 (tombstone) and must carry no edges.
+    parent: np.ndarray
+    # signed supernode edges: (k, 3) int64 rows (X, Y, sign) with sign ∈ {+1,-1};
+    # X <= Y normalized; X == Y is a supernode self-loop.
+    edges: np.ndarray
+
+    _children: dict = field(default=None, repr=False, compare=False)
+    _leaves: dict = field(default=None, repr=False, compare=False)
+    _incidence: dict = field(default=None, repr=False, compare=False)
+
+    # ------------------------------------------------------------------ basic
+    @property
+    def num_pos(self) -> int:
+        return int(np.sum(self.edges[:, 2] > 0)) if self.edges.size else 0
+
+    @property
+    def num_neg(self) -> int:
+        return int(np.sum(self.edges[:, 2] < 0)) if self.edges.size else 0
+
+    @property
+    def num_h(self) -> int:
+        return int(np.sum(self.parent >= 0))
+
+    def cost(self) -> int:
+        """Encoding cost |P⁺| + |P⁻| + |H|   (Eq. 1)."""
+        return self.num_pos + self.num_neg + self.num_h
+
+    def relative_size(self, g: Graph) -> float:
+        """Eq. (10): cost / |E|."""
+        return self.cost() / max(1, g.m)
+
+    def alive(self) -> np.ndarray:
+        return np.where(self.parent > -2)[0]
+
+    def roots(self) -> np.ndarray:
+        return np.where(self.parent == -1)[0]
+
+    # ------------------------------------------------------------- structure
+    def children(self, x: int):
+        if self._children is None:
+            ch: dict = {}
+            for i, p in enumerate(self.parent):
+                if p >= 0:
+                    ch.setdefault(int(p), []).append(i)
+            self._children = ch
+        return self._children.get(int(x), [])
+
+    def leaves(self, x: int) -> np.ndarray:
+        """Subnodes contained in supernode x (DFS order)."""
+        if self._leaves is None:
+            self._leaves = {}
+        cached = self._leaves.get(int(x))
+        if cached is not None:
+            return cached
+        if x < self.n_leaves:
+            out = np.array([x], dtype=np.int64)
+        else:
+            out = (
+                np.concatenate([self.leaves(c) for c in self.children(x)])
+                if self.children(x)
+                else np.zeros(0, dtype=np.int64)
+            )
+        self._leaves[int(x)] = out
+        return out
+
+    def depth_of_leaves(self) -> np.ndarray:
+        """#ancestors per leaf (0 when the leaf is itself a root)."""
+        d = np.zeros(self.n_leaves, dtype=np.int64)
+        for u in range(self.n_leaves):
+            x, depth = u, 0
+            while self.parent[x] >= 0:
+                x = int(self.parent[x])
+                depth += 1
+            d[u] = depth
+        return d
+
+    def tree_heights(self) -> list:
+        """Height of each root's hierarchy tree."""
+        heights = {}
+
+        def h(x):
+            if x in heights:
+                return heights[x]
+            ch = self.children(x)
+            r = 0 if not ch else 1 + max(h(c) for c in ch)
+            heights[x] = r
+            return r
+
+        return [h(int(r)) for r in self.roots()]
+
+    def composition(self) -> dict:
+        return {"pos": self.num_pos, "neg": self.num_neg, "h": self.num_h}
+
+    # ---------------------------------------------------------- decompression
+    def decompress(self) -> Graph:
+        """Exact reconstruction of the input graph (full decompression)."""
+        n = self.n_leaves
+        keys, weights = [], []
+        for X, Y, s in self.edges:
+            lx, ly = self.leaves(int(X)), self.leaves(int(Y))
+            if X == Y:
+                if lx.shape[0] < 2:
+                    continue
+                iu, iv = np.triu_indices(lx.shape[0], k=1)
+                u, v = lx[iu], lx[iv]
+            else:
+                u = np.repeat(lx, ly.shape[0])
+                v = np.tile(ly, lx.shape[0])
+            lo, hi = np.minimum(u, v), np.maximum(u, v)
+            keys.append(lo * n + hi)
+            weights.append(np.full(lo.shape[0], int(s), dtype=np.int64))
+        if not keys:
+            return Graph.from_edges(n, np.zeros((0, 2), dtype=np.int64))
+        keys = np.concatenate(keys)
+        weights = np.concatenate(weights)
+        uniq, inv = np.unique(keys, return_inverse=True)
+        tot = np.bincount(inv, weights=weights.astype(np.float64))
+        sel = uniq[tot > 0]
+        return Graph.from_edges(n, np.stack([sel // n, sel % n], axis=1))
+
+    def _incident(self, x: int):
+        if self._incidence is None:
+            inc: dict = {}
+            for i, (X, Y, s) in enumerate(self.edges):
+                inc.setdefault(int(X), []).append((int(Y), int(s)))
+                if X != Y:
+                    inc.setdefault(int(Y), []).append((int(X), int(s)))
+            self._incidence = inc
+        return self._incidence.get(int(x), [])
+
+    def neighbors(self, v: int) -> np.ndarray:
+        """Partial decompression (Algorithm 4): one node's neighborhood,
+        touching only the edges incident to v's ancestors."""
+        count = np.zeros(self.n_leaves, dtype=np.int64)
+        x = int(v)
+        chain = []
+        while True:
+            chain.append(x)
+            if self.parent[x] < 0:
+                break
+            x = int(self.parent[x])
+        for X in chain:
+            for Y, s in self._incident(X):
+                if Y == X:  # self-loop: applies to pairs within X
+                    count[self.leaves(X)] += s
+                else:
+                    count[self.leaves(Y)] += s
+        count[v] = 0
+        return np.where(count > 0)[0].astype(np.int64)
+
+    # ------------------------------------------------------------- validation
+    def validate_lossless(self, g: Graph) -> bool:
+        return self.decompress() == g
+
+    def stats(self, g: Graph) -> dict:
+        heights = self.tree_heights()
+        return {
+            "cost": self.cost(),
+            "relative_size": self.relative_size(g),
+            **self.composition(),
+            "max_height": int(max(heights)) if heights else 0,
+            "avg_leaf_depth": float(np.mean(self.depth_of_leaves())),
+            "n_supernodes": int(self.alive().shape[0]),
+            "n_roots": int(self.roots().shape[0]),
+        }
+
+    def invalidate_caches(self):
+        self._children = None
+        self._leaves = None
+        self._incidence = None

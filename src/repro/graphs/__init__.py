@@ -1,0 +1,4 @@
+from repro.graphs.csr import Graph
+from repro.graphs import generators, datasets
+
+__all__ = ["Graph", "generators", "datasets"]

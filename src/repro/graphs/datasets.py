@@ -1,0 +1,59 @@
+"""Offline stand-ins for the paper's 16 datasets (Table II).
+
+Every stand-in is a seeded synthetic graph in the same *regime* (domain,
+density, structure) at a size that runs on one CPU core. The mapping is
+recorded so benchmark tables carry the paper's dataset mnemonics.
+"""
+from __future__ import annotations
+
+from repro.graphs import generators as G
+from repro.graphs.csr import Graph
+
+# name -> (paper dataset, domain, builder)
+_REGISTRY = {
+    # Internet topology: hubs and spokes
+    "CA": ("Caida", "Internet", lambda: G.star_of_cliques(400, 12, seed=1)),
+    # Dense social ego-nets: overlapping dense communities
+    "FA": ("Ego-Facebook", "Social", lambda: G.planted_hierarchy((4, 4), 24, (0.004, 0.35, 0.92), seed=2)),
+    # PPI: strong hierarchical module structure (SLUGGER's best dataset)
+    "PR": ("Protein", "PPI", lambda: G.planted_hierarchy((4, 4, 4), 12, (0.001, 0.10, 0.85, 0.99), seed=3)),
+    # Email: heavy-tailed
+    "EM": ("Email-Enron", "Email", lambda: G.barabasi_albert(4000, 5, seed=4)),
+    # Collaboration: caveman cliques
+    "DB": ("DBLP", "Collaboration", lambda: G.caveman(700, 6, rewire=0.08, seed=5)),
+    # Co-purchase: sparse scale-free with communities
+    "AM": ("Amazon0601", "Co-purchase", lambda: G.rmat(12, 5, seed=6)),
+    # Hyperlinks: highly compressible rmat
+    "CN": ("CNR-2000", "Hyperlinks", lambda: G.planted_hierarchy((6, 5, 4), 10, (0.0006, 0.02, 0.9, 1.0), seed=7)),
+    # Social video: sparse heavy-tail (hardest to compress in the paper)
+    "YO": ("Youtube", "Social", lambda: G.barabasi_albert(6000, 3, seed=8)),
+    # Internet: rmat larger
+    "SK": ("Skitter", "Internet", lambda: G.rmat(13, 6, seed=9)),
+    # Hyperlinks dense: nested bipartite + hierarchy (very compressible)
+    "EU": ("EU-05", "Hyperlinks", lambda: G.planted_hierarchy((5, 5, 5), 10, (0.001, 0.05, 0.9, 0.995), seed=10)),
+}
+
+_LARGE = {
+    # Larger stand-ins used by scalability/speed runs when --full is given.
+    "ES": ("Eswiki-13", "Social", lambda: G.rmat(14, 6, seed=11)),
+    "LJ": ("LiveJournal", "Social", lambda: G.barabasi_albert(20000, 6, seed=12)),
+    "HO": ("Hollywood", "Collaboration", lambda: G.caveman(2500, 8, rewire=0.05, seed=13)),
+    "IC": ("IC-04", "Hyperlinks", lambda: G.planted_hierarchy((6, 6, 5), 12, (0.0004, 0.02, 0.85, 0.99), seed=14)),
+    "U2": ("UK-02", "Hyperlinks", lambda: G.rmat(15, 6, seed=15)),
+    "U5": ("UK-05", "Hyperlinks", lambda: G.rmat(16, 6, seed=16)),
+}
+
+
+def names(full: bool = False):
+    return list(_REGISTRY) + (list(_LARGE) if full else [])
+
+
+def info(name: str):
+    reg = {**_REGISTRY, **_LARGE}
+    paper_name, domain, _ = reg[name]
+    return {"paper_dataset": paper_name, "domain": domain}
+
+
+def load(name: str) -> Graph:
+    reg = {**_REGISTRY, **_LARGE}
+    return reg[name][2]()

@@ -1,0 +1,32 @@
+"""Jit'd public wrapper: pack neighbor sets and score candidate groups."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bitset_jaccard import ref
+from repro.kernels.bitset_jaccard.kernel import pairwise_intersection_kernel
+
+
+def pack_bitsets(sets: list, universe: int) -> np.ndarray:
+    """List of index-iterables -> (G, ceil(universe/32)) uint32 bitmaps."""
+    W = (universe + 31) // 32
+    out = np.zeros((len(sets), W), dtype=np.uint32)
+    for i, s in enumerate(sets):
+        idx = np.asarray(list(s), dtype=np.int64)
+        if idx.size:
+            np.bitwise_or.at(out[i], idx >> 5, np.uint32(1) << (idx & 31).astype(np.uint32))
+    return out
+
+
+def group_jaccard(bits, use_kernel: bool = True, interpret: bool = True):
+    """(G, W) uint32 -> (G, G) float32 Jaccard similarity matrix."""
+    bits = jnp.asarray(bits)
+    if use_kernel:
+        inter = pairwise_intersection_kernel(bits, interpret=interpret)
+    else:
+        inter = ref.pairwise_intersection(bits)
+    deg = ref.popcount_u32(bits).sum(axis=-1).astype(jnp.int32)
+    union = deg[:, None] + deg[None, :] - inter
+    return jnp.where(union > 0, inter / jnp.maximum(union, 1), 0.0).astype(jnp.float32)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the bitset-jaccard kernel: pairwise popcount(AND)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def popcount_u32(x):
+    """SWAR popcount on uint32 (TPU has no popcount primitive)."""
+    x = x.astype(jnp.uint32)
+    x = x - ((x >> jnp.uint32(1)) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> jnp.uint32(2)) & jnp.uint32(0x33333333))
+    x = (x + (x >> jnp.uint32(4))) & jnp.uint32(0x0F0F0F0F)
+    return ((x * jnp.uint32(0x01010101)) >> jnp.uint32(24)).astype(jnp.int32)
+
+
+def pairwise_intersection(bits):
+    """bits: (G, W) uint32 packed sets -> (G, G) int32 intersection sizes."""
+    a = bits[:, None, :]
+    b = bits[None, :, :]
+    return popcount_u32(a & b).sum(axis=-1).astype(jnp.int32)
+
+
+def pairwise_jaccard(bits):
+    inter = pairwise_intersection(bits)
+    deg = popcount_u32(bits).sum(axis=-1).astype(jnp.int32)
+    union = deg[:, None] + deg[None, :] - inter
+    return jnp.where(union > 0, inter / jnp.maximum(union, 1), 0.0)

@@ -1,0 +1,29 @@
+"""Jit'd wrapper: layout adaptation between the model's (b, s, hkv, g, hd)
+attention convention and the kernel's (B, H, S, D), plus platform dispatch.
+
+On TPU this is the production attention path (`cfg.attn_impl="pallas_flash"`);
+the CPU dry-run keeps the pure-XLA `chunked_sdpa` twin (identical math and
+blocking, validated against each other in tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attn.kernel import flash_attention_bhsd
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    bq: int = 512, bk: int = 512, interpret: bool = False):
+    """q: (b, sq, hkv, g, hd); k/v: (b, sk, hkv, hd) — chunked_sdpa layout.
+    Returns (b, sq, hkv, g, hd)."""
+    b, sq, hkv, g, hd = q.shape
+    sk = k.shape[1]
+    qh = q.transpose(0, 2, 3, 1, 4).reshape(b, hkv * g, sq, hd)
+    kh = k.transpose(0, 2, 1, 3)
+    vh = v.transpose(0, 2, 1, 3)
+    o = flash_attention_bhsd(qh, kh, vh, causal=causal, window=window,
+                             bq=bq, bk=bk, interpret=interpret)
+    return o.reshape(b, hkv, g, sq, hd).transpose(0, 3, 1, 2, 4)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the flash attention kernel (dense softmax attention)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (B, H, Sq, D); k/v: (B, Hkv, Sk, D). GQA by head repetition."""
+    B, H, Sq, D = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    g = H // Hkv
+    k = jnp.repeat(k, g, axis=1)
+    v = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / (D ** 0.5)
+    if causal:
+        qpos = jnp.arange(Sq)[:, None]
+        kpos = jnp.arange(Sk)[None, :]
+        mask = kpos <= qpos
+        if window:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, -1e30)
+    w = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    if causal:
+        w = jnp.where(mask, w, 0.0)
+    w = w / jnp.maximum(w.sum(axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, v.astype(jnp.float32)).astype(q.dtype)

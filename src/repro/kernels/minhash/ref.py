@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the minhash kernel.
+
+The TPU formulation regularizes the irregular segment-min: adjacency is
+packed into fixed-width rows (``nbr`` (R, W) uint32 with ``SENTINEL`` padding;
+high-degree nodes span several rows, combined by the caller). The kernel
+fuses the affine uint32 hash with the row-min reduction.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+SENTINEL = jnp.uint32(0xFFFFFFFF)
+MAX_HASH = jnp.uint32(0xFFFFFFFF)
+
+
+def hash_u32(x, a: int, b: int):
+    """Affine hash in Z_2^32 (multiplicative mixing; odd ``a``)."""
+    x = x.astype(jnp.uint32)
+    h = x * jnp.uint32(a) + jnp.uint32(b)
+    # one xorshift round to decorrelate low bits
+    h = h ^ (h >> jnp.uint32(16))
+    h = h * jnp.uint32(0x7FEB352D)
+    h = h ^ (h >> jnp.uint32(15))
+    return h
+
+
+def rowmin_hash(nbr, a: int, b: int):
+    """min over valid entries of hash(nbr) per row; MAX_HASH for empty rows.
+
+    nbr: (R, W) uint32 with SENTINEL padding.
+    returns: (R,) uint32
+    """
+    valid = nbr != SENTINEL
+    h = hash_u32(nbr, a, b)
+    h = jnp.where(valid, h, MAX_HASH)
+    return jnp.min(h, axis=1)

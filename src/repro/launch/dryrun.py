@@ -1,0 +1,234 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run (assignment e): lower + compile EVERY
+(architecture × applicable shape) on the 16×16 single-pod mesh and the
+2×16×16 multi-pod mesh, against ShapeDtypeStruct inputs only (no allocation).
+
+Per cell we record: per-device memory, HLO FLOPs/bytes, the collective
+schedule (bytes per category), and the three roofline terms — written as one
+JSON artifact per cell under artifacts/dryrun/ (incremental: existing
+artifacts are skipped unless --force).
+
+Usage:
+  python -m repro.launch.dryrun --all [--mesh single|multi|both]
+  python -m repro.launch.dryrun --arch mamba2-130m --shape train_4k --mesh single
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import SHAPES, applicable_shapes
+from repro.configs.registry import ARCH_NAMES, get_config
+from repro.launch import roofline as RL
+from repro.launch.mesh import dp_axes_of, make_production_mesh
+from repro.models.api import input_specs
+from repro.optim.adamw import AdamWConfig
+from repro.train.train_step import TrainPlan, build_serve_step, build_train_step
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "..", "artifacts", "dryrun")
+
+
+def cell_id(arch, shape, mesh_name, variant=""):
+    v = f"_{variant}" if variant else ""
+    return f"{arch}__{shape}__{mesh_name}{v}"
+
+
+def _lower_compiled(cfg, shape, mesh, dp, microbatch=None, absorbed_mla=False,
+                    moment_dtype="float32"):
+    """Lower+compile one step for (cfg, shape) on mesh; returns compiled."""
+    if shape.kind == "train":
+        plan = TrainPlan(cfg=cfg, mesh=mesh, dp_axes=dp,
+                         opt=AdamWConfig(moment_dtype=moment_dtype), microbatch=microbatch)
+        step, _, _, state_abs = build_train_step(plan, shape)
+        return step.lower(state_abs, input_specs(cfg, shape)).compile()
+    step, _, _, params_abs = build_serve_step(cfg, mesh, dp, shape, absorbed_mla=absorbed_mla)
+    batch_abs = input_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return step.lower(params_abs, batch_abs).compile()
+    return step.lower(params_abs, batch_abs["cache"], batch_abs["token"], batch_abs["pos"]).compile()
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str, out_dir: str,
+             force: bool = False, variant: str = "", microbatch=None,
+             remat=None, absorbed_mla=False, moment_dtype="float32", verbose=True):
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, cell_id(arch, shape_name, mesh_name, variant) + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    cfg = get_config(arch)
+    if remat is not None:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, remat=remat)
+    shape = SHAPES[shape_name]
+    app = applicable_shapes(cfg)[shape_name]
+    if app != "run":
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "status": "skipped", "reason": app}
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        if verbose:
+            print(f"[dryrun] {arch:24s} {shape_name:12s} {mesh_name:6s} SKIP ({app})")
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    dp = dp_axes_of(mesh)
+    chips = mesh.devices.size
+    if microbatch is None and shape.kind == "train" and cfg.train_microbatch:
+        microbatch = cfg.train_microbatch  # per-arch default (fits 16 GiB)
+    t0 = time.time()
+    try:
+        compiled = _lower_compiled(cfg, shape, mesh, dp, microbatch, absorbed_mla, moment_dtype)
+        compile_s = time.time() - t0
+        hlo = compiled.as_text()
+        # RL.from_compiled runs the trip-count-aware HLO analyzer (XLA's own
+        # cost_analysis counts while bodies once — wrong for scanned layers).
+        rl = RL.from_compiled(arch, shape_name, mesh_name, chips, compiled, hlo, cfg, shape, compile_s)
+        mem = compiled.memory_analysis()
+        rec = rl.to_json()
+        try:
+            from repro.launch.memory_model import analytic_hbm
+            rec["analytic_hbm"] = analytic_hbm(cfg, shape, mesh, dp, microbatch)
+        except Exception as e:  # analytic model must never block the dry-run
+            rec["analytic_hbm"] = {"error": repr(e)}
+        rec.update({
+            "status": "ok",
+            "variant": variant,
+            "microbatch": microbatch,
+            "memory_analysis": {
+                "argument_size": mem.argument_size_in_bytes,
+                "output_size": mem.output_size_in_bytes,
+                "temp_size": mem.temp_size_in_bytes,
+                "alias_size": mem.alias_size_in_bytes,
+                "code_size": mem.generated_code_size_in_bytes,
+            },
+        })
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        if verbose:
+            print(
+                f"[dryrun] {arch:24s} {shape_name:12s} {mesh_name:6s} OK "
+                f"hbm/dev={rec['per_device_hbm']/2**30:.2f}GiB "
+                f"t_comp={rec['t_compute']*1e3:.2f}ms t_mem={rec['t_memory']*1e3:.2f}ms "
+                f"t_coll={rec['t_collective']*1e3:.2f}ms bottleneck={rec['bottleneck']} "
+                f"({compile_s:.0f}s compile)"
+            )
+        return rec
+    except Exception as e:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "status": "error",
+               "error": repr(e), "trace": traceback.format_exc()[-3000:]}
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        if verbose:
+            print(f"[dryrun] {arch:24s} {shape_name:12s} {mesh_name:6s} ERROR {e!r}")
+        return rec
+
+
+def run_summarize_cell(mesh_name: str, out_dir: str, force: bool = False,
+                       variant: str = "", sharded_out: bool = False,
+                       hist: str = "sort", verbose=True):
+    """Extra row: the paper's own distributed summarize_step on the mesh.
+
+    ``sharded_out=True`` is the §Perf iteration: keep the per-node shingle
+    table SHARDED across the dp axes (reduce-scatter) instead of replicating
+    it (all-reduce) — the downstream grouping only ever reads each node's
+    shingle once, so replication is pure waste.
+    """
+    import jax.numpy as jnp
+    from repro.core.distributed import summarize_step_fn
+    from repro.launch.hlo_analysis import analyze_hlo
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    path = os.path.join(out_dir, cell_id("slugger-summarize", "edges_1b", mesh_name, variant) + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    dp = dp_axes_of(mesh)
+    chips = mesh.devices.size
+    n_nodes, n_edges = 64_000_000, 1_024_000_000  # UK-05-scale graph (0.8B undirected)
+    step = summarize_step_fn(n_nodes, hist=hist)
+    dspec = P(dp if len(dp) > 1 else dp[0])
+    espec = NamedSharding(mesh, dspec)
+    rspec = NamedSharding(mesh, P(None))
+    out_sh = (NamedSharding(mesh, dspec), NamedSharding(mesh, dspec)) if sharded_out else None
+    t0 = time.time()
+    lowered = jax.jit(step, in_shardings=(espec, espec, rspec, None),
+                      out_shardings=out_sh).lower(
+        jax.ShapeDtypeStruct((n_edges,), jnp.int32),
+        jax.ShapeDtypeStruct((n_edges,), jnp.int32),
+        jax.ShapeDtypeStruct((n_nodes,), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.uint32),
+    )
+    compiled = lowered.compile()
+    res = analyze_hlo(compiled.as_text())
+    mem = compiled.memory_analysis()
+    coll = dict(res["coll"])
+    coll["count"] = res["coll_count"]
+    rec = {
+        "status": "ok", "arch": "slugger-summarize", "shape": "edges_1b", "mesh": mesh_name,
+        "variant": variant, "chips": chips,
+        "hlo_flops": float(res["flops"]) * chips, "hlo_bytes": float(res["bytes"]) * chips,
+        "coll_bytes": float(res["coll_bytes"]) * chips,
+        "coll_breakdown": coll, "compile_s": time.time() - t0,
+        "t_compute": float(res["flops"]) / RL.PEAK_FLOPS,
+        "t_memory": float(res["bytes"]) / RL.HBM_BW,
+        "t_collective": float(res["coll_bytes"]) / (RL.ICI_BW * RL.ICI_LINKS),
+        "per_device_hbm": float(mem.argument_size_in_bytes + mem.output_size_in_bytes + mem.temp_size_in_bytes),
+    }
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    if verbose:
+        print(f"[dryrun] slugger-summarize edges_1b {mesh_name}{' '+variant if variant else ''}: OK "
+              f"t_mem={rec['t_memory']*1e3:.1f}ms t_coll={rec['t_collective']*1e3:.1f}ms "
+              f"({rec['compile_s']:.0f}s)")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=ARTIFACTS)
+    ap.add_argument("--microbatch", type=int, default=None)
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--variant", default="")
+    ap.add_argument("--absorbed-mla", action="store_true")
+    ap.add_argument("--moment-dtype", default="float32")
+    ap.add_argument("--sharded-out", action="store_true")
+    ap.add_argument("--hist", default="sort", choices=["sort", "scatter"])
+    ap.add_argument("--summarize-step", action="store_true")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.summarize_step:
+        for m in meshes:
+            run_summarize_cell(m, args.out, args.force, variant=args.variant,
+                               sharded_out=args.sharded_out, hist=args.hist)
+        return
+    archs = ARCH_NAMES if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if args.shape is None else [args.shape]
+    n_ok = n_skip = n_err = 0
+    for arch in archs:
+        for shape in shapes:
+            for m in meshes:
+                rec = run_cell(arch, shape, m, args.out, force=args.force,
+                               variant=args.variant, microbatch=args.microbatch,
+                               remat=args.remat, absorbed_mla=args.absorbed_mla,
+                               moment_dtype=args.moment_dtype)
+                st = rec.get("status")
+                n_ok += st == "ok"
+                n_skip += st == "skipped"
+                n_err += st == "error"
+    print(f"[dryrun] done: ok={n_ok} skipped={n_skip} errors={n_err}")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

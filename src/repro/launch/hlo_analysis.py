@@ -1,0 +1,414 @@
+"""Trip-count-aware cost analysis over optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE, so any model
+that scans over layers (all of ours — small HLO, fast multi-pod compiles)
+under-reports FLOPs/bytes/collectives by ~the layer count.  This module
+re-derives the three roofline inputs from the optimized HLO text itself:
+
+  * computations are parsed into a call graph (fusion ``calls=``, while
+    ``condition=/body=``, ``to_apply=``),
+  * each ``while`` multiplies its body+cond cost by the trip count recovered
+    from the loop condition (scalar integer constant in the cond computation),
+  * dot/convolution FLOPs are computed exactly from operand/result shapes,
+    elementwise ops contribute numel,
+  * bytes = operand + result bytes at fusion granularity (the optimized HLO is
+    post-fusion, so this matches "HBM traffic" the way XLA's own
+    bytes-accessed does),
+  * collective bytes are summed per category (all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute) with loop multipliers.
+
+Validated against ``cost_analysis()`` on loop-free programs and against
+hand-unrolled scans in tests/test_hlo_analysis.py.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "f8e5m2fnuz": 1, "f8e4m3fnuz": 1, "f8e3m4": 1, "f8e4m3b11fnuz": 1,
+    "token": 0, "opaque": 0,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# "%name = <type> opcode(...), attrs" — opcode is letters/dashes
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*?)\s([a-z][a-z0-9\-]*)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\((.*?)\)\s*->\s*(.*?)\s*{\s*$")
+_PARAM_RE = re.compile(r"%?([\w\.\-]+):\s*((?:\([^)]*\)|[\w\[\],\{\}\/\* ]+))")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_CONST_RE = re.compile(r"[su](?:8|16|32|64)\[\]\s+constant\((\d+)\)")
+
+# opcodes that move no data / cost nothing
+_FREE = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+         "after-all", "partition-id", "replica-id", "iota", "copy-start",
+         "copy-done", "domain", "opt-barrier"}
+# elementwise-ish ops: 1 flop per output element
+_EltWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "exponential", "log", "tanh", "rsqrt", "sqrt", "power",
+    "floor", "ceil", "sign", "compare", "select", "and", "or", "xor", "not",
+    "atan2", "remainder", "clamp", "exponential-minus-one", "log-plus-one",
+    "logistic", "cosine", "sine", "round-nearest-afz", "round-nearest-even",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic", "erf",
+    "cbrt", "tan", "popcnt", "count-leading-zeros", "stochastic-convert",
+}
+
+
+def _shape_elems(shape_str: str):
+    """All (dtype, numel) arrays inside a (possibly tuple) type string."""
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        yield dt, n
+
+
+def shape_bytes(shape_str: str) -> int:
+    return sum(n * _DTYPE_BYTES[dt] for dt, n in _shape_elems(shape_str))
+
+
+def shape_numel(shape_str: str) -> int:
+    return sum(n for _, n in _shape_elems(shape_str))
+
+
+def _first_dims(shape_str: str):
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class Op:
+    name: str
+    result_type: str
+    opcode: str
+    rest: str              # everything after the '(' — operands + attrs
+
+
+@dataclass
+class Computation:
+    name: str
+    params: dict = field(default_factory=dict)   # name -> type string
+    ops: list = field(default_factory=list)
+    text: str = ""
+
+    def shape_of(self, operand: str, table: dict) -> str:
+        if operand in table:
+            return table[operand]
+        return self.params.get(operand, "")
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: dict = field(default_factory=lambda: {c: 0.0 for c in COLLECTIVES})
+    coll_count: dict = field(default_factory=lambda: {c: 0 for c in COLLECTIVES})
+
+    def __iadd__(self, o: "Cost"):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        for c in COLLECTIVES:
+            self.coll[c] += o.coll[c]
+            self.coll_count[c] += o.coll_count[c]
+        return self
+
+    def scaled(self, k: float) -> "Cost":
+        out = Cost(self.flops * k, self.bytes * k)
+        for c in COLLECTIVES:
+            out.coll[c] = self.coll[c] * k
+            out.coll_count[c] = int(self.coll_count[c] * k)
+        return out
+
+
+def parse_computations(hlo_text: str) -> dict:
+    comps: dict[str, Computation] = {}
+    cur = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_RE.match(line.strip())
+            if m and ("->" in line):
+                cur = Computation(name=m.group(1))
+                for pm in _PARAM_RE.finditer(m.group(2)):
+                    cur.params[pm.group(1)] = pm.group(2)
+                continue
+        else:
+            s = line.strip()
+            if s == "}" or s.startswith("}"):
+                comps[cur.name] = cur
+                cur = None
+                continue
+            om = _OP_RE.match(s)
+            if om:
+                cur.ops.append(Op(om.group(1), om.group(2), om.group(3), om.group(4)))
+            cur.text += s + "\n"
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps
+
+
+def _attr_ref(rest: str, attr: str):
+    m = re.search(attr + r"=%?([\w\.\-]+)", rest)
+    return m.group(1) if m else None
+
+
+def _dims_attr(rest: str, attr: str):
+    m = re.search(attr + r"=\{([\d,]*)\}", rest)
+    if not m:
+        return []
+    return [int(d) for d in m.group(1).split(",") if d]
+
+
+def trip_count(cond: Computation) -> int:
+    """Largest scalar integer constant in the loop condition. JAX scans and
+    fori_loops lower to `i < N` with N literal in the cond computation; when
+    nothing is found the loop is dynamic and we conservatively use 1."""
+    consts = [int(v) for v in _CONST_RE.findall(cond.text)]
+    # also catch constants declared in the caller and passed in — present in
+    # the cond body for all jax.lax.scan/fori_loop lowerings we emit
+    return max(consts) if consts else 1
+
+
+class Analyzer:
+    def __init__(self, hlo_text: str):
+        self.comps = parse_computations(hlo_text)
+        self._memo: dict[str, Cost] = {}
+        self.while_loops: list = []
+        # entry = computation whose name appears after ENTRY, else the one
+        # that is not referenced by anyone (fallback: last parsed)
+        m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", hlo_text, re.M)
+        self.entry = m.group(1) if m and m.group(1) in self.comps else None
+        if self.entry is None:
+            referenced = set()
+            for c in self.comps.values():
+                for o in c.ops:
+                    for a in ("calls", "condition", "body", "to_apply"):
+                        r = _attr_ref(o.rest, a)
+                        if r:
+                            referenced.add(r)
+            roots = [n for n in self.comps if n not in referenced]
+            self.entry = roots[-1] if roots else list(self.comps)[-1]
+
+    # -------------------------------------------------------------- FLOPs
+    def _dot_flops(self, comp: Computation, op: Op, table: dict) -> float:
+        out_elems = shape_numel(op.result_type)
+        operands = _OPERAND_RE.findall(op.rest.split(", lhs_")[0])
+        lhs_shape = comp.shape_of(operands[0], table) if operands else ""
+        lhs_dims = _first_dims(lhs_shape)
+        contract = _dims_attr(op.rest, "lhs_contracting_dims")
+        k = 1
+        for d in contract:
+            if d < len(lhs_dims):
+                k *= lhs_dims[d]
+        return 2.0 * out_elems * max(k, 1)
+
+    def _conv_flops(self, comp: Computation, op: Op, table: dict) -> float:
+        out_elems = shape_numel(op.result_type)
+        operands = _OPERAND_RE.findall(op.rest.split("), ")[0] + ")")
+        if len(operands) < 2:
+            return 2.0 * out_elems
+        kshape = _first_dims(comp.shape_of(operands[1], table))
+        kelems = 1
+        for d in kshape:
+            kelems *= d
+        # dim_labels like b01f_01io->b01f : output-feature dim 'o' in kernel
+        m = re.search(r"dim_labels=\w+_(\w+)->", op.rest)
+        out_feat = 1
+        if m and kshape:
+            lbl = m.group(1)
+            oi = lbl.find("o")
+            if 0 <= oi < len(kshape):
+                out_feat = kshape[oi]
+        groups = 1
+        g = re.search(r"feature_group_count=(\d+)", op.rest)
+        if g:
+            groups = int(g.group(1))
+        return 2.0 * out_elems * kelems / max(out_feat, 1) / max(groups, 1)
+
+    # ------------------------------------------------------- slice analysis
+    def _param_index(self, comp: Computation, opname: str):
+        """Resolve an operand name through bitcast/convert/copy chains to a
+        fusion parameter index, or None."""
+        defs = {o.name: o for o in comp.ops}
+        seen = 0
+        while opname in defs and seen < 20:
+            o = defs[opname]
+            if o.opcode == "parameter":
+                m = re.match(r"(\d+)", o.rest)  # "12), ..." -> 12
+                if m:
+                    return int(m.group(1))
+                break
+            if o.opcode in ("bitcast", "convert", "copy"):
+                ops = _OPERAND_RE.findall(o.rest)
+                if not ops:
+                    return None
+                opname = ops[0]
+                seen += 1
+            else:
+                return None
+        m = re.match(r"param_(\d+)", opname)
+        return int(m.group(1)) if m else None
+
+    def _fusion_slice_adjust(self, comp: Computation, table: dict):
+        """For a fused computation: which fusion operands are only read
+        through dynamic-slice (charge slice bytes), and whether the root is a
+        dynamic-update-slice (charge update bytes for the in-place result).
+
+        Returns (sliced: {param_idx: slice_bytes}, dus_update_bytes|None).
+        """
+        sliced = {}
+        dus_bytes = None
+        for o in comp.ops:
+            if o.opcode == "dynamic-slice":
+                ops = _OPERAND_RE.findall(o.rest)
+                pi = self._param_index(comp, ops[0]) if ops else None
+                if pi is not None:
+                    sliced[pi] = sliced.get(pi, 0) + shape_bytes(o.result_type)
+            elif o.opcode == "dynamic-update-slice":
+                ops = _OPERAND_RE.findall(o.rest)
+                if len(ops) >= 2:
+                    upd = comp.shape_of(ops[1], {x.name: x.result_type for x in comp.ops})
+                    ub = shape_bytes(upd)
+                    pi = self._param_index(comp, ops[0])
+                    if pi is not None:
+                        sliced[pi] = sliced.get(pi, 0) + ub
+                    dus_bytes = (dus_bytes or 0) + ub
+        return sliced, dus_bytes
+
+    # ---------------------------------------------------------------- cost
+    def cost_of(self, name: str) -> Cost:
+        if name in self._memo:
+            return self._memo[name]
+        comp = self.comps.get(name)
+        total = Cost()
+        if comp is None:
+            self._memo[name] = total
+            return total
+        self._memo[name] = total  # break cycles defensively
+        table = {o.name: o.result_type for o in comp.ops}
+        for op in comp.ops:
+            oc = op.opcode
+            if oc in _FREE:
+                continue
+            if oc == "while":
+                body = _attr_ref(op.rest, "body")
+                cond = _attr_ref(op.rest, "condition")
+                trips = trip_count(self.comps[cond]) if cond in self.comps else 1
+                inner = Cost()
+                inner += self.cost_of(body)
+                inner += self.cost_of(cond)
+                self.while_loops.append({"name": op.name, "body": body, "trips": trips})
+                total += inner.scaled(trips)
+                continue
+            if oc == "conditional":
+                # count the most expensive branch
+                branches = re.findall(r"(?:branch_computations=\{([^}]*)\}|true_computation=%?([\w\.\-]+), false_computation=%?([\w\.\-]+))", op.rest)
+                names = []
+                for b in branches:
+                    for part in b:
+                        if part:
+                            names += [p.strip().lstrip("%") for p in part.split(",")]
+                if names:
+                    best = max((self.cost_of(n) for n in names), key=lambda c: c.flops + c.bytes)
+                    total += best
+                continue
+            # collectives -------------------------------------------------
+            cat = next((c for c in COLLECTIVES if oc.startswith(c)), None)
+            if cat is not None and not oc.endswith("-done"):
+                # traffic ≈ operand bytes (the shard each device contributes)
+                opers = _OPERAND_RE.findall(op.rest.split(")")[0])
+                b = sum(shape_bytes(comp.shape_of(o, table)) for o in opers)
+                if b == 0:
+                    b = shape_bytes(op.result_type)
+                total.coll[cat] += b
+                total.coll_count[cat] += 1
+                total.bytes += b + shape_bytes(op.result_type)
+                continue
+            if oc.endswith("-done"):
+                continue
+            # flops -------------------------------------------------------
+            if oc == "dot":
+                total.flops += self._dot_flops(comp, op, table)
+            elif oc == "convolution":
+                total.flops += self._conv_flops(comp, op, table)
+            elif oc in _EltWISE:
+                total.flops += shape_numel(op.result_type)
+            elif oc in ("reduce", "reduce-window"):
+                opers = _OPERAND_RE.findall(op.rest.split(")")[0])
+                if opers:
+                    total.flops += shape_numel(comp.shape_of(opers[0], table))
+            # descend for called computations (fusions carry their flops;
+            # bytes stay at the fusion boundary — internal values never touch
+            # HBM, so only `call`/`map` bodies contribute their own bytes)
+            callee = _attr_ref(op.rest, "calls") or (
+                _attr_ref(op.rest, "to_apply") if oc in ("call", "map") else None)
+            if callee:
+                sub = self.cost_of(callee)
+                total.flops += sub.flops
+                for c in COLLECTIVES:
+                    total.coll[c] += sub.coll[c]
+                    total.coll_count[c] += sub.coll_count[c]
+                if oc != "fusion":
+                    total.bytes += sub.bytes
+            # bytes -------------------------------------------------------
+            # charged at fusion/op boundary; slicing ops touch only the slice
+            # (matching XLA's HloCostAnalysis semantics for DS/DUS/gather)
+            head = op.rest.split(", calls=")[0].split(", to_apply=")[0]
+            opers = _OPERAND_RE.findall(head.split("), ")[0])
+            res_bytes = shape_bytes(op.result_type)
+            if oc == "dynamic-slice":
+                total.bytes += 2 * res_bytes
+            elif oc == "dynamic-update-slice":
+                upd = shape_bytes(comp.shape_of(opers[1], table)) if len(opers) > 1 else res_bytes
+                total.bytes += 2 * upd
+            elif oc == "gather":
+                total.bytes += 2 * res_bytes
+            elif oc == "scatter":
+                upd = shape_bytes(comp.shape_of(opers[2], table)) if len(opers) > 2 else res_bytes
+                total.bytes += 2 * upd
+            elif oc == "fusion" and callee and callee in self.comps:
+                fcomp = self.comps[callee]
+                f_table = {o.name: o.result_type for o in fcomp.ops}
+                sliced, dus_bytes = self._fusion_slice_adjust(fcomp, f_table)
+                b_in = 0
+                for i, o in enumerate(opers):
+                    b_in += sliced[i] if i in sliced else shape_bytes(comp.shape_of(o, table))
+                total.bytes += b_in + (dus_bytes if dus_bytes is not None else res_bytes)
+            else:
+                b_in = sum(shape_bytes(comp.shape_of(o, table)) for o in opers)
+                total.bytes += b_in + res_bytes
+        self._memo[name] = total
+        return total
+
+    def analyze(self) -> dict:
+        c = self.cost_of(self.entry)
+        coll_total = sum(c.coll.values())
+        return {
+            "flops": c.flops,
+            "bytes": c.bytes,
+            "coll_bytes": coll_total,
+            "coll": dict(c.coll),
+            "coll_count": dict(c.coll_count),
+            "while_loops": self.while_loops,
+        }
+
+
+def analyze_hlo(hlo_text: str) -> dict:
+    """Per-device flops / bytes / collective bytes of an optimized HLO module,
+    with while-loop bodies multiplied by their trip counts."""
+    return Analyzer(hlo_text).analyze()

@@ -1,0 +1,99 @@
+"""Analytic per-device HBM model for every (arch × shape × mesh) cell.
+
+Why this exists: the dry-run compiles for the CPU backend, whose
+float-normalization pass promotes bf16 dots / collectives / in-place updates
+to f32 (visible as `convert` + `_promoted` ops in the optimized HLO). The
+CPU buffer arena therefore OVERSTATES what the identical program needs on a
+TPU, where bf16 is native. We report both numbers per cell:
+
+  * ``measured``  — XLA:CPU ``compiled.memory_analysis()`` (upper bound),
+  * ``analytic``  — this model (what the TPU lowering needs):
+      params(shard) + optimizer moments(shard) + gradients(shard, f32)
+      + remat-saved layer-boundary activations (bf16)
+      + peak single-layer recompute working set
+      + CE-chunk logits (f32) / KV-cache shards for serving.
+
+Shard factors come from the SAME PartitionSpec trees used by the real step
+(so a sharding bug shows up as an analytic-vs-expected mismatch in tests).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import sharding as SH
+from repro.models.api import abstract_params, get_api, input_specs
+
+
+def _shard_factor(spec, shape, mesh) -> int:
+    f = 1
+    for dim, ax in zip(shape, tuple(spec) + (None,) * (len(shape) - len(tuple(spec)))):
+        if ax is None:
+            continue
+        names = ax if isinstance(ax, tuple) else (ax,)
+        k = int(np.prod([mesh.shape[n] for n in names]))
+        if dim % k == 0:
+            f *= k
+    return f
+
+
+def _tree_bytes(tree, specs, mesh, dtype_bytes=None) -> float:
+    flat, treedef = jax.tree.flatten(tree)
+    flat_s = treedef.flatten_up_to(specs)
+    total = 0.0
+    for leaf, spec in zip(flat, flat_s):
+        nbytes = int(np.prod(leaf.shape)) * (dtype_bytes or leaf.dtype.itemsize)
+        total += nbytes / _shard_factor(spec, leaf.shape, mesh)
+    return total
+
+
+def analytic_hbm(cfg: ModelConfig, shape: ShapeConfig, mesh, dp_axes,
+                 microbatch=None, opt_bytes_per_param: int = 8) -> dict:
+    """Returns a per-device byte breakdown dict (floats)."""
+    params_abs = abstract_params(cfg)
+    pspecs = SH.param_pspecs(cfg, params_abs, mesh, dp_axes)
+    p_bytes = _tree_bytes(params_abs, pspecs, mesh)
+    dp_total = int(np.prod([mesh.shape[a] for a in dp_axes]))
+    out = {"params": p_bytes}
+    d, S = cfg.d_model, shape.seq_len
+    dt = 2  # bf16 activations
+
+    if shape.kind == "train":
+        # optimizer moments: ZeRO-1 sharded over the free dp axes
+        flat_p, treedef = jax.tree.flatten(params_abs)
+        flat_spec = treedef.flatten_up_to(pspecs)
+        out["opt_moments"] = sum(
+            int(np.prod(l.shape)) * opt_bytes_per_param / _shard_factor(
+                SH.zero1_spec(s, l.shape, mesh, dp_axes), l.shape, mesh)
+            for l, s in zip(flat_p, flat_spec))
+        # gradients accumulate in f32 with the param sharding
+        out["grads_f32"] = _tree_bytes(params_abs, pspecs, mesh, dtype_bytes=4)
+        mb = microbatch or cfg.train_microbatch or shape.global_batch
+        b_local = max(1, mb // dp_total)
+        units = cfg.n_layers + cfg.encoder_layers
+        if cfg.attn_every:
+            units = cfg.n_layers + (cfg.n_layers + cfg.attn_every - 1) // cfg.attn_every
+        # remat=full saves one (b_local, S, d) residual per layer unit
+        out["saved_residuals"] = float(units * b_local * S * d * dt)
+        # live recompute: one layer's working set ≈ qkv+ffn intermediates
+        ff = cfg.d_ff or (cfg.ssm.expand * d if cfg.ssm else d)
+        if cfg.moe:
+            ff = cfg.moe.top_k * cfg.moe.d_expert * cfg.moe.capacity_factor
+        out["recompute_peak"] = float(b_local * S * (4 * d + 2 * ff) * 4)
+        # chunked-CE logits: one (B, C, V/model) f32 chunk (+1 in flight)
+        C = max(1, min(S, 32_768 // max(shape.global_batch, 1)))
+        model_k = mesh.shape.get("model", 1)
+        out["ce_chunk"] = float(2 * b_local * C * (cfg.padded_vocab // model_k) * 4)
+    else:
+        api = get_api(cfg)
+        cache_abs = jax.eval_shape(lambda: api.init_cache(cfg, shape.global_batch, S))
+        cspecs = SH.cache_pspecs(cfg, cache_abs, mesh, dp_axes, shape.global_batch)
+        out["kv_cache"] = _tree_bytes(cache_abs, cspecs, mesh)
+        if shape.kind == "prefill":
+            b_local = max(1, shape.global_batch // dp_total)
+            out["live_activations"] = float(8 * b_local * S * d * dt)
+        else:
+            out["kv_cache"] *= 2  # in+out copies unless donation aliases
+    out["total"] = float(sum(out.values()))
+    return out

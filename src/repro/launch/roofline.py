@@ -1,0 +1,181 @@
+"""Roofline analysis from AOT-compiled artifacts (no hardware execution).
+
+Terms per (arch × shape × mesh) — TPU v5e constants:
+    compute    = HLO_FLOPs   / (chips × 197e12 FLOP/s)      [bf16]
+    memory     = HLO_bytes   / (chips × 819e9  B/s HBM)
+    collective = Σ per-category collective bytes / (chips × 50e9 B/s × links)
+
+Collective bytes are parsed from the optimized HLO text: shaped operands of
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) exposes remat/dispatch
+overhead as the ratio MODEL_FLOPS / HLO_FLOPs.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+PEAK_FLOPS = 197e12         # bf16 / chip
+HBM_BW = 819e9              # B/s / chip
+ICI_BW = 50e9               # B/s / link (≈ per direction)
+ICI_LINKS = 4               # 2D torus: 4 links/chip
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[128,1024]{1,0}' -> byte size. Tuples handled by caller."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-category output-shape bytes of every collective op in the HLO."""
+    out = {c: 0 for c in _COLLECTIVES}
+    out["count"] = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # ops look like:  %x = bf16[...]{...} all-gather(...), replica_groups=...
+        m = re.match(r"%?[\w\.\-]+ = (\(?[^=]*?)\s*(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)", s)
+        if not m:
+            continue
+        cat = m.group(2)
+        # skip -start/-done duplicates (count the -start only when present)
+        if cat + "-done" in s:
+            continue
+        nbytes = _shape_bytes(m.group(1))
+        out[cat] += nbytes
+        out["count"][cat] += 1
+    return out
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    coll_breakdown: dict
+    model_flops: float
+    per_device_hbm: float
+    compile_s: float = 0.0
+    model_bytes: float = 0.0   # decode ideal: params + cache read once
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / (self.chips * ICI_BW * ICI_LINKS)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory, "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops / max(self.hlo_flops, 1.0)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """How close the step is to its roofline: ideal step time over the
+        achievable step time (max of terms). Ideal = MODEL_FLOPS at peak
+        compute, or for decode shapes the params+cache-once memory floor —
+        whichever bound is higher (the binding one)."""
+        ideal = max(self.model_flops / (self.chips * PEAK_FLOPS),
+                    self.model_bytes / (self.chips * HBM_BW))
+        ach = max(self.t_compute, self.t_memory, self.t_collective)
+        return ideal / max(ach, 1e-12)
+
+    def to_json(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh, "chips": self.chips,
+            "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
+            "coll_bytes": self.coll_bytes, "coll_breakdown": self.coll_breakdown,
+            "model_flops": self.model_flops, "per_device_hbm": self.per_device_hbm,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective, "bottleneck": self.bottleneck,
+            "useful_ratio": self.useful_ratio, "roofline_fraction": self.roofline_fraction,
+            "compile_s": self.compile_s, "model_bytes": self.model_bytes,
+        }
+
+
+def model_flops_for(cfg, shape) -> float:
+    """6·N·D for training; 2·N·D per generated/processed token for serving."""
+    n = cfg.param_count(active_only=cfg.moe is not None)
+    if shape.kind == "train":
+        toks = shape.global_batch * shape.seq_len
+        return 6.0 * n * toks
+    if shape.kind == "prefill":
+        toks = shape.global_batch * shape.seq_len
+        return 2.0 * n * toks
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def ideal_decode_bytes(cfg, shape) -> float:
+    """Decode is memory-bound by construction: the floor for one step is
+    reading every (bf16) weight once plus the whole KV/state cache once.
+    Used as the decode-shape roofline ideal (the 2·N·B FLOPs ideal is ~0)."""
+    import jax
+    from repro.models.api import get_api
+
+    n = cfg.param_count(active_only=False)  # all experts resident
+    api = get_api(cfg)
+    cache = jax.eval_shape(lambda: api.init_cache(cfg, shape.global_batch, shape.seq_len))
+    cache_bytes = sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(cache))
+    return 2.0 * n + float(cache_bytes)
+
+
+def from_compiled(arch, shape_name, mesh_name, chips, compiled, hlo_text, cfg, shape, compile_s=0.0):
+    # Under GSPMD, the optimized HLO describes the PER-DEVICE partitioned
+    # program. We run our trip-count-aware analyzer over it (XLA's own
+    # cost_analysis counts while bodies once — useless for scanned layers) and
+    # record GLOBAL quantities (× chips) so the roofline formulas divide back.
+    from repro.launch.hlo_analysis import analyze_hlo
+
+    res = analyze_hlo(hlo_text)
+    mem = compiled.memory_analysis()
+    coll = {c: res["coll"][c] for c in res["coll"]}
+    coll["count"] = res["coll_count"]
+    per_dev = (
+        mem.argument_size_in_bytes + mem.output_size_in_bytes + mem.temp_size_in_bytes
+        - mem.alias_size_in_bytes
+    )
+    return Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        hlo_flops=float(res["flops"]) * chips,
+        hlo_bytes=float(res["bytes"]) * chips,
+        coll_bytes=float(res["coll_bytes"]) * chips,
+        coll_breakdown=coll,
+        model_flops=model_flops_for(cfg, shape),
+        per_device_hbm=float(per_dev),
+        compile_s=compile_s,
+        model_bytes=ideal_decode_bytes(cfg, shape) if shape.kind == "decode" else 0.0,
+    )

@@ -1,0 +1,141 @@
+"""Uniform model API: family dispatch + abstract input specs for every
+(architecture × shape) cell.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every step
+input (the dry-run lowers against these; nothing is allocated).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, transformer
+
+
+@dataclass(frozen=True)
+class ModelAPI:
+    init_params: Callable
+    forward: Callable        # (params, cfg, batch) -> (logits, aux)
+    hidden: Callable         # (params, cfg, batch) -> (pre-norm hidden, aux)
+    prefill: Callable
+    decode_step: Callable
+    init_cache: Callable
+
+
+def get_api(cfg: ModelConfig) -> ModelAPI:
+    if cfg.encoder_layers:
+        return ModelAPI(
+            init_params=encdec.init_params,
+            forward=lambda p, c, batch: encdec.forward(p, c, batch["frames"], batch["tokens"])[:2],
+            hidden=lambda p, c, batch: encdec.forward(
+                p, c, batch["frames"], batch["tokens"], return_hidden=True)[:2],
+            prefill=lambda p, c, batch, cache_len=None: encdec.prefill(p, c, batch["frames"], batch["tokens"], cache_len),
+            decode_step=encdec.decode_step,
+            init_cache=lambda c, b, s: encdec.init_cache(c, b, s, s),
+        )
+    return ModelAPI(
+        init_params=transformer.init_params,
+        forward=lambda p, c, batch: transformer.forward(p, c, batch["tokens"], embeds=batch.get("embeds"))[:2],
+        hidden=lambda p, c, batch: transformer.forward(
+            p, c, batch["tokens"], embeds=batch.get("embeds"), return_hidden=True)[:2],
+        prefill=lambda p, c, batch, cache_len=None: transformer.prefill(
+            p, c, batch["tokens"], embeds=batch.get("embeds"), cache_len=cache_len),
+        decode_step=transformer.decode_step,
+        init_cache=transformer.init_cache,
+    )
+
+
+def abstract_params(cfg: ModelConfig):
+    """Parameter ShapeDtypeStructs without allocation."""
+    api = get_api(cfg)
+    return jax.eval_shape(lambda k: api.init_params(cfg, k), jax.random.key(0))
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Abstract step inputs for one (arch × shape) cell.
+
+    train:   tokens (B, S+1) — model sees [:, :-1], labels [:, 1:]
+    prefill: tokens (B, S)
+    decode:  token (B, 1) + cache with S filled slots + pos scalar
+    Modality stubs: vlm patch embeds (B, n_patches, d) are part of S;
+    encdec frames (B, S, d) feed the encoder.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    if shape.kind == "train":
+        if cfg.encoder_layers:
+            return {"frames": _sds((B, S, cfg.d_model), dt), "tokens": _sds((B, S + 1), jnp.int32)}
+        if cfg.n_patches:
+            s_text = S - cfg.n_patches
+            return {"embeds": _sds((B, cfg.n_patches, cfg.d_model), dt),
+                    "tokens": _sds((B, s_text + 1), jnp.int32)}
+        return {"tokens": _sds((B, S + 1), jnp.int32)}
+    if shape.kind == "prefill":
+        if cfg.encoder_layers:
+            return {"frames": _sds((B, S, cfg.d_model), dt), "tokens": _sds((B, S), jnp.int32)}
+        if cfg.n_patches:
+            return {"embeds": _sds((B, cfg.n_patches, cfg.d_model), dt),
+                    "tokens": _sds((B, S - cfg.n_patches), jnp.int32)}
+        return {"tokens": _sds((B, S), jnp.int32)}
+    # decode: one new token over a cache of S entries
+    api = get_api(cfg)
+    cache = jax.eval_shape(lambda: api.init_cache(cfg, B, S))
+    return {"cache": cache, "token": _sds((B, 1), jnp.int32), "pos": _sds((), jnp.int32)}
+
+
+def lm_loss(params, cfg: ModelConfig, batch, aux_weight: float = 0.01,
+            ce_chunk_tokens: int = 32_768):
+    """Next-token cross-entropy with a CHUNKED vocab projection.
+
+    The (B, S, V) f32 logits tensor is the single largest training activation
+    (151k vocab × 4k seq ≈ 27 GiB/device at our shapes), so we keep the
+    backbone output (B, S, d) and scan over sequence chunks: each step
+    projects one (B, C, d) slice to logits, evaluates the NLL, and is wrapped
+    in jax.checkpoint so the backward pass re-projects per chunk instead of
+    saving any logits. MoE aux loss folds in unchanged."""
+    api = get_api(cfg)
+    tokens = batch["tokens"]
+    inputs = dict(batch)
+    inputs["tokens"] = tokens[:, :-1]
+    x, aux = api.hidden(params, cfg, inputs)
+    # vlm: hidden covers [patches + text]; score text positions only
+    if cfg.n_patches and not cfg.encoder_layers:
+        x = x[:, cfg.n_patches:, :]
+    labels = tokens[:, 1:]
+    B, S = labels.shape
+    from repro.models.sharding import constrain
+    from repro.models.transformer import _logits
+
+    C = max(1, min(S, ce_chunk_tokens // max(B, 1)))
+    while S % C:
+        C -= 1
+    nC = S // C
+    pad_mask = (jnp.arange(cfg.padded_vocab) < cfg.vocab) if cfg.padded_vocab != cfg.vocab else None
+
+    @jax.checkpoint
+    def chunk_nll(x_c, y_c):
+        logits = _logits(params, cfg, x_c).astype(jnp.float32)
+        logits = constrain(logits, ("dp", None, "model"))
+        if pad_mask is not None:
+            logits = jnp.where(pad_mask, logits, -1e30)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y_c[..., None], axis=-1)[..., 0]
+        return (logz - gold).sum()
+
+    if nC == 1:
+        total = chunk_nll(x, labels)
+    else:
+        xc = jnp.moveaxis(x.reshape(B, nC, C, x.shape[-1]), 1, 0)
+        yc = jnp.moveaxis(labels.reshape(B, nC, C), 1, 0)
+        total, _ = jax.lax.scan(
+            lambda acc, args: (acc + chunk_nll(*args), None), 0.0, (xc, yc))
+    loss = total / (B * S)
+    return loss + aux_weight * aux

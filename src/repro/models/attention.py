@@ -1,0 +1,319 @@
+"""Attention variants: GQA (optionally sliding-window, optionally biased),
+MLA (DeepSeek-V2 latent attention), cross-attention — each with a full-
+sequence path (train/prefill) and a single-token decode path over a cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig, ModelConfig
+from repro.models.layers import apply_rope, init_linear
+
+
+# --------------------------------------------------------------------- GQA
+def init_gqa(key, cfg: ModelConfig, dtype):
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": init_linear(ks[0], d, hq * hd, dtype),
+        "wk": init_linear(ks[1], d, hkv * hd, dtype),
+        "wv": init_linear(ks[2], d, hkv * hd, dtype),
+        "wo": init_linear(ks[3], hq * hd, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * hd,), dtype)
+        p["bk"] = jnp.zeros((hkv * hd,), dtype)
+        p["bv"] = jnp.zeros((hkv * hd,), dtype)
+    return p
+
+
+def _sdpa(q, k, v, mask):
+    """q: (b,sq,hkv,g,hd); k/v: (b,sk,hkv,hd); mask: (b|1, sq, sk)."""
+    scale = 1.0 / jnp.sqrt(q.shape[-1])
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", q, k).astype(jnp.float32) * scale
+    scores = jnp.where(mask[:, None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v)
+    return out
+
+
+def _causal_mask(sq, sk, q_offset, window):
+    pos_q = q_offset + jnp.arange(sq)[:, None]
+    pos_k = jnp.arange(sk)[None, :]
+    m = pos_k <= pos_q
+    if window:
+        m &= pos_k > pos_q - window
+    return m[None]  # (1, sq, sk)
+
+
+def chunked_sdpa(q, k, v, *, causal: bool, window: int = 0, chunk: int = 1024):
+    """Flash-style blocked attention in pure XLA (the TPU Pallas kernel's
+    portable twin): Python loop over q chunks × ``lax.scan`` over exactly the
+    kv chunks each q chunk can see (causal/SWA block pruning is STATIC), with
+    an online-softmax (m, l, acc) carry.  Peak temp is one
+    (b, chunk, heads, chunk) score block instead of the full (b, h, S, S)
+    score matrix — this is what lets 32k×32k prefill fit a 16 GiB chip.
+
+    q: (b, sq, hkv, g, hd); k: (b, sk, hkv, hd); v: (b, sk, hkv, vd).
+    Returns (b, sq, hkv, g, vd). Falls back to one-shot `_sdpa` when the
+    problem already fits in a single block or shapes don't divide.
+    """
+    b, sq, hkv, g, hd = q.shape
+    sk, vd = k.shape[1], v.shape[-1]
+    cq, ck = min(chunk, sq), min(chunk, sk)
+    if (sq <= chunk and sk <= chunk) or sq % cq or sk % ck:
+        mask = _causal_mask(sq, sk, 0, window) if causal else jnp.ones((1, sq, sk), bool)
+        return _sdpa(q, k, v, mask)
+    nq, nk = sq // cq, sk // ck
+    scale = 1.0 / jnp.sqrt(hd)
+    kb = jnp.moveaxis(k.reshape(b, nk, ck, hkv, hd), 1, 0)  # (nk,b,ck,hkv,hd)
+    vb = jnp.moveaxis(v.reshape(b, nk, ck, hkv, vd), 1, 0)
+    outs = []
+    for i in range(nq):
+        qi = jax.lax.slice_in_dim(q, i * cq, (i + 1) * cq, axis=1)
+        if causal:
+            lo = max(0, (i * cq - window) // ck) if window else 0
+            hi = i + 1 if cq == ck else min(nk, ((i + 1) * cq + ck - 1) // ck)
+        else:
+            lo, hi = 0, nk
+
+        def body(carry, inp, i=i):
+            acc, m, l = carry
+            kc, vc, j = inp
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qi, kc).astype(jnp.float32) * scale
+            if causal:
+                qpos = i * cq + jnp.arange(cq)
+                kpos = j * ck + jnp.arange(ck)
+                msk = kpos[None, :] <= qpos[:, None]
+                if window:
+                    msk = msk & (kpos[None, :] > qpos[:, None] - window)
+                s = jnp.where(msk[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            if causal:
+                p = jnp.where(msk[None, None, None], p, 0.0)
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p.astype(vc.dtype), vc).astype(jnp.float32)
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((b, hkv, g, cq, vd), jnp.float32)
+        m0 = jnp.full((b, hkv, g, cq), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, cq), jnp.float32)
+        (acc, _, l), _ = jax.lax.scan(
+            body, (acc0, m0, l0),
+            (kb[lo:hi], vb[lo:hi], jnp.arange(lo, hi)))
+        oi = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+        outs.append(jnp.transpose(oi, (0, 3, 1, 2, 4)))  # (b,cq,hkv,g,vd)
+    return jnp.concatenate(outs, axis=1)
+
+
+def _attn_dispatch(cfg, q, k, v, *, causal, window):
+    """attn_impl selection: the Pallas flash kernel (TPU; interpret elsewhere)
+    or its pure-XLA chunked twin (identical blocking — default, CPU-lowerable)."""
+    if getattr(cfg, "attn_impl", "xla_chunked") == "pallas_flash":
+        from repro.kernels.flash_attn.ops import flash_attention
+
+        interp = jax.default_backend() != "tpu"
+        bq = bk = min(512, q.shape[1], k.shape[1])
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               bq=bq, bk=bk, interpret=interp)
+    return chunked_sdpa(q, k, v, causal=causal, window=window)
+
+
+def gqa_full(p, cfg: ModelConfig, x, positions, causal=True):
+    """Full-sequence attention. Returns (out, cache) with post-rope k and v."""
+    b, s, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"])
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, hq, hd)
+    k = k.reshape(b, s, hkv, hd)
+    v = v.reshape(b, s, hkv, hd)
+    if causal:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    g = hq // hkv
+    qg = q.reshape(b, s, hkv, g, hd)
+    out = _attn_dispatch(cfg, qg, k, v, causal=causal,
+                         window=cfg.sliding_window if causal else 0).reshape(b, s, hq * hd)
+    out = jnp.einsum("bsh,hd->bsd", out, p["wo"])
+    return out, {"k": k, "v": v}
+
+
+def gqa_decode(p, cfg: ModelConfig, x, cache, pos):
+    """x: (b,1,d); cache k/v: (b,S,hkv,hd); pos: scalar position of the new
+    token. Writes kv at pos % S (ring for SWA) and attends over valid keys."""
+    b, _, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    S = cache["k"].shape[1]
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"])
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, 1, hq, hd)
+    k = k.reshape(b, 1, hkv, hd)
+    v = v.reshape(b, 1, hkv, hd)
+    posa = jnp.full((b, 1), pos)
+    q = apply_rope(q, posa, cfg.rope_theta)
+    k = apply_rope(k, posa, cfg.rope_theta)
+    slot = pos % S
+    ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+    g = hq // hkv
+    qg = q.reshape(b, 1, hkv, g, hd)
+    # valid cache slots: everything written so far; once the ring is full
+    # (SWA: S == window) every slot is a live key.
+    idx = jnp.arange(S)[None, :]
+    valid = (idx <= slot) | (pos >= S)
+    mask = jnp.broadcast_to(valid[:, None, :], (b, 1, S))
+    out = _sdpa(qg, ck, cv, mask).reshape(b, 1, hq * hd)
+    out = jnp.einsum("bsh,hd->bsd", out, p["wo"])
+    return out, {"k": ck, "v": cv}
+
+
+# --------------------------------------------------------------------- MLA
+def init_mla(key, cfg: ModelConfig, dtype):
+    d, h = cfg.d_model, cfg.n_heads
+    m: MLAConfig = cfg.mla
+    ks = jax.random.split(key, 5)
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wq": init_linear(ks[0], d, h * qk, dtype),
+        "wkv_a": init_linear(ks[1], d, m.kv_lora_rank + m.qk_rope_head_dim, dtype),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), dtype),
+        "wkv_b": init_linear(ks[2], m.kv_lora_rank, h * (m.qk_nope_head_dim + m.v_head_dim), dtype),
+        "wo": init_linear(ks[3], h * m.v_head_dim, d, dtype),
+    }
+
+
+def _mla_expand(p, cfg, ckv):
+    """Latent (b,S,r) -> per-head k_nope (b,S,h,nope), v (b,S,h,vd)."""
+    m, h = cfg.mla, cfg.n_heads
+    kv = jnp.einsum("bsr,rh->bsh", ckv, p["wkv_b"])
+    kv = kv.reshape(*ckv.shape[:2], h, m.qk_nope_head_dim + m.v_head_dim)
+    return kv[..., : m.qk_nope_head_dim], kv[..., m.qk_nope_head_dim :]
+
+
+def mla_full(p, cfg: ModelConfig, x, positions):
+    from repro.models.layers import rms_norm
+
+    b, s, d = x.shape
+    m, h = cfg.mla, cfg.n_heads
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(b, s, h, -1)
+    q_nope, q_rope = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim :]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    ca = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    ckv, k_rope = ca[..., : m.kv_lora_rank], ca[..., m.kv_lora_rank :]
+    ckv = rms_norm(ckv, p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)  # (b,s,1,rd)
+    k_nope, v = _mla_expand(p, cfg, ckv)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (*k_nope.shape[:3], m.qk_rope_head_dim))], axis=-1)
+    qh = jnp.concatenate([q_nope, q_rope], axis=-1)
+    # treat as MHA (hkv == h, group 1)
+    out = _attn_dispatch(cfg, qh.reshape(b, s, h, 1, -1), k, v, causal=True, window=0).reshape(b, s, -1)
+    out = jnp.einsum("bsh,hd->bsd", out, p["wo"])
+    return out, {"ckv": ckv, "krope": k_rope[:, :, 0, :]}
+
+
+def mla_decode(p, cfg: ModelConfig, x, cache, pos):
+    from repro.models.layers import rms_norm
+
+    b = x.shape[0]
+    m, h = cfg.mla, cfg.n_heads
+    S = cache["ckv"].shape[1]
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(b, 1, h, -1)
+    q_nope, q_rope = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim :]
+    posa = jnp.full((b, 1), pos)
+    q_rope = apply_rope(q_rope, posa, cfg.rope_theta)
+    ca = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    ckv_new, k_rope_new = ca[..., : m.kv_lora_rank], ca[..., m.kv_lora_rank :]
+    ckv_new = rms_norm(ckv_new, p["kv_norm"], cfg.norm_eps)
+    k_rope_new = apply_rope(k_rope_new[:, :, None, :], posa, cfg.rope_theta)[:, :, 0, :]
+    ckv = jax.lax.dynamic_update_slice(cache["ckv"], ckv_new, (0, pos % S, 0))
+    krope = jax.lax.dynamic_update_slice(cache["krope"], k_rope_new, (0, pos % S, 0))
+    # baseline (paper-faithful naive) decode: expand the latent cache per step
+    k_nope, v = _mla_expand(p, cfg, ckv)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(krope[:, :, None, :], (*k_nope.shape[:3], m.qk_rope_head_dim))], axis=-1
+    )
+    qh = jnp.concatenate([q_nope, q_rope], axis=-1)
+    mask = (jnp.arange(S)[None, :] <= pos % S)[None] * jnp.ones((b, 1, S), bool)
+    out = _sdpa(qh.reshape(b, 1, h, 1, -1), k, v, mask).reshape(b, 1, -1)
+    out = jnp.einsum("bsh,hd->bsd", out, p["wo"])
+    return out, {"ckv": ckv, "krope": krope}
+
+
+def mla_decode_absorbed(p, cfg: ModelConfig, x, cache, pos):
+    """Optimized decode (§Perf): absorb wkv_b into the query/output side so
+    attention runs directly in the latent space — no per-step expansion of the
+    whole cache. FLOPs drop from O(S·h·(nope+vd)·r) to O(S·h·r)."""
+    from repro.models.layers import rms_norm
+
+    b = x.shape[0]
+    m, h = cfg.mla, cfg.n_heads
+    S = cache["ckv"].shape[1]
+    r = m.kv_lora_rank
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(b, 1, h, -1)
+    q_nope, q_rope = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim :]
+    posa = jnp.full((b, 1), pos)
+    q_rope = apply_rope(q_rope, posa, cfg.rope_theta)
+    ca = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    ckv_new, k_rope_new = ca[..., :r], ca[..., r:]
+    ckv_new = rms_norm(ckv_new, p["kv_norm"], cfg.norm_eps)
+    k_rope_new = apply_rope(k_rope_new[:, :, None, :], posa, cfg.rope_theta)[:, :, 0, :]
+    ckv = jax.lax.dynamic_update_slice(cache["ckv"], ckv_new, (0, pos % S, 0))
+    krope = jax.lax.dynamic_update_slice(cache["krope"], k_rope_new, (0, pos % S, 0))
+    wkv_b = p["wkv_b"].reshape(r, h, m.qk_nope_head_dim + m.v_head_dim)
+    wk = wkv_b[..., : m.qk_nope_head_dim]  # (r, h, nope)
+    wv = wkv_b[..., m.qk_nope_head_dim :]  # (r, h, vd)
+    # absorb: q_latent = q_nope · wk  -> (b,1,h,r)
+    q_lat = jnp.einsum("bqhn,rhn->bqhr", q_nope, wk)
+    scale = 1.0 / jnp.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    scores = (
+        jnp.einsum("bqhr,bsr->bhqs", q_lat, ckv)
+        + jnp.einsum("bqhc,bsc->bhqs", q_rope, krope)
+    ).astype(jnp.float32) * scale
+    mask = (jnp.arange(S)[None, None, None, :] <= pos % S)
+    scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bhqs,bsr->bqhr", w, ckv)          # latent context
+    out_h = jnp.einsum("bqhr,rhv->bqhv", ctx, wv)        # expand once per step
+    out = jnp.einsum("bsh,hd->bsd", out_h.reshape(b, 1, -1), p["wo"])
+    return out, {"ckv": ckv, "krope": krope}
+
+
+# ------------------------------------------------------------- cross-attn
+def init_cross(key, cfg: ModelConfig, dtype):
+    d, hq, hd = cfg.d_model, cfg.n_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": init_linear(ks[0], d, hq * hd, dtype),
+        "wk": init_linear(ks[1], d, hq * hd, dtype),
+        "wv": init_linear(ks[2], d, hq * hd, dtype),
+        "wo": init_linear(ks[3], hq * hd, d, dtype),
+    }
+
+
+def cross_full(p, cfg: ModelConfig, x, enc_kv):
+    """x: (b,sq,d); enc_kv: precomputed {"k","v"} (b,se,h,hd)."""
+    b, sq, d = x.shape
+    h, hd = cfg.n_heads, cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(b, sq, h, hd)
+    out = _attn_dispatch(cfg, q.reshape(b, sq, h, 1, hd), enc_kv["k"], enc_kv["v"],
+                         causal=False, window=0).reshape(b, sq, h * hd)
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"])
+
+
+def cross_precompute(p, cfg: ModelConfig, enc_out):
+    b, se, d = enc_out.shape
+    h, hd = cfg.n_heads, cfg.resolved_head_dim
+    k = jnp.einsum("bsd,dh->bsh", enc_out, p["wk"]).reshape(b, se, h, hd)
+    v = jnp.einsum("bsd,dh->bsh", enc_out, p["wv"]).reshape(b, se, h, hd)
+    return {"k": k, "v": v}

@@ -1,0 +1,155 @@
+"""Encoder–decoder LM (Whisper-small backbone). The audio frontend is a stub
+per the assignment: ``input_specs()`` feeds precomputed frame embeddings
+(b, s_enc, d); the conv frontend is a learned projection placeholder."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models.layers import init_linear, rms_norm, swiglu
+from repro.models.sharding import constrain
+from repro.models.transformer import _init_ffn, _logits, _maybe_remat
+
+
+def init_enc_layer(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "attn": A.init_gqa(k1, cfg, dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "ffn": _init_ffn(k2, cfg, dtype),
+    }
+
+
+def init_dec_layer(key, cfg, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "attn": A.init_gqa(k1, cfg, dtype),
+        "lnx": jnp.ones((cfg.d_model,), dtype),
+        "xattn": A.init_cross(k2, cfg, dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "ffn": _init_ffn(k3, cfg, dtype),
+    }
+
+
+def init_params(cfg: ModelConfig, key):
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    ek = jax.random.split(ks[0], cfg.encoder_layers)
+    dk = jax.random.split(ks[1], cfg.n_layers)
+    return {
+        "frontend": init_linear(ks[2], cfg.d_model, cfg.d_model, dtype),  # conv stub
+        "embed": (jax.random.normal(ks[3], (cfg.padded_vocab, cfg.d_model), jnp.float32) * 0.02).astype(dtype),
+        "enc_layers": jax.vmap(lambda k: init_enc_layer(k, cfg, dtype))(ek),
+        "enc_norm": jnp.ones((cfg.d_model,), dtype),
+        "layers": jax.vmap(lambda k: init_dec_layer(k, cfg, dtype))(dk),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "lm_head": init_linear(ks[4], cfg.d_model, cfg.padded_vocab, dtype),
+    }
+
+
+def encode(params, cfg: ModelConfig, frames):
+    x = jnp.einsum("bsd,de->bse", frames.astype(params["frontend"].dtype), params["frontend"])
+    x = constrain(x, ("dp", None, None))
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def body(xx, lp):
+        h, _ = A.gqa_full(lp["attn"], cfg, rms_norm(xx, lp["ln1"], cfg.norm_eps), positions, causal=False)
+        xx = xx + h
+        f = swiglu(rms_norm(xx, lp["ln2"], cfg.norm_eps), lp["ffn"]["w_gate"], lp["ffn"]["w_up"], lp["ffn"]["w_down"])
+        return constrain(xx + f, ("dp", None, None)), None
+
+    x, _ = jax.lax.scan(_maybe_remat(body, cfg), x, params["enc_layers"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def forward(params, cfg: ModelConfig, frames, tokens, return_caches=False,
+            return_hidden=False, enc=None):
+    if enc is None:
+        enc = encode(params, cfg, frames)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def body(xx, lp):
+        h, kv = A.gqa_full(lp["attn"], cfg, rms_norm(xx, lp["ln1"], cfg.norm_eps), positions)
+        xx = xx + h
+        ekv = A.cross_precompute(lp["xattn"], cfg, enc)
+        xx = xx + A.cross_full(lp["xattn"], cfg, rms_norm(xx, lp["lnx"], cfg.norm_eps), ekv)
+        f = swiglu(rms_norm(xx, lp["ln2"], cfg.norm_eps), lp["ffn"]["w_gate"], lp["ffn"]["w_up"], lp["ffn"]["w_down"])
+        return constrain(xx + f, ("dp", None, None)), kv
+
+    x, kv = jax.lax.scan(_maybe_remat(body, cfg), x, params["layers"])
+    caches = {"attn": kv} if return_caches else None
+    if return_hidden:
+        return x, 0.0, caches
+    logits = _logits(params, cfg, x)
+    return logits, 0.0, caches
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int, enc_len: int, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim
+    L = cfg.n_layers
+    return {
+        "attn": {
+            "k": jnp.zeros((L, batch, cache_len, cfg.n_kv_heads, hd), dtype),
+            "v": jnp.zeros((L, batch, cache_len, cfg.n_kv_heads, hd), dtype),
+        },
+        # precomputed cross-attention K/V per decoder layer
+        "cross": {
+            "k": jnp.zeros((L, batch, enc_len, cfg.n_heads, hd), dtype),
+            "v": jnp.zeros((L, batch, enc_len, cfg.n_heads, hd), dtype),
+        },
+    }
+
+
+def prefill(params, cfg: ModelConfig, frames, tokens, cache_len=None):
+    """Encode once + teacher-forced decoder pass; build decode caches.
+    Logits are last-position-only (b, 1, V)."""
+    enc = encode(params, cfg, frames)
+    x, _, caches = forward(params, cfg, frames, tokens, return_caches=True,
+                           return_hidden=True, enc=enc)
+    logits = _logits(params, cfg, x[:, -1:])
+    b, s = tokens.shape
+    cache_len = cache_len or s
+    out = init_cache(cfg, b, cache_len, enc.shape[1])
+
+    def fit(dst, src):
+        S, T = dst.shape[2], src.shape[2]
+        if T >= S:
+            return jax.lax.slice_in_dim(src, T - S, T, axis=2).astype(dst.dtype)
+        pad = [(0, 0)] * src.ndim
+        pad[2] = (0, S - T)
+        return jnp.pad(src, pad).astype(dst.dtype)
+
+    out["attn"]["k"] = fit(out["attn"]["k"], caches["attn"]["k"])
+    out["attn"]["v"] = fit(out["attn"]["v"], caches["attn"]["v"])
+
+    def cross_body(_, lp):
+        ekv = A.cross_precompute(lp["xattn"], cfg, enc)
+        return None, (ekv["k"], ekv["v"])
+
+    _, (ck, cv) = jax.lax.scan(cross_body, None, params["layers"])
+    out["cross"]["k"], out["cross"]["v"] = ck, cv
+    return logits, out
+
+
+def decode_step(params, cfg: ModelConfig, cache, token, pos):
+    x = jnp.take(params["embed"], token, axis=0)
+
+    def body(xx, inp):
+        lp, kv, ck, cv = inp
+        h, kv2 = A.gqa_decode(lp["attn"], cfg, rms_norm(xx, lp["ln1"], cfg.norm_eps), kv, pos)
+        xx = xx + h
+        xx = xx + A.cross_full(lp["xattn"], cfg, rms_norm(xx, lp["lnx"], cfg.norm_eps), {"k": ck, "v": cv})
+        f = swiglu(rms_norm(xx, lp["ln2"], cfg.norm_eps), lp["ffn"]["w_gate"], lp["ffn"]["w_up"], lp["ffn"]["w_down"])
+        return xx + f, kv2
+
+    x, kv = jax.lax.scan(body, x, (params["layers"], cache["attn"], cache["cross"]["k"], cache["cross"]["v"]))
+    logits = jnp.einsum("bsd,dv->bsv", rms_norm(x, params["final_norm"], cfg.norm_eps), params["lm_head"])
+    return logits, {"attn": kv, "cross": cache["cross"]}

@@ -1,0 +1,101 @@
+"""Shared neural building blocks (pure functions over param pytrees)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+import functools as _functools
+
+
+@_functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rms_norm(x, w, eps: float = 1e-6):
+    """RMSNorm whose fwd AND bwd never materialize an f32 copy of x.
+
+    Full-tensor bf16→f32 converts here get hoisted by XLA into the
+    remat-saved residual stacks of the layer scan, doubling their memory
+    (observed in the dry-run HLO: a 13.5 GiB f32[27,b,s,d] stack next to the
+    legitimate bf16 one). All reductions accumulate in f32 via
+    ``preferred_element_type``; element-wise math stays in x.dtype.
+    """
+    out, _ = _rms_fwd(x, w, eps)
+    return out
+
+
+def _rms_inv(x, eps):
+    var = jnp.einsum("...d,...d->...", x, x, preferred_element_type=jnp.float32)[..., None]
+    return jax.lax.rsqrt(var / x.shape[-1] + eps)  # f32, (..., 1)
+
+
+def _rms_fwd(x, w, eps):
+    inv = _rms_inv(x, eps)
+    y = x * inv.astype(x.dtype) * w
+    return y, (x, w, inv)
+
+
+def _rms_bwd(eps, res, dy):
+    x, w, inv = res
+    d = x.shape[-1]
+    inv_l = inv.astype(x.dtype)
+    dyw = dy * w
+    # dw: accumulate in f32 over all leading dims
+    dw = jnp.einsum("...d,...d->d", dy, x * inv_l, preferred_element_type=jnp.float32).astype(w.dtype)
+    # dx = inv * dyw - x * inv^3/d * <dyw, x>
+    dot = jnp.einsum("...d,...d->...", dyw, x, preferred_element_type=jnp.float32)[..., None]
+    coeff = (inv ** 3 * dot / d).astype(x.dtype)
+    dx = dyw * inv_l - x * coeff
+    return dx, dw
+
+
+rms_norm.defvjp(_rms_fwd, _rms_bwd)
+
+
+@jax.custom_vjp
+def lowp_matmul_f32(x, w):
+    """einsum('...d,de->...e') with f32 accumulation whose VJP keeps BOTH
+    operands in x.dtype (the default VJP promotes the full x to f32 for the
+    weight gradient — which XLA then hoists into remat-saved stacks)."""
+    return jnp.einsum("...d,de->...e", x, w.astype(x.dtype),
+                      preferred_element_type=jnp.float32)
+
+
+def _lowp_fwd(x, w):
+    return lowp_matmul_f32(x, w), (x, w)
+
+
+def _lowp_bwd(res, dy):
+    x, w = res
+    dyl = dy.astype(x.dtype)
+    dx = jnp.einsum("...e,de->...d", dyl, w.astype(x.dtype))
+    dw = jnp.einsum("...e,...d->de", dyl, x, preferred_element_type=jnp.float32).astype(w.dtype)
+    return dx, dw
+
+
+lowp_matmul_f32.defvjp(_lowp_fwd, _lowp_bwd)
+
+
+def init_linear(key, d_in, d_out, dtype, scale=None):
+    scale = scale if scale is not None else (1.0 / jnp.sqrt(d_in))
+    return (jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) * scale).astype(dtype)
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., s, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, w_down)

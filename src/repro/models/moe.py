@@ -1,0 +1,110 @@
+"""Mixture-of-Experts FFN with sort+gather dispatch.
+
+Top-k routing into per-expert capacity buffers. Dispatch/combine are
+gathers (O(t·k·d) bytes, zero matmul FLOPs) instead of the GShard one-hot
+einsum (which costs t·s_g·k·cf·d fake FLOPs and would poison the roofline's
+compute term). Expert buffers are sharded over ("model" = EP) × (dp = the
+capacity dim), so per-device memory is t·k·cf·d / (EP·DP).
+
+Ranks within an expert come from a stable argsort of the flat expert
+assignments — deterministic, and identical between prefill/decode when
+capacity is sufficient (serving-consistency tests rely on this).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import init_linear, lowp_matmul_f32
+from repro.models.sharding import constrain
+
+
+def init_moe(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    mo = cfg.moe
+    ks = jax.random.split(key, 7)
+    p = {
+        "router": init_linear(ks[0], d, mo.n_experts, jnp.float32),
+        "we_gate": jax.random.normal(ks[1], (mo.n_experts, d, mo.d_expert), jnp.float32).astype(dtype) / (d ** 0.5),
+        "we_up": jax.random.normal(ks[2], (mo.n_experts, d, mo.d_expert), jnp.float32).astype(dtype) / (d ** 0.5),
+        "we_down": jax.random.normal(ks[3], (mo.n_experts, mo.d_expert, d), jnp.float32).astype(dtype) / (mo.d_expert ** 0.5),
+    }
+    if mo.n_shared:
+        ds = mo.d_shared or mo.d_expert
+        p["ws_gate"] = init_linear(ks[4], d, ds, dtype)
+        p["ws_up"] = init_linear(ks[5], d, ds, dtype)
+        p["ws_down"] = init_linear(ks[6], ds, d, dtype)
+    return p
+
+
+def _capacity(mo, n_tok: int) -> int:
+    cap = int(mo.capacity_factor * n_tok * mo.top_k / mo.n_experts)
+    cap = max(cap, mo.top_k)
+    return ((cap + 511) // 512) * 512 if cap > 512 else cap  # shard-friendly
+
+
+def moe_ffn(p, cfg: ModelConfig, x):
+    """x: (b, s, d) -> (b, s, d).
+
+    Dispatch is GROUPED per batch row: every sort/gather/scatter is batched
+    over the (dp-sharded) group axis, so nothing materializes a global
+    buffer and no cross-shard sort is needed. Expert buffers are
+    (groups, e, cap, d) sharded (dp, model=EP, ·, ·)."""
+    mo = cfg.moe
+    b, s, d = x.shape
+    k, e = mo.top_k, mo.n_experts
+    xg = x                                                  # groups = batch rows
+    # router fwd AND bwd in bf16 with f32 accumulation: a full-x f32 convert
+    # here gets hoisted into the remat-saved residual stack (see rms_norm)
+    logits = lowp_matmul_f32(xg, p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                  # (g, s, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    cap = _capacity(mo, s)
+    flat_e = top_e.reshape(b, s * k)
+    # rank within expert, per group (stable sort; no scatter: inverse argsort)
+    order = jnp.argsort(flat_e, axis=-1, stable=True)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)
+    starts = jax.vmap(lambda se: jnp.searchsorted(se, jnp.arange(e)))(sorted_e)
+    rank_sorted = jnp.arange(s * k)[None, :] - jnp.take_along_axis(starts, sorted_e, axis=-1)
+    inv_order = jnp.argsort(order, axis=-1)
+    rank = jnp.take_along_axis(rank_sorted, inv_order, axis=-1).astype(jnp.int32)
+    keep = rank < cap
+    slot = jnp.where(keep, flat_e * cap + rank, e * cap)    # (g, s*k); overflow -> sentinel
+
+    # dispatch: slot -> source position within the group (sentinel -> zero row)
+    gi = jnp.arange(b, dtype=jnp.int32)[:, None]
+    src = jnp.full((b, e * cap + 1), s, jnp.int32).at[gi, slot].set(
+        jnp.broadcast_to(jnp.arange(s * k, dtype=jnp.int32)[None, :] // k, (b, s * k)), mode="drop")
+    xg_pad = jnp.concatenate([xg, jnp.zeros((b, 1, d), xg.dtype)], axis=1)
+    expert_in = jnp.take_along_axis(xg_pad, src[:, : e * cap, None], axis=1)
+    expert_in = expert_in.reshape(b, e, cap, d)
+    expert_in = constrain(expert_in, ("dp", "model", None, None))
+
+    g_ = jnp.einsum("gecd,edf->gecf", expert_in, p["we_gate"])
+    u_ = jnp.einsum("gecd,edf->gecf", expert_in, p["we_up"])
+    eo = jnp.einsum("gecf,efd->gecd", jax.nn.silu(g_) * u_, p["we_down"])
+    eo = constrain(eo, ("dp", "model", None, None))
+
+    # combine: each (token, k) reads its slot; dropped slots read the zero row
+    eo_pad = jnp.concatenate(
+        [eo.reshape(b, e * cap, d), jnp.zeros((b, 1, d), eo.dtype)], axis=1)
+    gathered = jnp.take_along_axis(eo_pad, slot[:, :, None], axis=1)
+    gathered = gathered.reshape(b, s, k, d)
+    out = (gathered * top_p.astype(gathered.dtype)[..., None]).sum(axis=2)
+
+    if mo.n_shared:
+        gs = jnp.einsum("gsd,df->gsf", xg, p["ws_gate"])
+        us = jnp.einsum("gsd,df->gsf", xg, p["ws_up"])
+        out = out + jnp.einsum("gsf,fd->gsd", jax.nn.silu(gs) * us, p["ws_down"])
+    aux = _load_balance_loss(probs.reshape(b * s, e), top_e.reshape(b * s, k), e)
+    return out, aux
+
+
+def _load_balance_loss(probs, top_e, n_experts):
+    """Switch-style auxiliary load-balancing loss."""
+    me = probs.mean(0)
+    ce = jax.nn.one_hot(top_e[:, 0], n_experts).mean(0)
+    return n_experts * jnp.sum(me * ce)

@@ -1,0 +1,199 @@
+"""Sharding rules: parameter PartitionSpecs + activation constraints.
+
+Axis roles: ``dp`` = the data-parallel axes (("pod","data") on the multi-pod
+mesh, ("data",) on a single pod), ``model`` = tensor/expert parallelism.
+A thread-local context carries the active mesh so model code stays
+mesh-agnostic (smoke tests run with no mesh and constraints become no-ops).
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_CTX = threading.local()
+
+
+@contextmanager
+def mesh_context(mesh, dp_axes):
+    """dp_axes: tuple of mesh axis names acting as data parallelism."""
+    prev = getattr(_CTX, "v", None)
+    _CTX.v = (mesh, tuple(dp_axes))
+    try:
+        yield
+    finally:
+        _CTX.v = prev
+
+
+def current():
+    return getattr(_CTX, "v", None)
+
+
+def _resolve(spec_entry):
+    """Map the symbolic 'dp' to the context's dp axes."""
+    mesh, dp = current()
+    if spec_entry == "dp":
+        return dp if len(dp) > 1 else dp[0]
+    return spec_entry
+
+
+def constrain(x, symbolic_spec):
+    """with_sharding_constraint if a mesh context is active, else identity."""
+    ctx = current()
+    if ctx is None:
+        return x
+    mesh, _ = ctx
+    spec = P(*[_resolve(e) for e in symbolic_spec])
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# --------------------------------------------------------------------------
+# Parameter specs
+# --------------------------------------------------------------------------
+def _divisible(dim: int, mesh, axis) -> bool:
+    """pjit in_shardings require exact divisibility; non-divisible dims
+    replicate (vocab is pre-padded in the config so the big tables shard)."""
+    if axis is None:
+        return True
+    names = axis if isinstance(axis, tuple) else (axis,)
+    total = int(np.prod([mesh.shape[n] for n in names]))
+    return dim % total == 0
+
+
+def _guard(spec: tuple, shape: tuple, mesh) -> P:
+    out = []
+    for dim, ax in zip(shape, spec):
+        out.append(ax if _divisible(dim, mesh, ax) else None)
+    return P(*out)
+
+
+def param_pspecs(cfg, params_tree, mesh, dp_axes):
+    """Build a PartitionSpec pytree matching ``params_tree`` (abstract ok).
+
+    Rules (path-name driven):
+      embed (V,d)->(model,None); lm_head (d,V)->(None,model)
+      wq/wk/wv/wkv_b (…,d,H)->(None,model); wo/w_down/out_proj (…,H,d)->(model,None)
+      w_gate/w_up/in_proj (…,d,f)->(None,model)
+      experts we_* (L,E,…)->(model on E [, data on d if cfg.fsdp])
+      conv_w (C,K)->(model,None);  1-D params replicated
+    """
+    fsdp_ax = dp_axes[-1] if cfg.fsdp else None
+
+    def rule(path, leaf):
+        name = path[-1] if path else ""
+        nd = len(leaf.shape)
+        stacked = name not in ("embed", "lm_head", "final_norm") and "shared_attn" not in path and "encoder_embed" not in path
+        # leading L axis for stacked layer params
+        def with_l(spec):
+            return ((None,) + spec) if (stacked and "layers" in path) else spec
+
+        if name == "embed":
+            return _guard(("model", None), leaf.shape, mesh)
+        if name == "lm_head":
+            return _guard((None, "model"), leaf.shape, mesh)
+        if nd <= 1 + (1 if ("layers" in path and stacked) else 0):
+            return P(*([None] * nd))  # norms, biases, scalars
+        if name in ("we_gate", "we_up", "we_down"):
+            spec = ["model", None, None]  # (E, d, f) / (E, f, d)
+            if cfg.fsdp:
+                spec[1] = fsdp_ax
+            return _guard(tuple(with_l(tuple(spec))), leaf.shape, mesh)
+        if name == "router":
+            return _guard(with_l((None, None)), leaf.shape, mesh)
+        if name in ("wq", "wk", "wv", "wkv_b", "w_gate", "w_up", "in_proj", "ws_gate", "ws_up", "wkv_a"):
+            spec = (fsdp_ax, "model") if cfg.fsdp else (None, "model")
+            return _guard(with_l(spec), leaf.shape, mesh)
+        if name in ("wo", "w_down", "out_proj", "ws_down"):
+            spec = ("model", fsdp_ax) if cfg.fsdp else ("model", None)
+            return _guard(with_l(spec), leaf.shape, mesh)
+        if name == "conv_w":
+            return _guard(with_l(("model", None)), leaf.shape, mesh)
+        return P(*([None] * nd))
+
+    paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(params_tree)
+    specs = []
+    for kp, leaf in paths_leaves:
+        path = tuple(
+            k.key if hasattr(k, "key") else str(getattr(k, "idx", k)) for k in kp
+        )
+        specs.append(rule(path, leaf))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def cache_pspecs(cfg, cache_tree, mesh, dp_axes, batch: int):
+    """KV/state cache sharding: batch over dp when divisible; heads/latent
+    over model; batch==1 long-context attention caches shard the TIME axis
+    over dp (sequence parallelism for the cache)."""
+    dp = tuple(dp_axes)
+    dp_total = int(np.prod([mesh.shape[a] for a in dp]))
+    batch_ax = (dp if len(dp) > 1 else dp[0]) if batch % dp_total == 0 and batch >= dp_total else None
+
+    def rule(path, leaf):
+        name = path[-1]
+        nd = len(leaf.shape)
+        if name in ("k", "v"):  # (L|G, b, S, hkv, hd)
+            head_ax = "model" if _divisible(leaf.shape[3], mesh, "model") else None
+            # few-KV-head archs (GQA kv ∈ {2,4,8,12} vs model=16): shard the
+            # TIME axis over "model" instead — decode attention contracts over
+            # time, which SPMD handles with partial scores + small softmax-stat
+            # all-reduces instead of gathering the cache (§Perf iteration).
+            time_ax = "model" if head_ax is None and _divisible(leaf.shape[2], mesh, "model") else None
+            if batch_ax is None and time_ax is None and _divisible(leaf.shape[2], mesh, dp if len(dp) > 1 else dp[0]):
+                # batch-1 long-context: sequence-parallel cache over the free
+                # dp axes (heads may still take "model")
+                time_ax = dp if len(dp) > 1 else dp[0]
+            if batch_ax is None and head_ax is None and time_ax is None:
+                return _guard((None, None, (dp if len(dp) > 1 else dp[0]), None, None), leaf.shape, mesh)
+            return _guard((None, batch_ax, time_ax, head_ax, None), leaf.shape, mesh)
+        if name in ("ckv", "krope"):  # (L, b, S, r) — latent has no head dim;
+            # shard time over "model" (same partial-attention argument)
+            time_ax = "model" if _divisible(leaf.shape[2], mesh, "model") else None
+            if batch_ax is None and time_ax is None:
+                return _guard((None, None, (dp if len(dp) > 1 else dp[0]), None), leaf.shape, mesh)
+            return _guard((None, batch_ax, time_ax, None), leaf.shape, mesh)
+        if name == "state":  # (L, b, nh, hp, ds)
+            return _guard((None, batch_ax, "model", None, None), leaf.shape, mesh)
+        if name == "conv":  # (L, b, K-1, conv_dim)
+            return _guard((None, batch_ax, None, "model"), leaf.shape, mesh)
+        return P(*([None] * nd))
+
+    paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(cache_tree)
+    specs = []
+    for kp, leaf in paths_leaves:
+        path = tuple(k.key if hasattr(k, "key") else str(getattr(k, "idx", k)) for k in kp)
+        specs.append(rule(path, leaf))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_pspec(mesh, dp_axes, batch: int):
+    dp = tuple(dp_axes)
+    dp_total = int(np.prod([mesh.shape[a] for a in dp]))
+    if batch % dp_total == 0 and batch >= dp_total:
+        return P(dp if len(dp) > 1 else dp[0], None)
+    return P(None, None)
+
+
+def zero1_spec(param_spec: P, shape: tuple, mesh, dp_axes) -> P:
+    """ZeRO-1: shard optimizer moments over the dp axes on the first
+    divisible unsharded dim. Only dp axes NOT already used by the param spec
+    are added (fsdp params already consume one dp axis); falls back to the
+    param spec when nothing further shards."""
+    entries = list(param_spec) + [None] * (len(shape) - len(param_spec))
+    used = set()
+    for ax in entries:
+        if ax is None:
+            continue
+        for a in (ax if isinstance(ax, tuple) else (ax,)):
+            used.add(a)
+    free = tuple(a for a in dp_axes if a not in used)
+    if not free:
+        return P(*entries)
+    total = int(np.prod([mesh.shape[a] for a in free]))
+    for i, (dim, ax) in enumerate(zip(shape, entries)):
+        if ax is None and dim % total == 0 and dim >= total:
+            entries[i] = free if len(free) > 1 else free[0]
+            return P(*entries)
+    return P(*entries)

@@ -1,0 +1,168 @@
+"""Mamba2 (SSD — state-space duality) block: chunked training/prefill scan
+and O(1) single-token decode. Faithful to Dao & Gu 2024 at the block level
+(zxbcdt projection, causal depthwise conv, scalar-decay SSD, gated RMSNorm);
+the chunked algorithm maps the recurrence onto MXU-friendly per-chunk
+matmuls with a `lax.scan` carrying the (heads, head_dim, d_state) state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import init_linear, rms_norm
+
+
+def dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nh = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    zxbcdt = 2 * d_inner + 2 * s.n_groups * s.d_state + nh
+    return d_inner, nh, conv_dim, zxbcdt
+
+
+def init_mamba2(key, cfg: ModelConfig, dtype):
+    s = cfg.ssm
+    d_inner, nh, conv_dim, zxbcdt = dims(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": init_linear(ks[0], cfg.d_model, zxbcdt, dtype),
+        "conv_w": jax.random.normal(ks[1], (conv_dim, s.conv_kernel), jnp.float32).astype(dtype) * 0.1,
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm_w": jnp.ones((d_inner,), dtype),
+        "out_proj": init_linear(ks[2], d_inner, cfg.d_model, dtype),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """x: (b, s, c); w: (c, K) depthwise causal. state: (b, K-1, c) history."""
+    K = w.shape[1]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1], :] * w[:, i] for i in range(K))
+    new_state = xp[:, -(K - 1) :, :]
+    return jax.nn.silu(out + b), new_state
+
+
+def _split_zxbcdt(cfg, zx):
+    s = cfg.ssm
+    d_inner, nh, conv_dim, _ = dims(cfg)
+    gs = s.n_groups * s.d_state
+    z = zx[..., :d_inner]
+    xBC = zx[..., d_inner : d_inner + conv_dim]
+    dt = zx[..., d_inner + conv_dim :]
+    return z, xBC, dt
+
+
+def ssd_chunked(xh, dt, A, B, C, chunk: int, h0=None):
+    """Chunked SSD scan.
+    xh: (b,s,nh,hp); dt: (b,s,nh) (post-softplus); A: (nh,) negative;
+    B, C: (b,s,g,ds). Returns (y, h_last) with y: (b,s,nh,hp),
+    h_last: (b,nh,hp,ds)."""
+    b, s, nh, hp = xh.shape
+    g, ds = B.shape[2], B.shape[3]
+    h_per_g = nh // g
+    Q = chunk
+    pad = (-s) % Q
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    T = xh.shape[1] // Q
+
+    def resh(t, shape):
+        return t.reshape(b, T, Q, *shape).swapaxes(0, 1)  # (T, b, Q, ...)
+
+    xh_c, dt_c = resh(xh, (nh, hp)), resh(dt, (nh,))
+    B_c, C_c = resh(B, (g, ds)), resh(C, (g, ds))
+    if h0 is None:
+        h0 = jnp.zeros((b, nh, hp, ds), jnp.float32)
+
+    def body(h, inp):
+        xq, dtq, Bq, Cq = inp                      # (b,Q,nh,hp), (b,Q,nh), (b,Q,g,ds)
+        dA = dtq * A[None, None, :]                # (b,Q,nh) negative increments
+        cum = jnp.cumsum(dA, axis=1)               # (b,Q,nh)
+        # intra-chunk: decay(i>=j) = exp(cum_i - cum_j)
+        rel = cum[:, :, None, :] - cum[:, None, :, :]          # (b,Q,Q,nh)
+        tri = jnp.tril(jnp.ones((Q, Q), bool))
+        L = jnp.where(tri[None, :, :, None], jnp.exp(rel), 0.0)  # (b,Q,Q,nh)
+        G = jnp.einsum("bqgn,bkgn->bqkg", Cq.astype(jnp.float32), Bq.astype(jnp.float32))
+        Lh = L.reshape(b, Q, Q, g, h_per_g)
+        M = G[..., None] * Lh                                   # (b,Q,Q,g,hpg)
+        xdt = (xq.astype(jnp.float32) * dtq[..., None]).reshape(b, Q, g, h_per_g, hp)
+        y_intra = jnp.einsum("bqkgh,bkghp->bqghp", M, xdt)
+        # inter-chunk: contribution of carried state
+        Cg = Cq.astype(jnp.float32)
+        y_inter = jnp.einsum("bqgn,bghpn->bqghp", Cg, h.reshape(b, g, h_per_g, hp, ds))
+        y_inter = y_inter * jnp.exp(cum).reshape(b, Q, g, h_per_g)[..., None]
+        y = (y_intra + y_inter).reshape(b, Q, nh, hp)
+        # state update
+        decay_to_end = jnp.exp(cum[:, -1:, :] - cum)            # (b,Q,nh)
+        w = xdt * decay_to_end.reshape(b, Q, g, h_per_g)[..., None]
+        h_new = h * jnp.exp(cum[:, -1, :])[:, :, None, None] + jnp.einsum(
+            "bkgn,bkghp->bghpn", Bq.astype(jnp.float32), w
+        ).reshape(b, nh, hp, ds)
+        return h_new, y
+
+    h_last, ys = jax.lax.scan(body, h0, (xh_c, dt_c, B_c, C_c))
+    y = ys.swapaxes(0, 1).reshape(b, T * Q, nh, hp)[:, :s]
+    return y, h_last
+
+
+def mamba2_full(p, cfg: ModelConfig, x, conv_state=None, h0=None):
+    """Full-sequence Mamba2 block. Returns (out, cache)."""
+    s_cfg = cfg.ssm
+    d_inner, nh, conv_dim, _ = dims(cfg)
+    zx = jnp.einsum("bsd,dz->bsz", x, p["in_proj"])
+    z, xBC, dt = _split_zxbcdt(cfg, zx)
+    xBC, conv_state = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_state)
+    xs = xBC[..., :d_inner]
+    gs = s_cfg.n_groups * s_cfg.d_state
+    B = xBC[..., d_inner : d_inner + gs].reshape(*x.shape[:2], s_cfg.n_groups, s_cfg.d_state)
+    C = xBC[..., d_inner + gs :].reshape(*x.shape[:2], s_cfg.n_groups, s_cfg.d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = xs.reshape(*x.shape[:2], nh, s_cfg.head_dim)
+    y, h_last = ssd_chunked(xh, dt, A, B, C, s_cfg.chunk, h0=h0)
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(*x.shape[:2], d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    return out, {"state": h_last, "conv": conv_state}
+
+
+def mamba2_decode(p, cfg: ModelConfig, x, cache):
+    """Single-token recurrent update. x: (b,1,d)."""
+    s_cfg = cfg.ssm
+    d_inner, nh, conv_dim, _ = dims(cfg)
+    zx = jnp.einsum("bsd,dz->bsz", x, p["in_proj"])
+    z, xBC, dt = _split_zxbcdt(cfg, zx)
+    xBC, conv_state = _causal_conv(xBC, p["conv_w"], p["conv_b"], cache["conv"])
+    xs = xBC[..., :d_inner]
+    gs = s_cfg.n_groups * s_cfg.d_state
+    B = xBC[..., d_inner : d_inner + gs].reshape(x.shape[0], 1, s_cfg.n_groups, s_cfg.d_state)
+    C = xBC[..., d_inner + gs :].reshape(x.shape[0], 1, s_cfg.n_groups, s_cfg.d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]     # (b,nh)
+    A = -jnp.exp(p["A_log"])
+    xh = xs.reshape(x.shape[0], nh, s_cfg.head_dim).astype(jnp.float32)   # (b,nh,hp)
+    h = cache["state"]                                                     # (b,nh,hp,ds)
+    h_per_g = nh // s_cfg.n_groups
+    decay = jnp.exp(dt * A[None, :])                                       # (b,nh)
+    Bb = B[:, 0].astype(jnp.float32)                                       # (b,g,ds)
+    Cb = C[:, 0].astype(jnp.float32)
+    Bh = jnp.repeat(Bb, h_per_g, axis=1)                                   # (b,nh,ds)
+    Ch = jnp.repeat(Cb, h_per_g, axis=1)
+    h_new = h * decay[:, :, None, None] + (dt[:, :, None] * xh)[..., None] * Bh[:, :, None, :]
+    y = jnp.einsum("bhpn,bhn->bhp", h_new, Ch) + p["D"][None, :, None] * xh
+    y = y.reshape(x.shape[0], 1, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    return out, {"state": h_new, "conv": conv_state}

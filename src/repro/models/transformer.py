@@ -1,0 +1,310 @@
+"""Decoder-only LM covering the dense / moe / ssm / hybrid / vlm families.
+
+Layers are stacked on a leading L axis and driven by ``lax.scan`` (small HLO,
+fast multi-pod compiles); the hybrid (Zamba2-style) path scans Mamba2 groups
+and interleaves ONE shared attention block (parameters reused at every
+application — the paper's 'shared attn blocks'). Activation sharding is
+injected via `repro.models.sharding.constrain`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models.layers import init_linear, rms_norm, swiglu
+from repro.models.sharding import constrain
+
+
+# ----------------------------------------------------------------- init
+def _init_ffn(key, cfg, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": init_linear(ks[0], cfg.d_model, cfg.d_ff, dtype),
+        "w_up": init_linear(ks[1], cfg.d_model, cfg.d_ff, dtype),
+        "w_down": init_linear(ks[2], cfg.d_ff, cfg.d_model, dtype),
+    }
+
+
+def init_attn_block(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    p = {"ln1": jnp.ones((cfg.d_model,), dtype), "ln2": jnp.ones((cfg.d_model,), dtype)}
+    if cfg.mla is not None:
+        p["attn"] = A.init_mla(k1, cfg, dtype)
+    else:
+        p["attn"] = A.init_gqa(k1, cfg, dtype)
+    if cfg.moe is not None:
+        p["moe"] = MOE.init_moe(k2, cfg, dtype)
+    else:
+        p["ffn"] = _init_ffn(k2, cfg, dtype)
+    return p
+
+
+def init_ssm_block(key, cfg: ModelConfig, dtype):
+    return {"ln": jnp.ones((cfg.d_model,), dtype), "mamba": SSM.init_mamba2(key, cfg, dtype)}
+
+
+def init_params(cfg: ModelConfig, key):
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    p = {
+        "embed": (jax.random.normal(ks[0], (cfg.padded_vocab, cfg.d_model), jnp.float32) * 0.02).astype(dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = init_linear(ks[1], cfg.d_model, cfg.padded_vocab, dtype)
+    lkeys = jax.random.split(ks[2], cfg.n_layers)
+    if cfg.family == "ssm" or cfg.attn_every:
+        p["layers"] = jax.vmap(lambda k: init_ssm_block(k, cfg, dtype))(lkeys)
+        if cfg.attn_every:
+            p["shared_attn"] = init_attn_block(ks[3], cfg, dtype)
+    else:
+        p["layers"] = jax.vmap(lambda k: init_attn_block(k, cfg, dtype))(lkeys)
+    return p
+
+
+# ----------------------------------------------------------- block bodies
+def attn_block_full(p, cfg: ModelConfig, x, positions):
+    h, cache = (A.mla_full if cfg.mla is not None else A.gqa_full)(p["attn"], cfg, rms_norm(x, p["ln1"], cfg.norm_eps), positions)
+    x = constrain(x + h, ("dp", None, None))
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.moe is not None:
+        f, aux = MOE.moe_ffn(p["moe"], cfg, h2)
+    else:
+        f, aux = swiglu(h2, p["ffn"]["w_gate"], p["ffn"]["w_up"], p["ffn"]["w_down"]), 0.0
+    x = constrain(x + f, ("dp", None, None))
+    return x, cache, aux
+
+
+def attn_block_decode(p, cfg: ModelConfig, x, cache, pos):
+    if cfg.mla is not None:
+        fn = A.mla_decode_absorbed if getattr(cfg, "_absorbed_mla", False) else A.mla_decode
+        h, cache = fn(p["attn"], cfg, rms_norm(x, p["ln1"], cfg.norm_eps), cache, pos)
+    else:
+        h, cache = A.gqa_decode(p["attn"], cfg, rms_norm(x, p["ln1"], cfg.norm_eps), cache, pos)
+    x = x + h
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.moe is not None:
+        f, _ = MOE.moe_ffn(p["moe"], cfg, h2)
+    else:
+        f = swiglu(h2, p["ffn"]["w_gate"], p["ffn"]["w_up"], p["ffn"]["w_down"])
+    return x + f, cache
+
+
+def ssm_block_full(p, cfg, x, conv_state=None, h0=None):
+    h, cache = SSM.mamba2_full(p["mamba"], cfg, rms_norm(x, p["ln"], cfg.norm_eps), conv_state, h0)
+    return constrain(x + h, ("dp", None, None)), cache
+
+
+def ssm_block_decode(p, cfg, x, cache):
+    h, cache = SSM.mamba2_decode(p["mamba"], cfg, rms_norm(x, p["ln"], cfg.norm_eps), cache)
+    return x + h, cache
+
+
+# --------------------------------------------------------------- forward
+def _maybe_remat(fn, cfg):
+    """remat policy: "full" (save layer boundaries only — minimum memory),
+    "dots" (additionally save matmul outputs: no recompute of projections in
+    the backward pass — trades ~(b,s,ff)/layer of HBM for ~25% of the
+    recompute FLOPs and its HBM traffic; §Perf lever), "none"."""
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return fn
+
+
+def _embed(params, cfg, tokens, embeds):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if embeds is not None:
+        x = jnp.concatenate([embeds.astype(x.dtype), x], axis=1)
+    return constrain(x, ("dp", None, None))
+
+
+def _logits(params, cfg, x):
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    return jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+
+
+def _hybrid_groups(cfg):
+    """[(start, len)] mamba-layer groups, each followed by the shared block."""
+    out, i = [], 0
+    while i < cfg.n_layers:
+        out.append((i, min(cfg.attn_every, cfg.n_layers - i)))
+        i += cfg.attn_every
+    return out
+
+
+def forward(params, cfg: ModelConfig, tokens, embeds=None, return_caches=False,
+            return_hidden=False):
+    """Full-sequence forward. Returns (logits|hidden, aux, caches|None).
+
+    ``return_hidden=True`` skips the (B,S,V) logits projection — the chunked
+    cross-entropy in ``api.lm_loss`` and the last-position-only prefill both
+    project tiny slices instead (the full logits tensor is the single biggest
+    activation at 32k×152k vocab)."""
+    x = _embed(params, cfg, tokens, embeds)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    caches = None
+    aux = 0.0
+    if cfg.family == "ssm" or cfg.attn_every:
+        def body(carry, lp):
+            xx = carry
+            xx, cache = ssm_block_full(lp, cfg, xx)
+            return xx, cache
+        body = _maybe_remat(body, cfg)
+        if cfg.attn_every:
+            attn_caches = []
+            mamba_caches = []
+            for (start, ln) in _hybrid_groups(cfg):
+                chunk = jax.tree.map(lambda t: jax.lax.slice_in_dim(t, start, start + ln, axis=0), params["layers"])
+                x, mc = jax.lax.scan(body, x, chunk)
+                x, ac, _ = attn_block_full(params["shared_attn"], cfg, x, positions)
+                mamba_caches.append(mc)
+                attn_caches.append(ac)
+            if return_caches:
+                caches = {
+                    "mamba": jax.tree.map(lambda *ts: jnp.concatenate(ts, axis=0), *mamba_caches),
+                    "attn": jax.tree.map(lambda *ts: jnp.stack(ts, axis=0), *attn_caches),
+                }
+        else:
+            x, mc = jax.lax.scan(body, x, params["layers"])
+            caches = {"mamba": mc} if return_caches else None
+    else:
+        def body(carry, lp):
+            xx, aux_acc = carry
+            xx, cache, a = attn_block_full(lp, cfg, xx, positions)
+            return (xx, aux_acc + a), cache
+        body = _maybe_remat(body, cfg)
+        (x, aux), kv = jax.lax.scan(body, (x, 0.0), params["layers"])
+        caches = {"attn": kv} if return_caches else None
+    if return_hidden:
+        return x, aux, caches
+    logits = _logits(params, cfg, x)
+    return logits, aux, caches
+
+
+# ----------------------------------------------------------------- serve
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype=None):
+    """Abstract-friendly cache constructor (jnp.zeros everywhere)."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    L = cfg.n_layers
+    hd = cfg.resolved_head_dim
+    if cfg.family == "ssm" or cfg.attn_every:
+        s = cfg.ssm
+        d_inner, nh, conv_dim, _ = SSM.dims(cfg)
+        cache = {
+            "mamba": {
+                "state": jnp.zeros((L, batch, nh, s.head_dim, s.d_state), jnp.float32),
+                "conv": jnp.zeros((L, batch, s.conv_kernel - 1, conv_dim), dtype),
+            }
+        }
+        if cfg.attn_every:
+            n_attn = len(_hybrid_groups(cfg))
+            eff = min(cache_len, cfg.sliding_window) if cfg.sliding_window else cache_len
+            cache["attn"] = {
+                "k": jnp.zeros((n_attn, batch, eff, cfg.n_kv_heads, hd), dtype),
+                "v": jnp.zeros((n_attn, batch, eff, cfg.n_kv_heads, hd), dtype),
+            }
+        return cache
+    if cfg.mla is not None:
+        m = cfg.mla
+        return {"attn": {
+            "ckv": jnp.zeros((L, batch, cache_len, m.kv_lora_rank), dtype),
+            "krope": jnp.zeros((L, batch, cache_len, m.qk_rope_head_dim), dtype),
+        }}
+    eff = min(cache_len, cfg.sliding_window) if cfg.sliding_window else cache_len
+    return {"attn": {
+        "k": jnp.zeros((L, batch, eff, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((L, batch, eff, cfg.n_kv_heads, hd), dtype),
+    }}
+
+
+def prefill(params, cfg: ModelConfig, tokens, embeds=None, cache_len: Optional[int] = None):
+    """Forward + cache extraction, padded/clipped to cache_len slots.
+    Logits are computed for the LAST position only (b, 1, V) — that is all a
+    serving loop samples from, and it avoids a (B,S,V) tensor at 32k."""
+    x, _, caches = forward(params, cfg, tokens, embeds=embeds, return_caches=True,
+                           return_hidden=True)
+    logits = _logits(params, cfg, x[:, -1:])
+    b = tokens.shape[0]
+    s_total = x.shape[1]
+    cache_len = cache_len or s_total
+    out = init_cache(cfg, b, cache_len)
+
+    def fit(dst, src, time_axis):
+        S = dst.shape[time_axis]
+        T = src.shape[time_axis]
+        if T >= S:  # keep the last S entries (ring semantics)
+            src = jax.lax.slice_in_dim(src, T - S, T, axis=time_axis)
+            return src.astype(dst.dtype)
+        pad = [(0, 0)] * src.ndim
+        pad[time_axis] = (0, S - T)
+        return jnp.pad(src, pad).astype(dst.dtype)
+
+    if "attn" in caches and "k" in caches["attn"]:
+        out["attn"]["k"] = fit(out["attn"]["k"], caches["attn"]["k"], 2)
+        out["attn"]["v"] = fit(out["attn"]["v"], caches["attn"]["v"], 2)
+    if "attn" in caches and "ckv" in caches["attn"]:
+        out["attn"]["ckv"] = fit(out["attn"]["ckv"], caches["attn"]["ckv"], 2)
+        out["attn"]["krope"] = fit(out["attn"]["krope"], caches["attn"]["krope"], 2)
+    if "mamba" in caches:
+        out["mamba"]["state"] = caches["mamba"]["state"].astype(jnp.float32)
+        out["mamba"]["conv"] = caches["mamba"]["conv"].astype(out["mamba"]["conv"].dtype)
+    return logits, out
+
+
+def decode_step(params, cfg: ModelConfig, cache, token, pos):
+    """token: (b, 1) int32; pos: scalar int32 — absolute position of token."""
+    x = jnp.take(params["embed"], token, axis=0)
+    if cfg.family == "ssm" or cfg.attn_every:
+        if cfg.attn_every:
+            new_mamba, new_attn = [], []
+            li = 0
+            for gi, (start, ln) in enumerate(_hybrid_groups(cfg)):
+                chunk = jax.tree.map(lambda t: jax.lax.slice_in_dim(t, start, start + ln, axis=0), params["layers"])
+                mcache = jax.tree.map(lambda t: jax.lax.slice_in_dim(t, start, start + ln, axis=0), cache["mamba"])
+                def body(xx, inp):
+                    lp, cl = inp
+                    xx, c2 = ssm_block_decode(lp, cfg, xx)
+                    return xx, c2
+                # scan over (params, cache) pairs
+                def body2(xx, inp):
+                    lp, cl = inp
+                    h, c2 = SSM.mamba2_decode(lp["mamba"], cfg, rms_norm(xx, lp["ln"], cfg.norm_eps), cl)
+                    return xx + h, c2
+                x, mc = jax.lax.scan(body2, x, (chunk, mcache))
+                acache = jax.tree.map(lambda t: t[gi], cache["attn"])
+                x, ac = attn_block_decode(params["shared_attn"], cfg, x, acache, pos)
+                new_mamba.append(mc)
+                new_attn.append(ac)
+            cache = {
+                "mamba": jax.tree.map(lambda *ts: jnp.concatenate(ts, axis=0), *new_mamba),
+                "attn": jax.tree.map(lambda *ts: jnp.stack(ts, axis=0), *new_attn),
+            }
+        else:
+            def body2(xx, inp):
+                lp, cl = inp
+                h, c2 = SSM.mamba2_decode(lp["mamba"], cfg, rms_norm(xx, lp["ln"], cfg.norm_eps), cl)
+                return xx + h, c2
+            x, mc = jax.lax.scan(body2, x, (params["layers"], cache["mamba"]))
+            cache = {"mamba": mc}
+    else:
+        def body(xx, inp):
+            lp, cl = inp
+            xx, c2 = attn_block_decode(lp, cfg, xx, cl, pos)
+            return xx, c2
+        x, kv = jax.lax.scan(body, x, (params["layers"], cache["attn"]))
+        cache = {"attn": kv}
+    logits = _logits(params, cfg, x)
+    return logits, cache

@@ -1,0 +1,34 @@
+"""Elastic scaling: re-shard a live train state onto a different mesh.
+
+When the orchestrator reports a changed device pool (node loss / scale-up),
+we rebuild the mesh, re-derive PartitionSpecs against it (divisibility guards
+adapt — e.g. a dimension that sharded 16-way may replicate on 12 devices),
+and `jax.device_put` every array onto its new sharding. The step function is
+then re-jitted against the new shardings. Data-pipeline determinism makes the
+transition exact: batch(step) is pure in (seed, step) regardless of mesh.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def make_mesh_for(devices, model_parallel: int, axis_names=("data", "model")):
+    n = len(devices)
+    model = min(model_parallel, n)
+    while n % model:
+        model -= 1
+    data = n // model
+    dev = np.asarray(devices)[: data * model].reshape(data, model)
+    return jax.sharding.Mesh(dev, axis_names)
+
+
+def remesh_state(state, new_mesh, spec_fn):
+    """spec_fn(state, mesh) -> PartitionSpec pytree for the new mesh."""
+    specs = spec_fn(state, new_mesh)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(new_mesh, s)),
+        state, specs,
+        is_leaf=lambda x: not isinstance(x, (dict, list, tuple)),
+    )

@@ -1,0 +1,106 @@
+"""Fault tolerance + straggler mitigation for the training loop.
+
+Mechanisms (all exercised by tests with injected failures):
+  * checkpoint/restart — periodic async checkpoints, atomic commit, bit-exact
+    resume (data pipeline is pure in (seed, step), so replay is deterministic)
+  * step retry      — transient step failures are retried from the last good
+    in-memory state; persistent failures trigger restore-from-checkpoint
+  * straggler watch — per-step deadline from a running median; breaches are
+    logged and surfaced to the orchestrator hook (on a real cluster this
+    triggers hot-spare swap / re-shard; here the hook is injectable)
+  * elastic scaling — on device-count change, `elastic.remesh_state` moves
+    the state onto a new mesh and re-builds the step (see elastic.py)
+"""
+from __future__ import annotations
+
+import logging
+import statistics
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+log = logging.getLogger("repro.ft")
+
+
+@dataclass
+class FaultToleranceConfig:
+    ckpt_every: int = 50
+    max_retries: int = 2
+    straggler_factor: float = 3.0
+    min_history: int = 5
+
+
+@dataclass
+class StragglerWatch:
+    factor: float = 3.0
+    min_history: int = 5
+    times: list = field(default_factory=list)
+    events: list = field(default_factory=list)
+
+    def observe(self, step: int, dt: float) -> bool:
+        is_straggler = False
+        if len(self.times) >= self.min_history:
+            med = statistics.median(self.times[-50:])
+            if dt > self.factor * med:
+                self.events.append({"step": step, "dt": dt, "median": med})
+                is_straggler = True
+        self.times.append(dt)
+        return is_straggler
+
+
+class ResilientLoop:
+    """Wraps a step function with retry + checkpoint + straggler accounting."""
+
+    def __init__(self, step_fn: Callable, state, make_batch: Callable,
+                 checkpointer=None, ft: FaultToleranceConfig = FaultToleranceConfig(),
+                 on_straggler: Optional[Callable] = None,
+                 restore_fn: Optional[Callable] = None):
+        self.step_fn = step_fn
+        self.state = state
+        self.make_batch = make_batch
+        self.ckpt = checkpointer
+        self.ft = ft
+        self.watch = StragglerWatch(ft.straggler_factor, ft.min_history)
+        self.on_straggler = on_straggler
+        self.restore_fn = restore_fn
+        self.failures: list = []
+
+    def run(self, start_step: int, num_steps: int, metrics_cb=None):
+        step = start_step
+        while step < start_step + num_steps:
+            batch = self.make_batch(step)
+            t0 = time.monotonic()
+            try:
+                self.state, metrics = self._attempt(self.state, batch, step)
+            except Exception as e:
+                # persistent failure: restore from last checkpoint and replay
+                self.failures.append({"step": step, "error": repr(e), "action": "restore"})
+                if self.restore_fn is None:
+                    raise
+                self.state, restored_step = self.restore_fn()
+                log.warning("step %d failed persistently; restored step %s", step, restored_step)
+                step = restored_step
+                continue
+            dt = time.monotonic() - t0
+            if self.watch.observe(step, dt) and self.on_straggler:
+                self.on_straggler(step, dt)
+            if metrics_cb:
+                metrics_cb(step, metrics)
+            step += 1
+            if self.ckpt is not None and step % self.ft.ckpt_every == 0:
+                self.ckpt.submit(self.state, step)
+        if self.ckpt is not None:
+            self.ckpt.submit(self.state, step)
+            self.ckpt.wait()
+        return self.state, step
+
+    def _attempt(self, state, batch, step):
+        last = None
+        for attempt in range(self.ft.max_retries + 1):
+            try:
+                return self.step_fn(state, batch)
+            except Exception as e:  # transient retry
+                last = e
+                self.failures.append({"step": step, "attempt": attempt, "error": repr(e), "action": "retry"})
+                log.warning("step %d attempt %d failed: %r", step, attempt, e)
+        raise last

@@ -1,0 +1,157 @@
+"""Train/serve step builders: loss → grads → (optionally compressed) DP
+reduction → AdamW(+ZeRO-1) update, all under pjit with explicit shardings.
+
+`build_train_step` returns (step_fn, state_shardings, batch_sharding) so the
+same builder serves the real training loop, the dry-run (AOT lowering against
+ShapeDtypeStructs) and the roofline analysis.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import sharding as SH
+from repro.models.api import abstract_params, get_api, input_specs, lm_loss
+from repro.optim import adamw, schedules
+
+
+@dataclass
+class TrainPlan:
+    cfg: ModelConfig
+    mesh: object
+    dp_axes: tuple
+    opt: adamw.AdamWConfig
+    microbatch: Optional[int] = None   # grad-accumulation microbatch (per step)
+    warmup: int = 100
+    total_steps: int = 10_000
+
+
+def state_specs(plan: TrainPlan, params_abs):
+    """Shardings for {params, opt{m,v,step}}."""
+    pspecs = SH.param_pspecs(plan.cfg, params_abs, plan.mesh, plan.dp_axes)
+    flat_p, treedef = jax.tree.flatten(params_abs)
+    flat_spec = treedef.flatten_up_to(pspecs)
+    mspecs = treedef.unflatten([
+        SH.zero1_spec(s, p.shape, plan.mesh, plan.dp_axes) for s, p in zip(flat_spec, flat_p)
+    ])
+    return {
+        "params": pspecs,
+        "opt": {"m": mspecs, "v": mspecs, "step": P()},
+    }
+
+
+def to_shardings(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_train_step(plan: TrainPlan, shape: ShapeConfig):
+    """Returns (jit_step, state_shardings, batch_shardings, abstract_state)."""
+    cfg, mesh, dp = plan.cfg, plan.mesh, plan.dp_axes
+    params_abs = abstract_params(cfg)
+    specs = state_specs(plan, params_abs)
+    opt_abs = jax.eval_shape(lambda p: adamw.init_state(p, plan.opt.moment_dtype), params_abs)
+    state_abs = {"params": params_abs, "opt": opt_abs}
+    state_sh = to_shardings(mesh, {"params": specs["params"], "opt": specs["opt"]})
+
+    batch_abs = input_specs(cfg, shape)
+    bspec = {}
+    for k, v in batch_abs.items():
+        if k == "tokens":
+            bspec[k] = SH.batch_pspec(mesh, dp, v.shape[0])
+        else:
+            bspec[k] = P(*(SH.batch_pspec(mesh, dp, v.shape[0]) + (None,) * (len(v.shape) - 2)))
+    batch_sh = {k: NamedSharding(mesh, s) for k, s in bspec.items()}
+
+    nmicro = 1
+    if plan.microbatch:
+        gb = shape.global_batch
+        assert gb % plan.microbatch == 0
+        nmicro = gb // plan.microbatch
+
+    def loss_fn(params, batch):
+        return lm_loss(params, cfg, batch)
+
+    def step(state, batch):
+        with SH.mesh_context(mesh, dp):
+            if nmicro == 1:
+                loss, grads = jax.value_and_grad(loss_fn)(state["params"], batch)
+            else:
+                def micro(i, carry):
+                    acc, ltot = carry
+                    mb = jax.tree.map(
+                        lambda t: jax.lax.dynamic_slice_in_dim(t, i * plan.microbatch, plan.microbatch, 0),
+                        batch)
+                    l, g = jax.value_and_grad(loss_fn)(state["params"], mb)
+                    return jax.tree.map(jnp.add, acc, g), ltot + l
+                zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), state["params"])
+                grads, loss = jax.lax.fori_loop(0, nmicro, micro, (zeros, 0.0))
+                grads = jax.tree.map(lambda g: g / nmicro, grads)
+                loss = loss / nmicro
+            lr_scale = schedules.cosine_with_warmup(
+                state["opt"]["step"], warmup=plan.warmup, total=plan.total_steps)
+            new_params, new_opt, metrics = adamw.apply_updates(
+                state["params"], grads, state["opt"], plan.opt, lr_scale)
+            metrics["loss"] = loss
+            return {"params": new_params, "opt": new_opt}, metrics
+
+    jit_step = jax.jit(
+        step,
+        in_shardings=(state_sh, batch_sh),
+        out_shardings=(state_sh, None),
+        donate_argnums=(0,),
+    )
+    return jit_step, state_sh, batch_sh, state_abs
+
+
+def build_serve_step(cfg: ModelConfig, mesh, dp_axes, shape: ShapeConfig,
+                     absorbed_mla: bool = False):
+    """Prefill or decode step with cache shardings (kind from `shape`)."""
+    api = get_api(cfg)
+    params_abs = abstract_params(cfg)
+    pspecs = SH.param_pspecs(cfg, params_abs, mesh, dp_axes)
+    params_sh = to_shardings(mesh, pspecs)
+    batch_abs = input_specs(cfg, shape)
+    if absorbed_mla:
+        object.__setattr__(cfg, "_absorbed_mla", True)
+
+    if shape.kind == "prefill":
+        bspec = {}
+        for k, v in batch_abs.items():
+            bspec[k] = P(*(SH.batch_pspec(mesh, dp_axes, v.shape[0]) + (None,) * (len(v.shape) - 2)))
+        batch_sh = {k: NamedSharding(mesh, s) for k, s in bspec.items()}
+
+        def prefill_step(params, batch):
+            with SH.mesh_context(mesh, dp_axes):
+                logits, cache = api.prefill(params, cfg, batch)
+                return logits[:, -1:], cache
+
+        jit_fn = jax.jit(prefill_step, in_shardings=(params_sh, batch_sh))
+        return jit_fn, params_sh, batch_sh, params_abs
+
+    # decode
+    cache_abs = batch_abs["cache"]
+    cspecs = SH.cache_pspecs(cfg, cache_abs, mesh, dp_axes, shape.global_batch)
+    cache_sh = to_shardings(mesh, cspecs)
+    tok_sh = NamedSharding(mesh, SH.batch_pspec(mesh, dp_axes, shape.global_batch))
+    pos_sh = NamedSharding(mesh, P())
+
+    def decode(params, cache, token, pos):
+        with SH.mesh_context(mesh, dp_axes):
+            logits, new_cache = api.decode_step(params, cfg, cache, token, pos)
+            return logits, new_cache
+
+    jit_fn = jax.jit(
+        decode,
+        in_shardings=(params_sh, cache_sh, tok_sh, pos_sh),
+        out_shardings=(None, cache_sh),
+        donate_argnums=(1,),
+    )
+    return jit_fn, params_sh, {"cache": cache_sh, "token": tok_sh, "pos": pos_sh}, params_abs

@@ -1,0 +1,10 @@
+"""Session guards: smoke tests and benches must see exactly ONE device —
+the 512-device XLA flag belongs to the dry-run (and to subprocess tests)
+only. A leak here would silently shard every smoke test 512 ways."""
+import jax
+
+
+def pytest_sessionstart(session):
+    assert jax.device_count() == 1, (
+        "test session must run on 1 device; XLA_FLAGS leaked: "
+        f"{jax.devices()[:4]}...")

@@ -1,0 +1,115 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward +
+one train step on CPU, asserting shapes and finiteness (assignment f)."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import SHAPES, applicable_shapes
+from repro.configs.registry import ARCH_NAMES, get_config
+from repro.models.api import get_api, input_specs, lm_loss
+
+
+def make_batch(cfg, B=2, S=16, seed=0):
+    rng = np.random.default_rng(seed)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, size=(B, S + 1)), jnp.int32)
+    if cfg.encoder_layers:
+        return {"frames": jnp.asarray(rng.normal(size=(B, S, cfg.d_model)), jnp.bfloat16), "tokens": toks}
+    if cfg.n_patches:
+        return {"embeds": jnp.asarray(rng.normal(size=(B, cfg.n_patches, cfg.d_model)), jnp.bfloat16), "tokens": toks}
+    return {"tokens": toks}
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_forward_shapes_and_finiteness(name):
+    cfg = get_config(name, smoke=True)
+    api = get_api(cfg)
+    params = api.init_params(cfg, jax.random.key(0))
+    batch = make_batch(cfg)
+    inputs = dict(batch)
+    inputs["tokens"] = batch["tokens"][:, :-1]
+    logits, aux = api.forward(params, cfg, inputs)
+    s_expect = 16 + (cfg.n_patches if (cfg.n_patches and not cfg.encoder_layers) else 0)
+    assert logits.shape == (2, s_expect, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, dtype=np.float32)).all()
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_train_step_reduces_loss(name):
+    cfg = get_config(name, smoke=True)
+    api = get_api(cfg)
+    params = api.init_params(cfg, jax.random.key(1))
+    batch = make_batch(cfg, seed=3)
+
+    @jax.jit
+    def step(p):
+        loss, g = jax.value_and_grad(lambda q: lm_loss(q, cfg, batch))(p)
+        p2 = jax.tree.map(lambda w, gw: (w.astype(jnp.float32) - 0.5 * gw.astype(jnp.float32)).astype(w.dtype), p, g)
+        return loss, p2
+
+    l0, params = step(params)
+    assert np.isfinite(float(l0))
+    for _ in range(3):
+        l1, params = step(params)
+    assert np.isfinite(float(l1))
+    assert float(l1) < float(l0)  # same batch: loss must drop
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_full_config_exactness(name):
+    """The full config matches the assignment row (never instantiated)."""
+    cfg = get_config(name)
+    rows = {
+        "internvl2-26b": (48, 6144, 48, 8, 16384, 92553),
+        "whisper-small": (12, 768, 12, 12, 3072, 51865),
+        "zamba2-7b": (81, 3584, 32, 32, 14336, 32000),
+        "qwen2.5-3b": (36, 2048, 16, 2, 11008, 151936),
+        "h2o-danube-1.8b": (24, 2560, 32, 8, 6912, 32000),
+        "deepseek-7b": (30, 4096, 32, 32, 11008, 102400),
+        "minitron-4b": (32, 3072, 24, 8, 9216, 256000),
+        "mamba2-130m": (24, 768, 0, 0, 0, 50280),
+        "qwen3-moe-235b-a22b": (94, 4096, 64, 4, 1536, 151936),
+        "deepseek-v2-lite-16b": (27, 2048, 16, 16, 1408, 102400),
+    }
+    L, d, h, kv, ff, v = rows[name]
+    assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff, cfg.vocab) == (L, d, h, kv, ff, v)
+
+
+def test_param_counts_match_published():
+    checks = {
+        "qwen3-moe-235b-a22b": (235e9, 0.03),
+        "deepseek-7b": (6.9e9, 0.1),
+        "zamba2-7b": (7.0e9, 0.1),
+        "mamba2-130m": (130e6, 0.15),
+    }
+    for name, (want, tol) in checks.items():
+        got = get_config(name).param_count()
+        assert abs(got - want) / want < tol, (name, got)
+    active = get_config("qwen3-moe-235b-a22b").param_count(active_only=True)
+    assert abs(active - 22e9) / 22e9 < 0.05
+
+
+def test_moe_active_lt_total():
+    cfg = get_config("qwen3-moe-235b-a22b")
+    assert cfg.param_count(True) < 0.15 * cfg.param_count()
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_input_specs_all_shapes(name):
+    cfg = get_config(name, smoke=False)
+    app = applicable_shapes(cfg)
+    assert len(app) == 4
+    for sh_name, status in app.items():
+        if status != "run":
+            assert sh_name == "long_500k" and not cfg.subquadratic
+            continue
+        specs = input_specs(cfg, SHAPES[sh_name])
+        leaves = jax.tree.leaves(specs)
+        assert all(hasattr(l, "shape") for l in leaves)
+
+
+def test_long_500k_applicability_set():
+    runs = [n for n in ARCH_NAMES if applicable_shapes(get_config(n))["long_500k"] == "run"]
+    assert set(runs) == {"zamba2-7b", "h2o-danube-1.8b", "mamba2-130m"}

@@ -1,0 +1,122 @@
+"""Unit tests for the optimal pairwise hierarchical encoding DP."""
+import numpy as np
+
+from repro.core import encode_dp
+from repro.core.encode_dp import TreeView, encode_pair, encode_self, flat_pair_cost
+
+
+def two_level_tree(root_gid, children, n_leaves):
+    return TreeView(root_gid, children, n_leaves)
+
+
+def test_complete_bipartite_single_pedge():
+    # A = {0,1} (supernode 4), B = {2,3} (supernode 5), complete bipartite
+    children = {4: [0, 1], 5: [2, 3]}
+    ta, tb = TreeView(4, children, 4), TreeView(5, children, 4)
+    pa = np.array([0, 0, 1, 1])
+    pb = np.array([0, 1, 0, 1])
+    cost, edges = encode_pair(ta, tb, pa, pb)
+    assert cost == 1
+    assert edges == [(4, 5, 1)]
+
+
+def test_empty_pair_no_edges():
+    children = {4: [0, 1], 5: [2, 3]}
+    ta, tb = TreeView(4, children, 4), TreeView(5, children, 4)
+    cost, edges = encode_pair(ta, tb, np.zeros(0, int), np.zeros(0, int))
+    assert cost == 0 and edges == []
+
+
+def test_single_edge_lands_on_leaves():
+    """Tie-break prefers descending: one edge is encoded at leaf level so the
+    internal nodes stay edge-free and prunable."""
+    children = {4: [0, 1], 5: [2, 3]}
+    ta, tb = TreeView(4, children, 4), TreeView(5, children, 4)
+    cost, edges = encode_pair(ta, tb, np.array([0]), np.array([1]))
+    assert cost == 1
+    assert edges == [(0, 3, 1)]
+
+
+def test_almost_complete_uses_negative_correction():
+    # complete bipartite 3x3 minus one edge: p-edge + 1 n-edge = 2 < 8
+    children = {6: [0, 1, 2], 7: [3, 4, 5]}
+    ta, tb = TreeView(6, children, 6), TreeView(7, children, 6)
+    pairs = [(i, j) for i in range(3) for j in range(3) if not (i == 2 and j == 2)]
+    pa = np.array([p[0] for p in pairs])
+    pb = np.array([p[1] for p in pairs])
+    cost, edges = encode_pair(ta, tb, pa, pb)
+    assert cost == 2
+    assert (6, 7, 1) in edges
+    assert (2, 5, -1) in edges
+
+
+def test_hierarchical_block_correction():
+    """Fig. 2 regime: A = {0,1,2} ∪ child {3,4,5}; all of A connects to b
+    except the child block — DP places p(A,b) + n(child,b): cost 2, strictly
+    better than the flat model's 3 leaf corrections."""
+    children = {7: [0, 1, 2, 8], 8: [3, 4, 5]}
+    ta = TreeView(7, children, 7)
+    tb = TreeView(6, {}, 7)  # singleton leaf 6
+    cost, edges = encode_pair(ta, tb, np.array([0, 1, 2]), np.array([0, 0, 0]))
+    assert cost == 2
+    assert set(edges) == {(7, 6, 1), (8, 6, -1)}
+    assert cost < flat_pair_cost(3, 6, 1)
+
+
+def test_self_clique():
+    children = {4: [0, 1, 2, 3][:2] + [5], 5: [2, 3]}
+    children = {4: [0, 1, 5], 5: [2, 3]}
+    tv = TreeView(4, children, 4)
+    # complete graph on 4 leaves: all 6 pairs
+    pu, pv = np.triu_indices(4, k=1)
+    cost, edges = encode_self(tv, pu, pv)
+    assert cost == 1
+    assert edges == [(4, 4, 1)]
+
+
+def test_self_two_cliques_no_cross():
+    children = {6: [4, 5], 4: [0, 1], 5: [2, 3]}
+    tv = TreeView(6, children, 4)
+    # edges: (0,1) and (2,3) only -> two child self-loops or leaf edges, cost 2
+    cost, edges = encode_self(tv, np.array([0, 2]), np.array([1, 3]))
+    assert cost == 2
+
+
+def test_dp_never_worse_than_flat():
+    rng = np.random.default_rng(0)
+    for trial in range(30):
+        # random binary tree over 8 leaves on both sides
+        def rand_tree(base):
+            ids = list(range(base, base + 8))
+            nxt = base + 100
+            children = {}
+            while len(ids) > 1:
+                a = ids.pop(rng.integers(0, len(ids)))
+                b = ids.pop(rng.integers(0, len(ids)))
+                children[nxt] = [a, b]
+                ids.append(nxt)
+                nxt += 1
+            return ids[0], children
+        ra, ca = rand_tree(0)
+        rb, cb = rand_tree(8)
+        children = {**ca, **cb}
+        ta, tb = TreeView(ra, children, 16), TreeView(rb, children, 16)
+        mask = rng.random((8, 8)) < rng.random()
+        pa, pb = np.nonzero(mask)
+        cost, edges = encode_pair(ta, tb, pa, pb)
+        assert cost <= flat_pair_cost(int(mask.sum()), 8, 8)
+        # verify the emitted encoding reproduces the exact bipartite pattern
+        acc = np.zeros((16, 16))
+        leaves_a = ta.leaf_order(children, 16)
+        leaves_b = tb.leaf_order(children, 16)
+        span = {}
+        for tv in (ta, tb):
+            lo_leaves = tv.leaf_order(children, 16)
+            for i, gid in enumerate(tv.gid):
+                span[gid] = lo_leaves[tv.lo[i]:tv.hi[i]]
+        for (x, y, s) in edges:
+            for u in span[x]:
+                for v in span[y]:
+                    acc[u, v] += s
+        got = acc[np.ix_(leaves_a, leaves_b)] > 0
+        assert np.array_equal(got, mask)

@@ -1,0 +1,87 @@
+"""Property tests: SLUGGER is lossless on arbitrary graphs (the paper's
+central claim), and its cost never exceeds the trivial encoding |E|."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import baselines, summarize
+from repro.graphs import generators as GG
+from repro.graphs.csr import Graph
+
+
+@st.composite
+def random_graphs(draw):
+    n = draw(st.integers(min_value=1, max_value=36))
+    density = draw(st.floats(min_value=0.0, max_value=0.6))
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    rng = np.random.default_rng(seed)
+    k = int(n * n * density)
+    if k == 0:
+        return Graph.from_edges(n, np.zeros((0, 2), dtype=np.int64))
+    e = rng.integers(0, n, size=(k, 2))
+    return Graph.from_edges(n, e)
+
+
+@settings(max_examples=40, deadline=None)
+@given(g=random_graphs(), T=st.integers(min_value=1, max_value=6))
+def test_slugger_lossless(g, T):
+    s = summarize(g, T=T, seed=1)
+    assert s.validate_lossless(g)
+    assert s.cost() <= max(g.m, 0) or g.m == 0
+
+
+@settings(max_examples=15, deadline=None)
+@given(g=random_graphs())
+def test_slugger_no_prune_lossless(g):
+    s = summarize(g, T=3, seed=2, prune_steps=())
+    assert s.validate_lossless(g)
+
+
+@settings(max_examples=15, deadline=None)
+@given(g=random_graphs(), hb=st.integers(min_value=1, max_value=4))
+def test_slugger_height_bound(g, hb):
+    s = summarize(g, T=3, seed=3, height_bound=hb)
+    assert s.validate_lossless(g)
+    heights = s.tree_heights()
+    assert all(h <= hb for h in heights)
+
+
+@settings(max_examples=15, deadline=None)
+@given(g=random_graphs())
+def test_partial_decompression_matches(g):
+    s = summarize(g, T=3, seed=4)
+    for u in range(min(g.n, 12)):
+        assert set(s.neighbors(u)) == set(int(x) for x in g.neighbors(u))
+
+
+@settings(max_examples=10, deadline=None)
+@given(g=random_graphs())
+def test_baselines_lossless(g):
+    for fn in (lambda: baselines.sweg(g, T=3, seed=5),
+               lambda: baselines.randomized(g, seed=5, max_steps=200),
+               lambda: baselines.sags_like(g, seed=5)):
+        s = fn()
+        assert s.validate_lossless(g)
+
+
+def test_structured_graphs_lossless():
+    cases = [
+        GG.planted_hierarchy((3, 3), 5, (0.02, 0.3, 0.95), seed=7),
+        GG.caveman(10, 6, 0.05, seed=8),
+        GG.barabasi_albert(120, 3, seed=9),
+        GG.star_of_cliques(20, 6, seed=10),
+        GG.bipartite_nested(32, 31, 5),
+        GG.rmat(8, 4, seed=11),
+    ]
+    for g in cases:
+        s = summarize(g, T=8, seed=0)
+        assert s.validate_lossless(g)
+        assert s.relative_size(g) <= 1.0
+
+
+def test_hierarchy_beats_flat_on_nested_structure():
+    """Theorem-1 regime: hierarchical model strictly better than flat SWEG."""
+    g = GG.bipartite_nested(64, 63, levels=6)
+    s = summarize(g, T=20, seed=0)
+    sw = baselines.sweg(g, T=20, seed=0)
+    assert s.cost() < sw.cost()

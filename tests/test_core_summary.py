@@ -1,0 +1,70 @@
+"""Unit tests for the hierarchical graph summarization model (Sect. II-B)."""
+import numpy as np
+import pytest
+
+from repro.core.summary import Summary
+from repro.graphs.csr import Graph
+
+
+def paper_fig2_summary():
+    """The paper's Fig. 2 final state: supernode {0,1,2,3} contains {2,3};
+    p-edge ({0,1,2,3}, {5}) and n-edge ({2,3}, {5})."""
+    # ids: leaves 0..5, supernode 6 = {2,3}, supernode 7 = {0,1,2,3}
+    parent = np.array([7, 7, 6, 6, -1, -1, 7, -1], dtype=np.int64)
+    edges = np.array([[5, 7, 1], [5, 6, -1]], dtype=np.int64)
+    return Summary(n_leaves=6, parent=parent, edges=edges)
+
+
+def test_fig2_interpretation():
+    s = paper_fig2_summary()
+    g = s.decompress()
+    assert g.edge_set() == {(0, 5), (1, 5)}
+
+
+def test_fig2_partial_decompression():
+    s = paper_fig2_summary()
+    assert set(s.neighbors(5)) == {0, 1}
+    assert set(s.neighbors(0)) == {5}
+    assert set(s.neighbors(2)) == set()
+    assert set(s.neighbors(4)) == set()
+
+
+def test_fig2_cost():
+    s = paper_fig2_summary()
+    # |P+| = 1, |P-| = 1, |H| = 5 ({0,1,6}->7 is 3 edges, {2,3}->6 is 2)
+    assert s.num_pos == 1 and s.num_neg == 1 and s.num_h == 5
+    assert s.cost() == 7
+
+
+def test_more_pos_than_neg_rule():
+    """Edge exists iff #p-edges > #n-edges between ancestor pairs."""
+    # leaves 0,1 under supernode 2; p-edge (2,2) with n-edge (0,1) cancels
+    parent = np.array([2, 2, -1], dtype=np.int64)
+    edges = np.array([[2, 2, 1], [0, 1, -1]], dtype=np.int64)
+    s = Summary(n_leaves=2, parent=parent, edges=edges)
+    assert s.decompress().edge_set() == set()
+
+
+def test_self_loop_supernode():
+    # clique {0,1,2} as one p self-loop
+    parent = np.array([3, 3, 3, -1], dtype=np.int64)
+    edges = np.array([[3, 3, 1]], dtype=np.int64)
+    s = Summary(n_leaves=3, parent=parent, edges=edges)
+    assert s.decompress().edge_set() == {(0, 1), (0, 2), (1, 2)}
+    assert set(s.neighbors(0)) == {1, 2}
+
+
+def test_stats_shapes():
+    s = paper_fig2_summary()
+    g = s.decompress()
+    st = s.stats(g)
+    assert st["max_height"] == 2
+    assert st["cost"] == 7
+    assert 0 < st["avg_leaf_depth"] <= 2
+
+
+def test_empty_graph():
+    s = Summary(n_leaves=4, parent=np.full(4, -1, dtype=np.int64), edges=np.zeros((0, 3), dtype=np.int64))
+    assert s.cost() == 0
+    g = s.decompress()
+    assert g.m == 0 and g.n == 4

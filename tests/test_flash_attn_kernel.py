@@ -1,0 +1,68 @@
+"""Pallas flash attention kernel vs the pure-jnp oracle (interpret mode),
+and vs the XLA chunked_sdpa twin — shape/dtype sweeps per deliverable (c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attn.kernel import flash_attention_bhsd
+from repro.kernels.flash_attn.ops import flash_attention
+from repro.kernels.flash_attn.ref import attention_ref
+
+
+def _mk(b, h, hkv, s, d, dtype, seed=0):
+    ks = jax.random.split(jax.random.key(seed), 3)
+    q = jax.random.normal(ks[0], (b, h, s, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (b, hkv, s, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (b, hkv, s, d), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("dtype,atol", [(jnp.float32, 2e-5), (jnp.bfloat16, 2e-2)])
+@pytest.mark.parametrize("s,bq,bk", [(128, 32, 32), (256, 64, 32), (128, 128, 128)])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 64), (False, 0)])
+def test_flash_matches_ref(dtype, atol, s, bq, bk, causal, window):
+    b, h, hkv, d = 2, 4, 2, 32
+    q, k, v = _mk(b, h, hkv, s, d, dtype)
+    out = flash_attention_bhsd(q, k, v, causal=causal, window=window,
+                               bq=bq, bk=bk, interpret=True)
+    ref = attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=atol, rtol=1e-2)
+
+
+def test_flash_wrapper_matches_chunked_sdpa():
+    """The Pallas kernel and its pure-XLA twin agree bit-for-bit-ish."""
+    from repro.models.attention import chunked_sdpa
+    b, s, hkv, g, d = 2, 128, 2, 3, 32
+    ks = jax.random.split(jax.random.key(7), 3)
+    q = jax.random.normal(ks[0], (b, s, hkv, g, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, hkv, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, hkv, d), jnp.float32)
+    out_k = flash_attention(q, k, v, causal=True, bq=32, bk=32, interpret=True)
+    out_x = chunked_sdpa(q, k, v, causal=True, chunk=32)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_x), atol=3e-5, rtol=1e-4)
+
+
+def test_flash_single_block_noncausal():
+    b, h, hkv, s, d = 1, 2, 1, 64, 64
+    q, k, v = _mk(b, h, hkv, s, d, jnp.float32, seed=3)
+    out = flash_attention_bhsd(q, k, v, causal=False, bq=64, bk=64, interpret=True)
+    ref = attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=1e-4)
+
+
+def test_model_forward_with_pallas_attn_matches_default():
+    """End-to-end: a smoke transformer with attn_impl=pallas_flash (interpret)
+    produces the same logits as the default XLA-chunked path."""
+    import dataclasses
+    from repro.configs.registry import get_config
+    from repro.models import transformer as T
+
+    cfg = dataclasses.replace(get_config("qwen2.5-3b", smoke=True), dtype="float32")
+    params = T.init_params(cfg, jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 16), 0, cfg.vocab)
+    base, _, _ = T.forward(params, cfg, toks)
+    cfg2 = dataclasses.replace(cfg, attn_impl="pallas_flash")
+    out, _, _ = T.forward(params, cfg2, toks)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(base), atol=2e-4, rtol=1e-3)

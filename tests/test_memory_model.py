@@ -1,0 +1,50 @@
+"""Analytic HBM model sanity: shard factors + breakdown behave as expected."""
+import numpy as np
+import jax
+import pytest
+
+from repro.configs.base import SHAPES, ShapeConfig
+from repro.configs.registry import get_config
+from repro.launch.memory_model import _shard_factor, analytic_hbm
+from jax.sharding import PartitionSpec as P
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # 1-device mesh with the production axis names (sizes 1 keep math trivial
+    # but exercise the full code path)
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def test_shard_factor(mesh):
+    assert _shard_factor(P("data", None), (8, 4), mesh) == 1  # size-1 axes
+    m2 = jax.make_mesh((jax.device_count(),), ("data",))
+    n = jax.device_count()
+    assert _shard_factor(P("data"), (n * 4,), m2) == n
+    assert _shard_factor(P("data"), (n * 4 + 1,), m2) == 1  # non-divisible
+
+
+def test_train_breakdown_has_all_terms(mesh):
+    cfg = get_config("deepseek-7b", smoke=True)
+    out = analytic_hbm(cfg, SHAPES["train_4k"], mesh, ("data",))
+    for k in ("params", "opt_moments", "grads_f32", "saved_residuals",
+              "recompute_peak", "ce_chunk", "total"):
+        assert k in out and out[k] >= 0
+    # moments are 8 bytes/param vs 2 for bf16 params (both unsharded here)
+    assert out["opt_moments"] == pytest.approx(4 * out["params"], rel=0.01)
+    assert out["grads_f32"] == pytest.approx(2 * out["params"], rel=0.01)
+
+
+def test_microbatch_scales_residuals(mesh):
+    cfg = get_config("deepseek-7b", smoke=True)
+    sh = ShapeConfig("t", 128, 32, "train")
+    full = analytic_hbm(cfg, sh, mesh, ("data",), microbatch=32)
+    half = analytic_hbm(cfg, sh, mesh, ("data",), microbatch=8)
+    assert half["saved_residuals"] == pytest.approx(full["saved_residuals"] / 4)
+
+
+def test_decode_counts_cache(mesh):
+    cfg = get_config("qwen2.5-3b", smoke=True)
+    out = analytic_hbm(cfg, ShapeConfig("d", 256, 8, "decode"), mesh, ("data",))
+    assert out["kv_cache"] > 0
+    assert out["total"] >= out["kv_cache"]

@@ -1,0 +1,133 @@
+"""Serving-path correctness: prefill + step-by-step decode must reproduce the
+full teacher-forced forward pass (per family, in float32 for tight bounds)."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.registry import get_config
+from repro.models.api import get_api
+
+FAMILIES = {
+    "dense-gqa": "deepseek-7b",
+    "dense-swa": "h2o-danube-1.8b",
+    "gqa-bias": "qwen2.5-3b",
+    "mla-moe": "deepseek-v2-lite-16b",
+    "ssm": "mamba2-130m",
+    "hybrid": "zamba2-7b",
+}
+
+
+def f32(cfg):
+    cfg = dataclasses.replace(cfg, dtype="float32", remat="none")
+    if cfg.moe is not None:
+        # capacity dropping is a function of the *total* token count, so it is
+        # not causal; give full capacity so prefill/decode match teacher forcing
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=float(cfg.moe.n_experts)))
+    return cfg
+
+
+def _decode_vs_full(cfg, prompt_len=6, total_len=12, atol=2e-2):
+    api = get_api(cfg)
+    params = api.init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, size=(2, total_len)), jnp.int32)
+    from repro.models import transformer as T
+
+    full_logits, _, _ = T.forward(params, cfg, toks)
+    logits_pre, cache = T.prefill(params, cfg, toks[:, :prompt_len], cache_len=total_len)
+    # prefill returns LAST-position logits only (b, 1, V)
+    np.testing.assert_allclose(
+        np.asarray(logits_pre[:, -1], np.float32),
+        np.asarray(full_logits[:, prompt_len - 1], np.float32), atol=atol, rtol=0
+    )
+    for pos in range(prompt_len, total_len):
+        step_logits, cache = T.decode_step(params, cfg, cache, toks[:, pos : pos + 1], jnp.int32(pos))
+        np.testing.assert_allclose(
+            np.asarray(step_logits[:, 0], np.float32),
+            np.asarray(full_logits[:, pos], np.float32),
+            atol=atol, rtol=0,
+            err_msg=f"pos={pos}",
+        )
+
+
+@pytest.mark.parametrize("fam", ["dense-gqa", "gqa-bias", "mla-moe"])
+def test_decode_matches_full_attention(fam):
+    cfg = f32(get_config(FAMILIES[fam], smoke=True))
+    _decode_vs_full(cfg)
+
+
+def test_decode_matches_full_ssm():
+    cfg = f32(get_config(FAMILIES["ssm"], smoke=True))
+    _decode_vs_full(cfg, atol=5e-2)
+
+
+def test_decode_matches_full_hybrid():
+    cfg = f32(get_config(FAMILIES["hybrid"], smoke=True))
+    _decode_vs_full(cfg, atol=5e-2)
+
+
+def test_decode_matches_full_swa():
+    # window smaller than sequence: ring cache must still match full forward
+    cfg = f32(get_config(FAMILIES["dense-swa"], smoke=True))
+    assert cfg.sliding_window == 8
+    _decode_vs_full(cfg, prompt_len=4, total_len=14)
+
+
+def test_decode_matches_full_encdec():
+    cfg = f32(get_config("whisper-small", smoke=True))
+    from repro.models import encdec as E
+
+    params = E.init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(1)
+    frames = jnp.asarray(rng.normal(size=(2, 10, cfg.d_model)), jnp.float32)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, size=(2, 12)), jnp.int32)
+    full_logits, _, _ = E.forward(params, cfg, frames, toks)
+    logits_pre, cache = E.prefill(params, cfg, frames, toks[:, :6], cache_len=12)
+    np.testing.assert_allclose(np.asarray(logits_pre[:, -1], np.float32),
+                               np.asarray(full_logits[:, 5], np.float32), atol=2e-2, rtol=0)
+    for pos in range(6, 12):
+        step_logits, cache = E.decode_step(params, cfg, cache, toks[:, pos : pos + 1], jnp.int32(pos))
+        np.testing.assert_allclose(np.asarray(step_logits[:, 0], np.float32),
+                                   np.asarray(full_logits[:, pos], np.float32), atol=2e-2, rtol=0)
+
+
+def test_mla_absorbed_decode_matches_naive():
+    """§Perf optimization: absorbed-MLA decode is numerically equivalent."""
+    cfg = f32(get_config("deepseek-v2-lite-16b", smoke=True))
+    from repro.models import attention as A
+
+    p = A.init_mla(jax.random.key(2), cfg, jnp.float32)
+    rng = np.random.default_rng(2)
+    b, S = 2, 8
+    cache = {
+        "ckv": jnp.asarray(rng.normal(size=(b, S, cfg.mla.kv_lora_rank)), jnp.float32),
+        "krope": jnp.asarray(rng.normal(size=(b, S, cfg.mla.qk_rope_head_dim)), jnp.float32),
+    }
+    x = jnp.asarray(rng.normal(size=(b, 1, cfg.d_model)), jnp.float32)
+    pos = jnp.int32(5)
+    out1, c1 = A.mla_decode(p, cfg, x, cache, pos)
+    out2, c2 = A.mla_decode_absorbed(p, cfg, x, cache, pos)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(c1["ckv"]), np.asarray(c2["ckv"]), atol=1e-5, rtol=0)
+
+
+def test_ssd_chunk_invariance():
+    """Chunked SSD must be invariant to the chunk size (algebraic identity)."""
+    from repro.models.ssm import ssd_chunked
+
+    rng = np.random.default_rng(3)
+    b, s, nh, hp, g, ds = 2, 16, 4, 8, 1, 8
+    xh = jnp.asarray(rng.normal(size=(b, s, nh, hp)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.1, 0.9, size=(b, s, nh)), jnp.float32)
+    A_ = -jnp.asarray(rng.uniform(0.1, 1.0, size=(nh,)), jnp.float32)
+    B = jnp.asarray(rng.normal(size=(b, s, g, ds)), jnp.float32)
+    C = jnp.asarray(rng.normal(size=(b, s, g, ds)), jnp.float32)
+    y4, h4 = ssd_chunked(xh, dt, A_, B, C, chunk=4)
+    y16, h16 = ssd_chunked(xh, dt, A_, B, C, chunk=16)
+    y5, h5 = ssd_chunked(xh, dt, A_, B, C, chunk=5)  # non-divisible
+    np.testing.assert_allclose(np.asarray(y4), np.asarray(y16), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(y4), np.asarray(y5), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h4), np.asarray(h16), atol=1e-4, rtol=1e-4)

@@ -1,0 +1,40 @@
+"""End-to-end train-loop tests: loss goes down; crash→resume is bit-exact."""
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.launch.train import main as train_main
+
+
+def test_train_loss_decreases(tmp_path):
+    losses = train_main([
+        "--arch", "mamba2-130m", "--smoke", "--steps", "30",
+        "--batch", "4", "--seq", "32", "--ckpt-dir", str(tmp_path),
+        "--ckpt-every", "1000", "--lr", "1e-3",
+    ])
+    assert losses[-1] < losses[0]
+
+
+def test_train_resume_bit_exact(tmp_path):
+    d1, d2 = str(tmp_path / "a"), str(tmp_path / "b")
+    # uninterrupted run of 20 steps
+    full = train_main([
+        "--arch", "qwen2.5-3b", "--smoke", "--steps", "20",
+        "--batch", "4", "--seq", "32", "--ckpt-dir", d1,
+        "--ckpt-every", "10", "--seed", "3",
+    ])
+    # interrupted: 10 steps (checkpoint), then resume for the remaining 10
+    train_main([
+        "--arch", "qwen2.5-3b", "--smoke", "--steps", "10",
+        "--batch", "4", "--seq", "32", "--ckpt-dir", d2,
+        "--ckpt-every", "10", "--seed", "3",
+    ])
+    resumed = train_main([
+        "--arch", "qwen2.5-3b", "--smoke", "--steps", "20",
+        "--batch", "4", "--seq", "32", "--ckpt-dir", d2,
+        "--ckpt-every", "10", "--seed", "3", "--resume",
+    ])
+    # the resumed tail must match the uninterrupted run step-for-step
+    np.testing.assert_allclose(np.array(resumed), np.array(full[10:]), rtol=1e-5)
