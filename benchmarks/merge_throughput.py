@@ -1,0 +1,91 @@
+"""Merge-phase throughput: seed per-group loop vs the batched engine.
+
+Times ONLY the merging hot path (candidate generation + Algorithm-2 sweeps,
+no emission/pruning) on a generator graph, reporting merges/sec and
+groups/sec per engine plus the speedup over the ``loop`` baseline. Artifact:
+``BENCH_merge.json`` — the perf trajectory the ROADMAP tracks.
+
+  PYTHONPATH=src python -m benchmarks.merge_throughput [--quick] [--full]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import fmt_table, save_result
+from repro.core.merging import process_group, process_groups
+from repro.core.minhash import candidate_groups
+from repro.core.slugger import SluggerState
+from repro.graphs import generators as GG
+
+ENGINES = ("loop", "numpy", "batched")
+
+
+def _merge_phase(g, backend: str, T: int, seed: int = 0, max_group: int = 500):
+    state = SluggerState(g)
+    rng = np.random.default_rng(seed)
+    merges = groups_n = 0
+    t0 = time.perf_counter()
+    for t in range(1, T + 1):
+        theta = 0.0 if t == T else 1.0 / (1 + t)
+        groups = candidate_groups(g, state.root_of, state.alive,
+                                  seed=seed * 7919 + t, max_group=max_group)
+        groups_n += len(groups)
+        if backend == "loop":
+            for grp in groups:
+                merges += process_group(state, grp, theta, rng)
+        else:
+            merges += process_groups(state, groups, theta, rng, backend=backend)
+    dt = time.perf_counter() - t0
+    return {
+        "sec": dt,
+        "merges": merges,
+        "groups": groups_n,
+        "merges_per_s": merges / dt,
+        "groups_per_s": groups_n / dt,
+        "roots_left": int(state.alive.size),
+    }
+
+
+def run(quick: bool = True):
+    if quick:
+        graphs = [("caveman-55k", GG.caveman(1000, 11, 0.03, seed=0), 5)]
+    else:
+        graphs = [
+            ("caveman-55k", GG.caveman(1000, 11, 0.03, seed=0), 10),
+            ("rmat-210k", GG.rmat(15, 8, seed=3), 10),
+            ("ba-60k", GG.barabasi_albert(20000, 3, seed=1), 10),
+        ]
+    rows, payload = [], {}
+    for name, g, T in graphs:
+        res = {be: _merge_phase(g, be, T=T) for be in ENGINES}
+        base = res["loop"]["sec"]
+        for be in ENGINES:
+            r = res[be]
+            r["speedup_vs_loop"] = base / r["sec"]
+            rows.append([
+                name, g.m, be, f"{r['sec']:.2f}s", r["merges"],
+                f"{r['merges_per_s']:.0f}", f"{r['groups_per_s']:.0f}",
+                f"{r['speedup_vs_loop']:.2f}x",
+            ])
+        payload[name] = {"m": g.m, "T": T, "engines": res}
+    print("\n== Merge throughput: seed loop vs batched engine ==")
+    print(fmt_table(rows, ["graph", "m", "engine", "time", "merges",
+                           "merges/s", "groups/s", "speedup"]))
+    save_result("BENCH_merge", payload)
+    return payload
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--quick", action="store_true", help="one small graph (default)")
+    mode.add_argument("--full", action="store_true", help="paper-scale graph set")
+    args = ap.parse_args(argv)
+    run(quick=not args.full)
+
+
+if __name__ == "__main__":
+    main()

@@ -29,6 +29,11 @@ from repro.graphs.csr import Graph
 
 MAXU = jnp.uint32(0xFFFFFFFF)
 
+try:  # jax ≥ 0.4.38 re-exports shard_map at the top level
+    _shard_map = jax.shard_map
+except AttributeError:  # older jax: experimental location
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 
 def _hash_u32(x, a, b):
     h = x.astype(jnp.uint32) * jnp.uint32(a) + jnp.uint32(b)
@@ -66,7 +71,7 @@ def shingles_sharded(mesh, data_axes=("data",)):
     def fn(src, dst, n, a, b):
         h_self = _hash_u32(jnp.arange(n, dtype=jnp.uint32), a, b)
         edge_spec = P(data_axes if len(data_axes) > 1 else data_axes[0])
-        return jax.shard_map(
+        return _shard_map(
             functools.partial(_local, a=a, b=b),
             mesh=mesh,
             in_specs=(edge_spec, edge_spec, P(None)),
@@ -197,7 +202,7 @@ def summarize_jax(
     rng = np.random.default_rng(seed)
     for t in range(1, T + 1):
         theta = 0.0 if t == T else 1.0 / (1 + t)
-        alive = np.fromiter(state.alive, dtype=np.int64)
+        alive = state.alive
         groups = candidate_groups(g, state.root_of, alive, seed=seed * 31337 + t, max_group=max_group)
         if not groups:
             continue

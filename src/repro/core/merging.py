@@ -1,60 +1,77 @@
 """Merging step (Algorithm 2): greedy in-group merging by Saving (Eq. 8).
 
-Per candidate set we build dense group-local count matrices once, then run the
-paper's loop: pick a random root A, find the best partner B, merge when
-``Saving(A, B) ≥ θ(t)``. Partner search is accelerated exactly as the paper
-describes ("rapidly and effectively samples promising node pairs"): a packed-
-bitmap Jaccard pass ranks partners (this is what `kernels/bitset_jaccard`
-computes on TPU), and the exact Saving — flat 2-level cost, the same estimate
-SWEG uses; the hierarchy's benefit is realized by the optimal encoding DP at
-emission time — is evaluated only for the top-J.
+Two engines share the group-local dense view (`GroupWorkspace`):
+
+* `process_group` — the original sequential loop: pick a random root A, rank
+  partners by packed-bitmap Jaccard, evaluate the exact Saving for the top-J,
+  merge when ``Saving(A, B) ≥ θ(t)``. Kept as the benchmark baseline.
+
+* `process_groups` — the batched group-merge engine (DESIGN.md §3): groups
+  are size-bucketed, their neighbor bitmaps packed into one ``(B, G, W)``
+  uint32 batch, and ALL pairwise Jaccard rankings computed in a single
+  vmap'd dispatch of `kernels/bitset_jaccard.pairwise_intersection_kernel`
+  (``backend="batched"``) or a chunked NumPy popcount (``backend="numpy"``).
+  Each group then runs vectorized Algorithm-2 sweeps: every alive row's
+  top-J partners are scored by the exact Saving in one array op, and a
+  conflict-free random subset of the proposed mergers is applied per round.
+
+The Saving is the flat 2-level cost estimate SWEG uses; the hierarchy's
+benefit is realized by the optimal encoding DP at emission time, which also
+makes every engine lossless by construction regardless of merge order.
 """
 from __future__ import annotations
 
 import numpy as np
 
+from repro.core.bitops import popcount
+
 
 def _pair_cost(cnt, poss):
-    """min(cnt, poss − cnt + 1) masked at cnt == 0 (vectorized)."""
-    return np.where(cnt > 0, np.minimum(cnt, poss - cnt + 1), 0.0)
+    """min(cnt, poss − cnt + 1), which is 0 at cnt == 0 (vectorized).
+
+    Valid inputs satisfy 0 ≤ cnt ≤ poss, so poss − cnt + 1 ≥ 1 and the
+    single `minimum` already lands on 0 for absent pairs — no mask needed.
+    """
+    return np.minimum(cnt, poss - cnt + 1)
 
 
 class GroupWorkspace:
-    """Dense group-local view: rows = group members, cols = neighbor roots."""
+    """Dense group-local view: rows = group members, cols = neighbor roots.
 
-    def __init__(self, state, group: list):
+    Construction is one `state.gather_rows` + `np.unique` — no Python loops
+    over adjacency. Columns are the union of the members and their (resolved)
+    neighbor roots, in sorted-id order; members always own a column.
+    """
+
+    def __init__(self, state, group):
         self.state = state
-        self.members = list(group)  # global root ids (updated in place on merge)
-        k = len(group)
-        cols: dict = {}
-        for r in group:
-            cols.setdefault(int(r), len(cols))
-        for r in group:
-            for c in state.adj[int(r)]:
-                cols.setdefault(int(c), len(cols))
-        self.colid = cols
-        R = len(cols)
-        self.col_gid = np.zeros(R, dtype=np.int64)
-        for gid, j in cols.items():
-            self.col_gid[j] = gid
+        members = np.asarray(group, dtype=np.int64)
+        k = members.size
+        self.members = members.tolist()  # global root ids (updated on merge)
+        seg, nbr, cnt = state.gather_rows(members)
+        ids = np.concatenate([members, nbr])
+        uniq, inv = np.unique(ids, return_inverse=True)
+        R = uniq.size
+        self.col_gid = uniq.astype(np.int64)
+        self.colid = {int(gid): j for j, gid in enumerate(uniq)}
+        self.memcol = inv[:k].astype(np.int64)
+        colidx = inv[k:].astype(np.int64)
         self.CNT = np.zeros((k, R), dtype=np.float64)
-        for i, r in enumerate(group):
-            for c, v in state.adj[int(r)].items():
-                self.CNT[i, cols[int(c)]] = v
-        self.s = np.array([state.size[int(r)] for r in group], dtype=np.float64)
-        self.colsize = np.array([state.size[int(g)] for g in self.col_gid], dtype=np.float64)
-        self.selfc = np.array([state.selfcnt[int(r)] for r in group], dtype=np.float64)
-        self.nd = np.array([state.ndesc[int(r)] for r in group], dtype=np.float64)
-        self.hgt = np.array([state.height[int(r)] for r in group], dtype=np.int64)
-        self.memcol = np.array([cols[int(r)] for r in group], dtype=np.int64)
+        self.CNT[seg, colidx] = cnt
+        self.s = state.size[members].astype(np.float64)
+        self.colsize = state.size[self.col_gid].astype(np.float64)
+        self.selfc = state.selfcnt[members].astype(np.float64)
+        self.nd = state.ndesc[members].astype(np.float64)
+        self.hgt = state.height[members].astype(np.int64)
         self.alive = np.ones(k, dtype=bool)
         # packed bitmaps over columns for Jaccard ranking
         W = (R + 63) // 64
-        self.bits = np.zeros((k, W), dtype=np.uint64)
-        nz = self.CNT > 0
-        for i in range(k):
-            idx = np.flatnonzero(nz[i])
-            np.bitwise_or.at(self.bits[i], idx >> 6, np.uint64(1) << (idx & 63).astype(np.uint64))
+        self.bits = np.zeros((k, max(W, 1)), dtype=np.uint64)
+        if colidx.size:
+            np.bitwise_or.at(
+                self.bits, (seg, colidx >> 6),
+                np.uint64(1) << (colidx & 63).astype(np.uint64),
+            )
         self.cost_row = self._full_cost_rows()
 
     # -- cost bookkeeping --------------------------------------------------
@@ -82,10 +99,10 @@ class GroupWorkspace:
 
     # -- partner ranking -----------------------------------------------------
     def jaccard_to(self, a: int, cand: np.ndarray) -> np.ndarray:
-        inter = np.bitwise_count(self.bits[a][None, :] & self.bits[cand]).sum(axis=1).astype(np.float64)
-        da = np.bitwise_count(self.bits[a]).sum()
-        dz = np.bitwise_count(self.bits[cand]).sum(axis=1)
-        union = da + dz - inter
+        inter = popcount(self.bits[a][None, :] & self.bits[cand]).sum(axis=1, dtype=np.int64).astype(np.float64)
+        da = popcount(self.bits[a]).sum(dtype=np.int64)
+        dz = popcount(self.bits[cand]).sum(axis=1, dtype=np.int64)
+        union = (da + dz - inter).astype(np.float64)
         return np.where(union > 0, inter / np.maximum(union, 1), 0.0)
 
     # -- exact Saving (Eq. 8) -------------------------------------------------
@@ -155,9 +172,12 @@ class GroupWorkspace:
         self._recompute_row(a)
 
 
+# ---------------------------------------------------------------------------
+# Sequential engine (seed baseline)
+# ---------------------------------------------------------------------------
 def process_group(
     state,
-    group: list,
+    group,
     theta: float,
     rng: np.random.Generator,
     top_j: int = 16,
@@ -165,7 +185,7 @@ def process_group(
 ) -> int:
     """Algorithm 2 over one candidate set. Returns the number of merges."""
     ws = GroupWorkspace(state, group)
-    k = len(group)
+    k = len(ws.members)
     queue = list(rng.permutation(k))
     merges = 0
     while len(queue) > 1:
@@ -186,4 +206,378 @@ def process_group(
             queue = [q for q in queue if q != z]
             queue.insert(0, a)  # merged node rejoins Q (Alg. 2 line 8)
             merges += 1
+    return merges
+
+
+# ---------------------------------------------------------------------------
+# Batched group-merge engine
+# ---------------------------------------------------------------------------
+_MEM_BUDGET = 128 << 20  # bound on any (B, G, R)-shaped float64 temporary
+
+
+def _tensor_jaccard_numpy(bits: np.ndarray) -> np.ndarray:
+    """(B, G, W) uint64 bitmaps -> (B, G, G) float64 Jaccard, chunked over B."""
+    B, G, W = bits.shape
+    deg = popcount(bits).sum(axis=-1, dtype=np.int64)
+    inter = np.empty((B, G, G), dtype=np.int64)
+    chunk = max(1, int(_MEM_BUDGET // max(1, G * G * W * 8)))
+    for s0 in range(0, B, chunk):
+        inter[s0:s0 + chunk] = popcount(
+            bits[s0:s0 + chunk, :, None, :] & bits[s0:s0 + chunk, None, :, :]
+        ).sum(axis=-1, dtype=np.int64)
+    union = deg[:, :, None] + deg[:, None, :] - inter
+    return np.where(union > 0, inter / np.maximum(union, 1), 0.0)
+
+
+class BatchedGroupWorkspace:
+    """All groups of a size bucket as one set of padded tensors.
+
+    B groups of ≤ G members become ``CNT (B, G, R)``, ``bits (B, G, W)``,
+    ``cost_row (B, G)`` … where R is the widest per-group column universe in
+    the batch. Construction is ONE `state.gather_rows` over every member of
+    every group plus one keyed `np.unique` — per-group column spaces are the
+    segments of the sorted (group, id) key stream. Merging applies a whole
+    round of disjoint pairs at once: local tensors fold with fancy-indexed
+    array ops and the global state applies `merge_batch` (DESIGN.md §3).
+    """
+
+    def __init__(self, state, B: int, G: int, R: int):
+        self.state = state
+        self.B, self.G, self.R = B, G, R
+        self.memcol = np.zeros((B, G), dtype=np.int64)
+        self.members = np.full((B, G), -1, dtype=np.int64)
+        self.CNT = np.zeros((B, G, R), dtype=np.float64)
+        self.col_gid = np.full((B, R), -1, dtype=np.int64)
+        self.colsize = np.zeros((B, R), dtype=np.float64)
+        self.s = np.zeros((B, G), dtype=np.float64)
+        self.selfc = np.zeros((B, G), dtype=np.float64)
+        self.nd = np.zeros((B, G), dtype=np.float64)
+        self.hgt = np.zeros((B, G), dtype=np.int64)
+        self.alive = np.zeros((B, G), dtype=bool)
+        self.bits = np.zeros((B, G, max((R + 63) // 64, 1)), dtype=np.uint64)
+        self.cost_row = np.zeros((B, G), dtype=np.float64)
+
+    def _fill(self, mb, mr, mc, gids, eb, er, ec, ecnt, cb, cc, cgid):
+        """Populate the tensors from (member, entry, column) index streams."""
+        st = self.state
+        self.memcol[mb, mr] = mc
+        self.members[mb, mr] = gids
+        self.s[mb, mr] = st.size[gids]
+        self.selfc[mb, mr] = st.selfcnt[gids]
+        self.nd[mb, mr] = st.ndesc[gids]
+        self.hgt[mb, mr] = st.height[gids]
+        self.alive[mb, mr] = True
+        self.CNT[eb, er, ec] = ecnt
+        self.col_gid[cb, cc] = cgid
+        self.colsize[cb, cc] = st.size[cgid]
+        if ec.size:
+            np.bitwise_or.at(
+                self.bits, (eb, er, ec >> 6),
+                np.uint64(1) << (ec & 63).astype(np.uint64),
+            )
+        # flat 2-level cost of every row (padding rows cost 0 → Saving −inf)
+        cost = _pair_cost(self.CNT, self.s[:, :, None] * self.colsize[:, None, :]).sum(axis=-1)
+        cost += _pair_cost(self.selfc, self.s * (self.s - 1) / 2)
+        cost += self.nd
+        cost[~self.alive] = 0.0
+        self.cost_row = cost
+
+    @staticmethod
+    def build_bucket(state, groups: list, G: int) -> list:
+        """One gather + keyed unique for ALL groups of a size bucket, then
+        workspaces chunked so column universes within a chunk are within 2×
+        of each other and the (B, G, R) tensors respect the memory budget —
+        a narrow group never pays a wide group's padding."""
+        B = len(groups)
+        ks = np.array([len(g) for g in groups], dtype=np.int64)
+        members_flat = np.concatenate([np.asarray(g, dtype=np.int64) for g in groups])
+        grp_of_member = np.repeat(np.arange(B), ks)
+        row_in_group = np.arange(members_flat.size) - np.repeat(np.cumsum(ks) - ks, ks)
+        seg, nbr, cnt = state.gather_rows(members_flat)
+        # per-group column universes: segments of the sorted (group, id) keys
+        big = np.int64(state.n_ids + 1)
+        keys = np.concatenate([
+            grp_of_member * big + members_flat,
+            grp_of_member[seg] * big + nbr,
+        ])
+        uniq, inv = np.unique(keys, return_inverse=True)
+        col_grp = (uniq // big).astype(np.int64)
+        col_bounds = np.searchsorted(col_grp, np.arange(B + 1))
+        R_b = np.diff(col_bounds)
+        colidx = inv - col_bounds[col_grp[inv]]
+        nm = members_flat.size
+
+        # chunk groups into R-homogeneous, memory-bounded classes
+        chunk_of_group = np.zeros(B, dtype=np.int64)
+        newb_of_group = np.zeros(B, dtype=np.int64)
+        chunks: list = []  # (group_count, Rmax)
+        cur_n = cur_first = cur_max = 0
+        for g in np.argsort(R_b, kind="stable"):
+            r = int(R_b[g])
+            if cur_n and ((cur_n + 1) * G * max(cur_max, r) * 8 > _MEM_BUDGET
+                          or r > 2 * max(cur_first, 32)):
+                chunks.append((cur_n, cur_max))
+                cur_n = cur_max = 0
+            if cur_n == 0:
+                cur_first = r
+            chunk_of_group[g] = len(chunks)
+            newb_of_group[g] = cur_n
+            cur_n += 1
+            cur_max = max(cur_max, r)
+        if cur_n:
+            chunks.append((cur_n, cur_max))
+
+        mem_chunk = chunk_of_group[grp_of_member]
+        ent_grp = grp_of_member[seg]
+        ent_chunk = chunk_of_group[ent_grp]
+        col_chunk = chunk_of_group[col_grp]
+        col_pos = np.arange(uniq.size) - col_bounds[col_grp]
+        out: list = []
+        for ci, (bc, rc) in enumerate(chunks):
+            ws = BatchedGroupWorkspace(state, bc, G, max(int(rc), 1))
+            msel = mem_chunk == ci
+            esel = ent_chunk == ci
+            csel = col_chunk == ci
+            ws._fill(
+                newb_of_group[grp_of_member[msel]], row_in_group[msel],
+                colidx[:nm][msel], members_flat[msel],
+                newb_of_group[ent_grp[esel]], row_in_group[seg[esel]],
+                colidx[nm:][esel], cnt[esel],
+                newb_of_group[col_grp[csel]], col_pos[csel], (uniq % big)[csel],
+            )
+            out.append(ws)
+        return out
+
+    # -- Jaccard ranking ---------------------------------------------------
+    def pairwise_jaccard(self, backend: str) -> np.ndarray:
+        """(B, G, G) Jaccard — one vmap'd kernel dispatch for the batch."""
+        if backend == "batched":
+            try:
+                from repro.kernels.bitset_jaccard.ops import batched_pairwise_jaccard
+            except ImportError:  # jax unavailable: fall through to NumPy
+                pass
+            else:
+                return batched_pairwise_jaccard(self.bits.view(np.uint32))
+        return _tensor_jaccard_numpy(self.bits)
+
+    # -- exact Saving (Eq. 8), every alive row's top-J in one op -----------
+    def savings_rows(self, rb: np.ndarray, rr: np.ndarray, cands: np.ndarray,
+                     height_bound=None) -> np.ndarray:
+        """Saving of merging row (rb[i], rr[i]) with members ``cands[i, j]``.
+
+        Rows are flat (alive rows only, across all groups of the batch);
+        returns (n, J), chunked so the (chunk, J, R) temps stay bounded.
+        """
+        R = self.R
+        n, J = cands.shape
+        out = np.empty((n, J), dtype=np.float64)
+        chunk = max(1, int(_MEM_BUDGET // max(1, J * R * 8 * 4)))
+        for s0 in range(0, n, chunk):
+            b = rb[s0:s0 + chunk]
+            r = rr[s0:s0 + chunk]
+            c = cands[s0:s0 + chunk]
+            bj = b[:, None]
+            cnt_r = self.CNT[b, r]                                 # (m, R)
+            merged = cnt_r[:, None, :] + self.CNT[bj, c]           # (m, J, R)
+            s_r = self.s[b, r]
+            s_c = self.s[bj, c]                                    # (m, J)
+            s_m = s_r[:, None] + s_c
+            poss = s_m[..., None] * self.colsize[b][:, None, :]
+            cost_cols = _pair_cost(merged, poss)
+            ca = self.memcol[b, r]                                 # (m,)
+            cz = self.memcol[bj, c]                                # (m, J)
+            total = cost_cols.sum(axis=-1)
+            total -= np.take_along_axis(
+                cost_cols, np.broadcast_to(ca[:, None, None], (b.size, J, 1)), axis=2)[..., 0]
+            total -= np.take_along_axis(cost_cols, cz[..., None], axis=2)[..., 0]
+            cab = np.take_along_axis(cnt_r, cz, axis=1)            # (m, J)
+            self_m = self.selfc[b, r][:, None] + self.selfc[bj, c] + cab
+            total += _pair_cost(self_m, s_m * (s_m - 1) / 2)
+            numer = total + self.nd[b, r][:, None] + self.nd[bj, c] + 2.0
+            pair_c = _pair_cost(cab, s_r[:, None] * s_c)
+            denom = self.cost_row[b, r][:, None] + self.cost_row[bj, c] - pair_c
+            sav = np.where(denom > 0, 1.0 - numer / np.maximum(denom, 1e-12), -np.inf)
+            if height_bound is not None:
+                new_h = np.maximum(self.hgt[b, r][:, None], self.hgt[bj, c]) + 1
+                sav = np.where(new_h > height_bound, -np.inf, sav)
+            out[s0:s0 + chunk] = sav
+        return out
+
+    # -- batched merge application -----------------------------------------
+    def apply_merges(self, b: np.ndarray, a: np.ndarray, z: np.ndarray):
+        """Fold row z into row a of group b for a round of disjoint pairs."""
+        G = self.G
+        ca = self.memcol[b, a]
+        cz = self.memcol[b, z]
+        s_new = self.s[b, a] + self.s[b, z]
+        old_ca = _pair_cost(self.CNT[b, :, ca], self.s[b] * self.colsize[b, ca][:, None])
+        old_cz = _pair_cost(self.CNT[b, :, cz], self.s[b] * self.colsize[b, cz][:, None])
+        cab = self.CNT[b, a, cz]
+        Ms = self.state.merge_batch(self.members[b, a], self.members[b, z])
+        self.members[b, a] = Ms
+        self.members[b, z] = -1
+        self.col_gid[b, ca] = Ms
+        self.col_gid[b, cz] = -1
+        # rows fold, then columns fold
+        self.CNT[b, a] += self.CNT[b, z]
+        self.CNT[b, z] = 0.0
+        self.CNT[b, :, ca] += self.CNT[b, :, cz]
+        self.CNT[b, :, cz] = 0.0
+        self.CNT[b, a, ca] = 0.0
+        self.colsize[b, ca] = s_new
+        self.colsize[b, cz] = 0.0
+        self.selfc[b, a] += self.selfc[b, z] + cab
+        self.nd[b, a] += self.nd[b, z] + 2.0
+        self.hgt[b, a] = np.maximum(self.hgt[b, a], self.hgt[b, z]) + 1
+        self.s[b, a] = s_new
+        self.alive[b, z] = False
+        # bitmaps: fold column cz into ca for all rows, then OR rows.
+        # Two pairs of the SAME group can fold columns living in the same
+        # 64-bit word, so the word-level updates must be unbuffered (.at) —
+        # plain fancy `|=`/`&=` would clobber one fold with the other.
+        one = np.uint64(1)
+        wa, ba = (ca >> 6), (ca & 63).astype(np.uint64)
+        wz, bz = (cz >> 6), (cz & 63).astype(np.uint64)
+        rows = np.broadcast_to(np.arange(G), (b.size, G))
+        bcol = np.broadcast_to(b[:, None], (b.size, G))
+        zbit = (self.bits[b, :, wz] >> bz[:, None]) & one
+        np.bitwise_or.at(
+            self.bits, (bcol, rows, np.broadcast_to(wa[:, None], (b.size, G))),
+            zbit << ba[:, None])
+        np.bitwise_and.at(
+            self.bits, (bcol, rows, np.broadcast_to(wz[:, None], (b.size, G))),
+            np.broadcast_to((~(one << bz))[:, None], (b.size, G)))
+        np.bitwise_or.at(self.bits, (b, a), self.bits[b, z])
+        self.bits[b, z] = 0
+        # row a has no bit for its own column
+        self.bits[b, a, wa] &= ~(one << ba)
+        # incremental cost update for all rows (columns ca, cz changed) …
+        new_ca = _pair_cost(self.CNT[b, :, ca], self.s[b] * self.colsize[b, ca][:, None])
+        np.add.at(self.cost_row, (b,), new_ca - old_ca - old_cz)
+        # … and exact recomputation for the merged rows (absorbed rows die)
+        crow = _pair_cost(self.CNT[b, a], self.s[b, a][:, None] * self.colsize[b]).sum(axis=-1)
+        crow += _pair_cost(self.selfc[b, a], self.s[b, a] * (self.s[b, a] - 1) / 2)
+        self.cost_row[b, a] = crow + self.nd[b, a]
+        self.cost_row[b, z] = 0.0
+
+    def refresh_jaccard(self, jac: np.ndarray, b: np.ndarray, a: np.ndarray,
+                        z: np.ndarray):
+        """Recompute Jaccard rows of merged survivors from the folded bits."""
+        inter = popcount(self.bits[b, a][:, None, :] & self.bits[b]).sum(axis=-1, dtype=np.int64)
+        deg_a = popcount(self.bits[b, a]).sum(axis=-1, dtype=np.int64)
+        deg = popcount(self.bits[b]).sum(axis=-1, dtype=np.int64)
+        union = deg_a[:, None] + deg - inter
+        row = np.where(union > 0, inter / np.maximum(union, 1), 0.0)
+        row = np.where(self.alive[b], row, -1.0)
+        row[np.arange(b.size), a] = -1.0
+        jac[b, a, :] = row
+        jac[b, :, a] = row
+        jac[b, z, :] = -1.0
+        jac[b, :, z] = -1.0
+
+    # -- the sweep ---------------------------------------------------------
+    def sweep(self, jac: np.ndarray, theta: float, rng: np.random.Generator,
+              top_j: int = 16, height_bound=None) -> int:
+        """Vectorized Algorithm-2 rounds over the whole batch.
+
+        Per round: every DIRTY row's top-J partners (by the batch Jaccard
+        ranking) are scored with the exact Saving in one array op; the
+        proposals are thinned to a conflict-free set by randomized-priority
+        matching (a proposal wins iff it holds the minimum priority at both
+        endpoints — the global minimum always wins, so rounds make progress)
+        and applied in one batched fold. The dirty set mirrors the
+        sequential queue: every row starts dirty, a row whose best Saving
+        falls below θ leaves it for good, a merged survivor re-enters it
+        ("merged node rejoins Q"), and a row that lost the matching retries
+        next round.
+        """
+        B, G = self.B, self.G
+        jac = np.asarray(jac, dtype=np.float64)  # mutated; callers discard it
+        gi = np.arange(G)
+        jac[:, gi, gi] = -1.0
+        dead = ~self.alive
+        jac[np.broadcast_to(dead[:, None, :], jac.shape)] = -1.0
+        jac[np.broadcast_to(dead[:, :, None], jac.shape)] = -1.0
+        merges = 0
+        dirty = self.alive.copy()
+        while G > 1 and dirty.any():
+            # a row only has alive groupmates as real partners: adapt J to
+            # the largest alive group instead of paying top_j on everyone
+            J = min(top_j, int(self.alive.sum(axis=1).max()) - 1)
+            if J < 1:
+                break
+            rb, rr = np.nonzero(dirty)
+            jrows = jac[rb, rr]                                    # (n, G)
+            part = np.argpartition(-jrows, kth=J - 1, axis=1)[:, :J]
+            sav = self.savings_rows(rb, rr, part, height_bound=height_bound)
+            cand_ok = self.alive[rb[:, None], part] & (part != rr[:, None])
+            sav = np.where(cand_ok, sav, -np.inf)
+            best_j = np.argmax(sav, axis=1)
+            ri = np.arange(rb.size)
+            best_sav = sav[ri, best_j]
+            best_z = part[ri, best_j]
+            prop = np.isfinite(best_sav) & (best_sav >= theta)
+            dirty[rb[~prop], rr[~prop]] = False
+            if not prop.any():
+                break
+            gb, ar, zr = rb[prop], rr[prop], best_z[prop]
+            # randomized-priority conflict resolution over node keys: a
+            # proposal wins iff it holds the min priority at both endpoints
+            p = rng.random(gb.size)
+            a_key = gb * G + ar
+            z_key = gb * G + zr
+            winner = np.full(B * G, np.inf)
+            np.minimum.at(winner, a_key, p)
+            np.minimum.at(winner, z_key, p)
+            acc = (winner[a_key] == p) & (winner[z_key] == p)
+            ab, am, az = gb[acc], ar[acc], zr[acc]
+            self.apply_merges(ab, am, az)
+            self.refresh_jaccard(jac, ab, am, az)
+            # survivors rejoin the queue, absorbed rows leave it; losers of
+            # the matching stayed dirty and retry next round
+            dirty[ab, az] = False
+            dirty[ab, am] = True
+            merges += ab.size
+        return merges
+
+
+_BATCH_MAX_GROUP = 128  # larger groups amortize row-level vectorization alone
+
+
+def process_groups(
+    state,
+    groups: list,
+    theta: float,
+    rng: np.random.Generator,
+    top_j: int = 16,
+    height_bound=None,
+    backend: str = "numpy",
+) -> int:
+    """Batched engine: all groups of one iteration, bucketed by size.
+
+    Groups up to ``_BATCH_MAX_GROUP`` members are packed into (B, G, ·)
+    tensor batches — that is where one-Python-loop-per-group used to
+    dominate. The few larger groups already amortize their array ops over
+    wide rows, so they run the sequential per-group sweep.
+
+    Workspaces for a batch are built against one state snapshot; merges in
+    one group never touch another group's rows (candidate sets partition the
+    alive roots), so the only cross-group effect is slightly stale neighbor
+    sizes in the Saving estimate — quality-neutral and lossless either way.
+    """
+    buckets: dict = {}
+    large: list = []
+    for grp in groups:
+        grp = np.asarray(grp, dtype=np.int64)
+        if grp.size > _BATCH_MAX_GROUP:
+            large.append(grp)
+            continue
+        buckets.setdefault(1 << max(3, int(grp.size - 1).bit_length()), []).append(grp)
+    merges = 0
+    for G in sorted(buckets):
+        for ws in BatchedGroupWorkspace.build_bucket(state, buckets[G], G):
+            jac = ws.pairwise_jaccard(backend)
+            merges += ws.sweep(jac, theta, rng, top_j=top_j, height_bound=height_bound)
+    for grp in large:
+        merges += process_group(state, grp, theta, rng, top_j=top_j, height_bound=height_bound)
     return merges

@@ -7,8 +7,9 @@ increase cost, Lemma 1). Oversized groups are re-shingled with fresh seeds up
 to ``max_rehash`` times (paper: 10) and finally split randomly to ≤
 ``max_group`` (paper: 500).
 
-The numpy implementation below is the exact engine's; `repro.core.distributed`
-holds the jax/shard_map version and `repro.kernels.minhash` the Pallas kernel.
+Everything below is O(|E|) segment array work (argsort/reduceat) — no Python
+dict loops; `repro.core.distributed` holds the jax/shard_map version and
+`repro.kernels.minhash` the Pallas kernel.
 """
 from __future__ import annotations
 
@@ -36,21 +37,50 @@ def node_level_min(g: Graph, seed: int) -> np.ndarray:
     return nm
 
 
-def root_shingles(g: Graph, root_of: np.ndarray, seed: int) -> dict:
-    """shingle(A) = min over leaves u ∈ A of node_level_min(u)."""
+def root_shingles(g: Graph, root_of: np.ndarray, seed: int, n_ids=None) -> np.ndarray:
+    """shingle(A) = min over leaves u ∈ A of node_level_min(u).
+
+    Returns an array indexed by root id (size ``n_ids``); ids owning no
+    leaves fall back to their own id as a unique sentinel.
+    """
+    if n_ids is None:
+        n_ids = int(root_of.max()) + 1 if root_of.size else 0
     nm = node_level_min(g, seed)
-    out: dict = {}
-    # segment-min over root ids
-    order = np.argsort(root_of, kind="stable")
-    sorted_roots = root_of[order]
-    sorted_vals = nm[order]
-    boundaries = np.flatnonzero(np.diff(sorted_roots)) + 1
-    starts = np.concatenate([[0], boundaries])
-    ends = np.concatenate([boundaries, [sorted_roots.shape[0]]])
-    mins = np.minimum.reduceat(sorted_vals, starts)
-    for s, e, mn in zip(starts, ends, mins):
-        out[int(sorted_roots[s])] = int(mn)
+    out = np.full(n_ids, -1, dtype=np.int64)
+    if root_of.size:
+        # segment-min over root ids
+        order = np.argsort(root_of, kind="stable")
+        sorted_roots = root_of[order]
+        sorted_vals = nm[order]
+        starts = np.concatenate([[0], np.flatnonzero(np.diff(sorted_roots)) + 1])
+        out[sorted_roots[starts]] = np.minimum.reduceat(sorted_vals, starts)
+    missing = np.flatnonzero(out < 0)
+    out[missing] = missing
     return out
+
+
+def _split_groups(roots: np.ndarray, keys: np.ndarray, sub_keys=None) -> list:
+    """Partition ``roots`` by key (optionally refined by ``sub_keys``),
+    dropping singletons. Returns a list of int64 arrays."""
+    if roots.size < 2:
+        return []
+    if sub_keys is None:
+        order = np.argsort(keys, kind="stable")
+        k = keys[order]
+        head = np.empty(k.size, dtype=bool)
+        head[0] = True
+        np.not_equal(k[1:], k[:-1], out=head[1:])
+    else:
+        order = np.lexsort((sub_keys, keys))
+        k, sk = keys[order], sub_keys[order]
+        head = np.empty(k.size, dtype=bool)
+        head[0] = True
+        head[1:] = (k[1:] != k[:-1]) | (sk[1:] != sk[:-1])
+    sorted_roots = roots[order]
+    bounds = np.flatnonzero(head)
+    sizes = np.diff(np.concatenate([bounds, [roots.size]]))
+    pieces = np.split(sorted_roots, bounds[1:])
+    return [p for p, sz in zip(pieces, sizes) if sz > 1]
 
 
 def candidate_groups(
@@ -62,36 +92,38 @@ def candidate_groups(
     max_rehash: int = 10,
 ) -> list:
     """Partition alive roots into candidate sets of size ≤ max_group."""
+    alive_roots = np.asarray(alive_roots, dtype=np.int64)
+    if alive_roots.size < 2:
+        return []
+    n_ids = int(max(int(root_of.max()) if root_of.size else 0, int(alive_roots.max()))) + 1
     rng = np.random.default_rng(seed)
-    sh = root_shingles(g, root_of, seed)
-    buckets: dict = {}
-    for r in alive_roots:
-        buckets.setdefault(sh.get(int(r), int(r)), []).append(int(r))
+    sh = root_shingles(g, root_of, seed, n_ids)
+    pending = _split_groups(alive_roots, sh[alive_roots])
 
     groups: list = []
-    pending = [grp for grp in buckets.values() if len(grp) > 1]
     rehash = 0
     while pending:
-        oversized = [grp for grp in pending if len(grp) > max_group]
-        groups.extend(grp for grp in pending if 1 < len(grp) <= max_group)
+        oversized = [grp for grp in pending if grp.size > max_group]
+        groups.extend(grp for grp in pending if grp.size <= max_group)
         if not oversized:
             break
         rehash += 1
+        members = np.concatenate(oversized)
         if rehash > max_rehash:
             # random split to max_group
-            for grp in oversized:
-                grp = list(grp)
-                rng.shuffle(grp)
-                for i in range(0, len(grp), max_group):
-                    chunk = grp[i : i + max_group]
-                    if len(chunk) > 1:
+            gidx = np.repeat(np.arange(len(oversized)), [o.size for o in oversized])
+            perm = rng.permutation(members.size)
+            members, gidx = members[perm], gidx[perm]
+            order = np.argsort(gidx, kind="stable")
+            members, gidx = members[order], gidx[order]
+            bounds = np.concatenate([[0], np.flatnonzero(np.diff(gidx)) + 1, [gidx.size]])
+            for s, e in zip(bounds[:-1], bounds[1:]):
+                for i in range(s, e, max_group):
+                    chunk = members[i : min(i + max_group, e)]
+                    if chunk.size > 1:
                         groups.append(chunk)
             break
-        sh2 = root_shingles(g, root_of, seed * 1000003 + rehash)
-        pending = []
-        for grp in oversized:
-            sub: dict = {}
-            for r in grp:
-                sub.setdefault(sh2.get(int(r), int(r)), []).append(r)
-            pending.extend(v for v in sub.values() if len(v) > 1)
+        sh2 = root_shingles(g, root_of, seed * 1000003 + rehash, n_ids)
+        gidx = np.repeat(np.arange(len(oversized)), [o.size for o in oversized])
+        pending = _split_groups(members, gidx, sh2[members])
     return groups

@@ -12,6 +12,13 @@ Pipeline, exactly as the paper's:
 
 Losslessness is structural: the emission DP re-encodes the *input* edges
 exactly, so any merge forest — however heuristic — yields an exact summary.
+
+Merging runs on one of three engines selected by ``backend=`` (DESIGN.md §3):
+  * ``"numpy"``  — batched group-merge engine, NumPy popcount Jaccard (default)
+  * ``"batched"`` — batched engine dispatching the Pallas bitset-Jaccard
+    kernel over size-bucketed ``(B, G, W)`` bitmap batches
+  * ``"loop"``   — the original per-group Python loop (kept as the benchmark
+    baseline and as a semantics reference)
 """
 from __future__ import annotations
 
@@ -21,7 +28,7 @@ import time
 import numpy as np
 
 from repro.core import encode_dp
-from repro.core.merging import process_group
+from repro.core.merging import process_group, process_groups
 from repro.core.minhash import candidate_groups
 from repro.core.pruning import prune
 from repro.core.summary import Summary
@@ -31,52 +38,218 @@ sys.setrecursionlimit(200_000)
 
 
 class SluggerState:
-    """Merge forest + root-level subedge counts, updated per merger."""
+    """Merge forest + root-level subedge counts in flat-array storage.
+
+    Adjacency lives in an append-only arena (``arena_ids``/``arena_cnt``) with
+    one ``(row_ptr, row_len)`` slot per supernode id — CSR rows seed the arena
+    directly. Neighbor ids stored in a row may be stale (merged away); reads
+    resolve them through the ``forward`` pointer array (with path compression
+    and in-place row compaction), so a merge costs O(deg(A)+deg(B)) array work
+    and never touches the rows of the merged node's neighbors (DESIGN.md §4).
+    """
 
     def __init__(self, g: Graph):
         n = g.n
         self.g = g
-        self.root_of = np.arange(n, dtype=np.int64)
-        self.parent: list[int] = [-1] * n
+        cap = 2 * n + 8
+        self.parent = np.full(cap, -1, dtype=np.int64)
+        self.size = np.ones(cap, dtype=np.int64)
+        self.height = np.zeros(cap, dtype=np.int64)
+        self.ndesc = np.zeros(cap, dtype=np.int64)
+        self.selfcnt = np.zeros(cap, dtype=np.int64)
+        self.forward = np.arange(cap, dtype=np.int64)
+        self.alive_mask = np.zeros(cap, dtype=bool)
+        self.alive_mask[:n] = True
+        self.n_ids = n
         self.children: dict = {}
-        self.leaves: dict = {u: [u] for u in range(n)}
-        self.size: list[int] = [1] * n
-        self.height: list[int] = [0] * n
-        self.ndesc: list[int] = [0] * n
-        self.selfcnt: dict = {u: 0 for u in range(n)}
-        self.adj: dict = {u: {int(v): 1 for v in g.neighbors(u)} for u in range(n)}
-        self.alive: set = set(range(n))
+        acap = max(2 * int(g.indices.size) + 16, 64)
+        self.arena_ids = np.zeros(acap, dtype=np.int64)
+        self.arena_cnt = np.zeros(acap, dtype=np.int64)
+        self.arena_ids[: g.indices.size] = g.indices
+        self.arena_cnt[: g.indices.size] = 1
+        self.arena_top = int(g.indices.size)
+        self.row_ptr = np.zeros(cap, dtype=np.int64)
+        self.row_ptr[:n] = g.indptr[:-1]
+        self.row_len = np.zeros(cap, dtype=np.int64)
+        self.row_len[:n] = np.diff(g.indptr)
+        self._root_cache: np.ndarray | None = None
 
+    # -- id/arena growth ---------------------------------------------------
+    def _ensure_ids(self, need: int):
+        cap = self.parent.shape[0]
+        if need <= cap:
+            return
+        new = max(2 * cap, need)
+        for name in ("parent", "size", "height", "ndesc", "selfcnt",
+                     "row_ptr", "row_len"):
+            old = getattr(self, name)
+            arr = np.zeros(new, dtype=old.dtype)
+            arr[:cap] = old
+            setattr(self, name, arr)
+        self.parent[cap:] = -1
+        self.size[cap:] = 1
+        fwd = np.arange(new, dtype=np.int64)
+        fwd[:cap] = self.forward
+        self.forward = fwd
+        am = np.zeros(new, dtype=bool)
+        am[:cap] = self.alive_mask
+        self.alive_mask = am
+
+    def _ensure_arena(self, extra: int):
+        if self.arena_top + extra <= self.arena_ids.shape[0]:
+            return
+        new = max(2 * self.arena_ids.shape[0], self.arena_top + extra)
+        for name in ("arena_ids", "arena_cnt"):
+            old = getattr(self, name)
+            arr = np.zeros(new, dtype=np.int64)
+            arr[: self.arena_top] = old[: self.arena_top]
+            setattr(self, name, arr)
+
+    def _append_row(self, i: int, ids: np.ndarray, cnts: np.ndarray):
+        k = ids.shape[0]
+        self._ensure_arena(k)
+        self.row_ptr[i] = self.arena_top
+        self.row_len[i] = k
+        self.arena_ids[self.arena_top : self.arena_top + k] = ids
+        self.arena_cnt[self.arena_top : self.arena_top + k] = cnts
+        self.arena_top += k
+
+    # -- resolution --------------------------------------------------------
+    def resolve(self, ids: np.ndarray) -> np.ndarray:
+        """Map (possibly stale) supernode ids to their current alive roots."""
+        orig = np.asarray(ids, dtype=np.int64)
+        out = orig
+        while True:
+            nxt = self.forward[out]
+            if np.array_equal(nxt, out):
+                break
+            out = nxt
+        if out is not orig:
+            self.forward[orig] = out  # path compression
+        return out
+
+    @property
+    def root_of(self) -> np.ndarray:
+        """Current root of every leaf (recomputed lazily after merges)."""
+        if self._root_cache is None:
+            self._root_cache = self.resolve(np.arange(self.g.n, dtype=np.int64))
+        return self._root_cache
+
+    @property
+    def alive(self) -> np.ndarray:
+        return np.flatnonzero(self.alive_mask[: self.n_ids])
+
+    # -- adjacency reads ---------------------------------------------------
+    def gather_rows(self, roots: np.ndarray):
+        """Resolved, per-root-aggregated adjacency of distinct ``roots``.
+
+        Returns ``(seg, nbr, cnt)``: concatenated row entries with ``seg``
+        indexing into ``roots``. As a side effect the touched rows are
+        compacted in place (stale duplicates folded, shrinking ``row_len``).
+        """
+        roots = np.asarray(roots, dtype=np.int64)
+        lens = self.row_len[roots]
+        total = int(lens.sum())
+        empty = np.zeros(0, dtype=np.int64)
+        if total == 0:
+            return empty, empty, empty
+        starts = self.row_ptr[roots]
+        ends = np.cumsum(lens)
+        off = np.arange(total, dtype=np.int64) - np.repeat(ends - lens, lens)
+        idx = np.repeat(starts, lens) + off
+        seg = np.repeat(np.arange(roots.size, dtype=np.int64), lens)
+        nbr = self.resolve(self.arena_ids[idx])
+        cnt = self.arena_cnt[idx]
+        key = seg * np.int64(self.n_ids + 1) + nbr
+        order = np.argsort(key, kind="stable")
+        key, nbr, cnt, seg = key[order], nbr[order], cnt[order], seg[order]
+        head = np.empty(key.size, dtype=bool)
+        head[0] = True
+        np.not_equal(key[1:], key[:-1], out=head[1:])
+        starts_u = np.flatnonzero(head)
+        cnt_u = np.add.reduceat(cnt, starts_u)
+        seg_u, nbr_u = seg[starts_u], nbr[starts_u]
+        # write the compacted rows back in place (they only ever shrink)
+        lens_u = np.bincount(seg_u, minlength=roots.size).astype(np.int64)
+        ends_u = np.cumsum(lens_u)
+        pos = self.row_ptr[roots][seg_u] + (
+            np.arange(seg_u.size, dtype=np.int64) - (ends_u - lens_u)[seg_u]
+        )
+        self.arena_ids[pos] = nbr_u
+        self.arena_cnt[pos] = cnt_u
+        self.row_len[roots] = lens_u
+        return seg_u, nbr_u, cnt_u
+
+    # -- merge -------------------------------------------------------------
     def merge(self, A: int, B: int) -> int:
         """Merge roots A, B under a fresh parent M; returns M's id."""
-        M = len(self.parent)
-        self.parent.append(-1)
+        return int(self.merge_batch(
+            np.array([A], dtype=np.int64), np.array([B], dtype=np.int64))[0])
+
+    def merge_batch(self, A: np.ndarray, B: np.ndarray) -> np.ndarray:
+        """Merge m disjoint root pairs (A[i], B[i]) in one arena operation.
+
+        All per-id bookkeeping is vectorized; the merged rows of every pair
+        are built from ONE gather + segment aggregation and bulk-appended.
+        Returns the m fresh parent ids.
+        """
+        A = np.asarray(A, dtype=np.int64)
+        B = np.asarray(B, dtype=np.int64)
+        m = A.size
+        base = self.n_ids
+        self._ensure_ids(base + m)
+        self.n_ids = base + m
+        M = base + np.arange(m, dtype=np.int64)
         self.parent[A] = M
         self.parent[B] = M
-        self.children[M] = [A, B]
-        la, lb = self.leaves.pop(A), self.leaves.pop(B)
-        lm = la + lb
-        self.leaves[M] = lm
-        self.root_of[np.asarray(lm, dtype=np.int64)] = M
-        self.size.append(self.size[A] + self.size[B])
-        self.height.append(max(self.height[A], self.height[B]) + 1)
-        self.ndesc.append(self.ndesc[A] + self.ndesc[B] + 2)
-        na, nb = self.adj.pop(A), self.adj.pop(B)
-        cab = na.pop(B, 0)
-        nb.pop(A, None)
-        merged = na
-        for c, v in nb.items():
-            merged[c] = merged.get(c, 0) + v
-        for c in merged:
-            d = self.adj[c]
-            d.pop(A, None)
-            d.pop(B, None)
-            d[M] = merged[c]
-        self.adj[M] = merged
-        self.selfcnt[M] = self.selfcnt.pop(A) + self.selfcnt.pop(B) + cab
-        self.alive.discard(A)
-        self.alive.discard(B)
-        self.alive.add(M)
+        self.parent[M] = -1
+        for i in range(m):
+            self.children[base + i] = [int(A[i]), int(B[i])]
+        self.size[M] = self.size[A] + self.size[B]
+        self.height[M] = np.maximum(self.height[A], self.height[B]) + 1
+        self.ndesc[M] = self.ndesc[A] + self.ndesc[B] + 2
+        roots = np.concatenate([A, B])
+        pair_of_root = np.concatenate([np.arange(m), np.arange(m)])
+        seg, nbr, cnt = self.gather_rows(roots)
+        pair = pair_of_root[seg]
+        cab = np.zeros(m, dtype=np.int64)
+        lens = np.zeros(m, dtype=np.int64)
+        nbr_k = cnt_k = np.zeros(0, dtype=np.int64)
+        if nbr.size:
+            # aggregate the two rows of each pair, drop internal A↔B entries
+            key = pair * np.int64(self.n_ids + 1) + nbr
+            order = np.argsort(key, kind="stable")
+            key, pair, nbr, cnt = key[order], pair[order], nbr[order], cnt[order]
+            head = np.empty(key.size, dtype=bool)
+            head[0] = True
+            np.not_equal(key[1:], key[:-1], out=head[1:])
+            starts = np.flatnonzero(head)
+            cnt_u = np.add.reduceat(cnt, starts)
+            pair_u, nbr_u = pair[starts], nbr[starts]
+            internal = (nbr_u == A[pair_u]) | (nbr_u == B[pair_u])
+            # A→B and B→A each counted once
+            cab = (np.bincount(pair_u[internal], weights=cnt_u[internal],
+                               minlength=m).astype(np.int64) // 2)
+            keep = ~internal
+            pair_k, nbr_k, cnt_k = pair_u[keep], nbr_u[keep], cnt_u[keep]
+            lens = np.bincount(pair_k, minlength=m).astype(np.int64)
+        total = int(lens.sum())
+        self._ensure_arena(total)
+        ends = np.cumsum(lens)
+        self.row_ptr[M] = self.arena_top + ends - lens
+        self.row_len[M] = lens
+        self.arena_ids[self.arena_top : self.arena_top + total] = nbr_k
+        self.arena_cnt[self.arena_top : self.arena_top + total] = cnt_k
+        self.arena_top += total
+        self.selfcnt[M] = self.selfcnt[A] + self.selfcnt[B] + cab
+        self.forward[A] = M
+        self.forward[B] = M
+        self.alive_mask[A] = False
+        self.alive_mask[B] = False
+        self.alive_mask[M] = True
+        self.row_len[A] = 0
+        self.row_len[B] = 0
+        self._root_cache = None
         return M
 
 
@@ -85,18 +258,20 @@ def _emit_encoding(state: SluggerState) -> Summary:
     current merge forest (plays the paper's 'update of encoding' role)."""
     g = state.g
     n = g.n
+    root_of = state.root_of
     pos_of = np.zeros(n, dtype=np.int64)
     tvs: dict = {}
-    for r, lv in state.leaves.items():
-        arr = np.asarray(lv, dtype=np.int64)
-        pos_of[arr] = np.arange(arr.shape[0])
-        tvs[r] = encode_dp.TreeView(r, state.children, n)
+    for r in np.unique(root_of):
+        tv = encode_dp.TreeView(int(r), state.children, n)
+        tvs[int(r)] = tv
+        order = tv.leaf_order(state.children, n)
+        pos_of[order] = np.arange(order.shape[0])
 
     el = g.edge_list()
     edges_out: list = []
     if el.size:
-        ra = state.root_of[el[:, 0]]
-        rb = state.root_of[el[:, 1]]
+        ra = root_of[el[:, 0]]
+        rb = root_of[el[:, 1]]
         # normalize: endpoint order follows (min root, max root)
         swap = ra > rb
         u = np.where(swap, el[:, 1], el[:, 0])
@@ -118,7 +293,7 @@ def _emit_encoding(state: SluggerState) -> Summary:
                 _, ee = encode_dp.encode_pair(tvs[A], tvs[B], pa, pb)
             edges_out.extend(ee)
 
-    parent = np.array(state.parent, dtype=np.int64)
+    parent = state.parent[: state.n_ids].copy()
     if edges_out:
         arr = np.array(edges_out, dtype=np.int64)
         lo = np.minimum(arr[:, 0], arr[:, 1])
@@ -138,23 +313,33 @@ def summarize(
     height_bound=None,
     prune_steps=(1, 2, 3),
     verbose: bool = False,
+    backend: str = "numpy",
 ) -> Summary:
     """Run SLUGGER end to end. ``prune_steps=()`` skips pruning (paper's
-    'state 0' in Table IV); ``height_bound`` is the Table-V H_b variant."""
+    'state 0' in Table IV); ``height_bound`` is the Table-V H_b variant.
+    ``backend`` selects the merge engine (see module docstring)."""
+    if backend not in ("numpy", "batched", "loop"):
+        raise ValueError(f"unknown backend {backend!r}; use 'numpy', 'batched' or 'loop'")
     state = SluggerState(g)
     rng = np.random.default_rng(seed)
     for t in range(1, T + 1):
         theta = 0.0 if t == T else 1.0 / (1 + t)
-        alive = np.fromiter(state.alive, dtype=np.int64)
+        alive = state.alive
         groups = candidate_groups(g, state.root_of, alive, seed=seed * 7919 + t, max_group=max_group)
-        merges = 0
         t0 = time.time()
-        for grp in groups:
-            merges += process_group(state, grp, theta, rng, top_j=top_j, height_bound=height_bound)
+        if backend == "loop":
+            merges = 0
+            for grp in groups:
+                merges += process_group(state, grp, theta, rng, top_j=top_j, height_bound=height_bound)
+        else:
+            merges = process_groups(
+                state, groups, theta, rng,
+                top_j=top_j, height_bound=height_bound, backend=backend,
+            )
         if verbose:
             print(
                 f"[slugger] iter {t:3d}: θ={theta:.3f} groups={len(groups)} "
-                f"merges={merges} roots={len(state.alive)} ({time.time()-t0:.2f}s)"
+                f"merges={merges} roots={state.alive.size} ({time.time()-t0:.2f}s)"
             )
     summary = _emit_encoding(state)
     if prune_steps:

@@ -1,4 +1,13 @@
-"""Jit'd public wrapper: pack neighbor sets and score candidate groups."""
+"""Jit'd public wrappers: pack neighbor sets and score candidate groups.
+
+`batched_pairwise_jaccard` is the merge engine's entry point: a size bucket
+of groups arrives as a list of (k_i, W_i) uint32 bitmaps, gets zero-padded
+into (B, G, W) tiles (G, W rounded to powers of two so the jit cache stays
+small), and all pairwise intersection popcounts come back from ONE vmap'd
+`pairwise_intersection_kernel` dispatch per tile. Padded rows are all-zero,
+so they never perturb real intersections; per-group degrees are read off the
+diagonal (popcount(x & x) = |x|).
+"""
 from __future__ import annotations
 
 import numpy as np
@@ -30,3 +39,55 @@ def group_jaccard(bits, use_kernel: bool = True, interpret: bool = True):
     deg = ref.popcount_u32(bits).sum(axis=-1).astype(jnp.int32)
     union = deg[:, None] + deg[None, :] - inter
     return jnp.where(union > 0, inter / jnp.maximum(union, 1), 0.0).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Batched dispatch for the merge engine
+# ---------------------------------------------------------------------------
+_BATCH_JIT_CACHE: dict = {}
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pow2(x: int, floor: int = 8) -> int:
+    return max(floor, 1 << (max(1, x) - 1).bit_length())
+
+
+def _batched_intersection_fn(B: int, G: int, W: int, interpret: bool):
+    key = (B, G, W, interpret)
+    fn = _BATCH_JIT_CACHE.get(key)
+    if fn is None:
+        fn = jax.jit(jax.vmap(
+            lambda b: pairwise_intersection_kernel(b, interpret=interpret)
+        ))
+        _BATCH_JIT_CACHE[key] = fn
+    return fn
+
+
+def batched_pairwise_jaccard(bits: np.ndarray, tile_b: int = 64,
+                             interpret=None) -> np.ndarray:
+    """All-pairs Jaccard for a size-bucketed batch of groups.
+
+    ``bits``: (B, G, W) uint32 bitmaps — one padded group per batch row.
+    Returns (B, G, G) float64; padded (all-zero) rows score 0 everywhere.
+    W is rounded up to a power of two so the jit cache stays small; B is
+    processed in fixed ``tile_b`` tiles for the same reason.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    B, G, W = bits.shape
+    Wp = _pow2(W)
+    out = np.empty((B, G, G), dtype=np.float64)
+    for t0 in range(0, B, tile_b):
+        nb = min(tile_b, B - t0)
+        batch = np.zeros((tile_b, G, Wp), dtype=np.uint32)
+        batch[:nb, :, :W] = bits[t0 : t0 + nb]
+        fn = _batched_intersection_fn(tile_b, G, Wp, interpret)
+        inter = np.asarray(fn(batch)).astype(np.int64)  # (tile_b, G, G)
+        deg = np.diagonal(inter, axis1=1, axis2=2)      # popcount(x & x) = |x|
+        union = deg[:, :, None] + deg[:, None, :] - inter
+        out[t0 : t0 + nb] = np.where(
+            union > 0, inter / np.maximum(union, 1), 0.0)[:nb]
+    return out

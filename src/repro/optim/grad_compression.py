@@ -66,7 +66,10 @@ def compressed_psum(g_flat, err, axis_names, key=None):
         acc = jax.lax.psum(acc, ax)
     ndev = 1
     for ax in axis_names:
-        ndev *= jax.lax.axis_size(ax)
+        if hasattr(jax.lax, "axis_size"):
+            ndev *= jax.lax.axis_size(ax)
+        else:  # older jax: count devices along the axis with a psum of ones
+            ndev *= jax.lax.psum(1, ax)
     mean = (acc.astype(jnp.float32) * scale).reshape(-1)[:n] / ndev
     return mean, new_err
 

@@ -2,6 +2,8 @@
 central claim), and its cost never exceeds the trivial encoding |E|."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import baselines, summarize

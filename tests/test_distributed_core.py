@@ -79,7 +79,10 @@ SHARDED_EQUIV = textwrap.dedent("""
     pad = (-len(src)) % 8
     src_p = np.concatenate([src, np.full(pad, g.n, np.int32)])
     dst_p = np.concatenate([dst, np.zeros(pad, np.int32)])
-    mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    try:
+        mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    except AttributeError:  # older jax has no AxisType (Auto is the default)
+        mesh = jax.make_mesh((8,), ("data",))
     fn = D.shingles_sharded(mesh)
     got = np.asarray(fn(jnp.asarray(src_p), jnp.asarray(dst_p), g.n, 123457, 99))
     want = np.asarray(D.node_shingles_dense(jnp.asarray(src), jnp.asarray(dst), g.n, 123457, 99))

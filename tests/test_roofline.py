@@ -76,7 +76,10 @@ MINI_DRYRUN = textwrap.dedent("""
     from repro.train.train_step import TrainPlan, build_train_step
 
     cfg = get_config("qwen2.5-3b", smoke=True)
-    mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+    try:
+        mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+    except AttributeError:  # older jax has no AxisType (Auto is the default)
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
     shape = ShapeConfig("mini", 32, 8, "train")
     plan = TrainPlan(cfg=cfg, mesh=mesh, dp_axes=("data",), opt=AdamWConfig())
     step, state_sh, batch_sh, state_abs = build_train_step(plan, shape)

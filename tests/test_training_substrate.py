@@ -149,7 +149,10 @@ COMPRESSED_DP = textwrap.dedent("""
     from jax.sharding import PartitionSpec as P
     from repro.optim.grad_compression import compressed_psum
 
-    mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    try:
+        mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    except AttributeError:  # older jax has no AxisType (Auto is the default)
+        mesh = jax.make_mesh((8,), ("data",))
     rng = np.random.default_rng(0)
     g_local = jnp.asarray(rng.normal(size=(8, 4096)).astype(np.float32))  # per-worker grads
     err0 = jnp.zeros((8, 4096), jnp.float32)
@@ -158,8 +161,12 @@ COMPRESSED_DP = textwrap.dedent("""
         out, ne = compressed_psum(g[0], e[0], ("data",))
         return out[None], ne[None]
 
-    out, new_err = jax.shard_map(body, mesh=mesh, in_specs=(P("data", None), P("data", None)),
-                                 out_specs=(P("data", None), P("data", None)))(g_local, err0)
+    try:
+        shard_map = jax.shard_map
+    except AttributeError:
+        from jax.experimental.shard_map import shard_map
+    out, new_err = shard_map(body, mesh=mesh, in_specs=(P("data", None), P("data", None)),
+                             out_specs=(P("data", None), P("data", None)))(g_local, err0)
     out = np.asarray(out)
     want = np.asarray(g_local).mean(axis=0)
     # every worker holds the same mean; quantization error is bounded
