@@ -10,13 +10,14 @@ import argparse
 import time
 
 from benchmarks import (compactness, composition, decompression, height,
-                        iterations, merge_throughput, pruning_bench,
-                        roofline_report, scalability, speed)
+                        iterations, merge_throughput, pipeline_breakdown,
+                        pruning_bench, roofline_report, scalability, speed)
 
 SUITES = {
     "compactness": compactness.run,     # Fig 5a / Fig 1a
     "speed": speed.run,                 # Fig 5b
     "merge": merge_throughput.run,      # batched-engine speedup (BENCH_merge)
+    "pipeline": pipeline_breakdown.run, # stage-level IR speedups (BENCH_pipeline)
     "scalability": scalability.run,     # Fig 1b
     "iterations": iterations.run,       # Table III
     "pruning": pruning_bench.run,       # Table IV

@@ -1,4 +1,4 @@
-"""Optimal pairwise hierarchical encoding (dynamic program).
+"""Optimal pairwise hierarchical encoding (recursive dynamic program).
 
 Role in the system: the paper updates p/n-edges *locally* during each merger,
 exhaustively searching encodings over ≤10 supernodes with a memoized pattern
@@ -7,6 +7,12 @@ hierarchy trees of a root pair, which (a) contains the paper's option space,
 (b) contains the flat model's option space (descend to leaves), and (c) runs
 in O(points · depth) with full/empty shortcuts. Per-(X,Y,parity) memoization
 plays the role of the paper's lookup table.
+
+This module is the SEMANTICS REFERENCE: production emission runs the batched
+level-synchronous form of the same DP over the flat Summary IR
+(`core/encode_batched.py`, DESIGN.md §5.2), which must reproduce this
+recursion's edge output bit for bit (test-enforced). The recursion remains
+the `backend="loop"` path and the fallback for non-binary forests.
 
 Semantics: ``parity`` is the p−n balance contributed by edges placed at
 strict-ancestor pairs. At a pair (X, Y) with parity c we may either descend

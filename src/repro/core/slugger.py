@@ -28,13 +28,13 @@ import time
 import numpy as np
 
 from repro.core import encode_dp
+from repro.core.encode_batched import encode_forest, forest_is_binary
 from repro.core.merging import process_group, process_groups
 from repro.core.minhash import candidate_groups
 from repro.core.pruning import prune
 from repro.core.summary import Summary
+from repro.core.summary_ir import SummaryIR, canon_edges
 from repro.graphs.csr import Graph
-
-sys.setrecursionlimit(200_000)
 
 
 class SluggerState:
@@ -253,55 +253,83 @@ class SluggerState:
         return M
 
 
-def _emit_encoding(state: SluggerState) -> Summary:
-    """Exact per-pair hierarchical encoding of the input graph over the
-    current merge forest (plays the paper's 'update of encoding' role)."""
+def _emit_encoding_reference(state: SluggerState) -> Summary:
+    """Per-root-pair recursive DP emission — the semantics reference the
+    batched emitter is cross-checked against (kept as ``backend="loop"``)."""
     g = state.g
     n = g.n
     root_of = state.root_of
     pos_of = np.zeros(n, dtype=np.int64)
     tvs: dict = {}
-    for r in np.unique(root_of):
-        tv = encode_dp.TreeView(int(r), state.children, n)
-        tvs[int(r)] = tv
-        order = tv.leaf_order(state.children, n)
-        pos_of[order] = np.arange(order.shape[0])
+    # TreeView/DP recursion depth tracks the forest height; raise the limit
+    # locally instead of mutating it for the whole process.
+    limit = int(4 * state.height[: state.n_ids].max() + 2000)
+    old_limit = sys.getrecursionlimit()
+    sys.setrecursionlimit(max(old_limit, limit))
+    try:
+        for r in np.unique(root_of):
+            tv = encode_dp.TreeView(int(r), state.children, n)
+            tvs[int(r)] = tv
+            order = tv.leaf_order(state.children, n)
+            pos_of[order] = np.arange(order.shape[0])
 
-    el = g.edge_list()
-    edges_out: list = []
-    if el.size:
-        ra = root_of[el[:, 0]]
-        rb = root_of[el[:, 1]]
-        # normalize: endpoint order follows (min root, max root)
-        swap = ra > rb
-        u = np.where(swap, el[:, 1], el[:, 0])
-        v = np.where(swap, el[:, 0], el[:, 1])
-        ka, kb = np.minimum(ra, rb), np.maximum(ra, rb)
-        order = np.lexsort((kb, ka))
-        u, v, ka, kb = u[order], v[order], ka[order], kb[order]
-        key = ka * (np.max(kb) + 1) + kb
-        bounds = np.concatenate([[0], np.flatnonzero(np.diff(key)) + 1, [key.shape[0]]])
-        for i in range(bounds.shape[0] - 1):
-            s, e = bounds[i], bounds[i + 1]
-            A, B = int(ka[s]), int(kb[s])
-            if A == B:
-                pu, pv = pos_of[u[s:e]], pos_of[v[s:e]]
-                lo, hi = np.minimum(pu, pv), np.maximum(pu, pv)
-                _, ee = encode_dp.encode_self(tvs[A], lo, hi)
-            else:
-                pa, pb = pos_of[u[s:e]], pos_of[v[s:e]]
-                _, ee = encode_dp.encode_pair(tvs[A], tvs[B], pa, pb)
-            edges_out.extend(ee)
+        el = g.edge_list()
+        edges_out: list = []
+        if el.size:
+            ra = root_of[el[:, 0]]
+            rb = root_of[el[:, 1]]
+            # normalize: endpoint order follows (min root, max root)
+            swap = ra > rb
+            u = np.where(swap, el[:, 1], el[:, 0])
+            v = np.where(swap, el[:, 0], el[:, 1])
+            ka, kb = np.minimum(ra, rb), np.maximum(ra, rb)
+            order = np.lexsort((kb, ka))
+            u, v, ka, kb = u[order], v[order], ka[order], kb[order]
+            # root-pair groups split on component diffs — unlike the previous
+            # ka * (max(kb)+1) + kb keying this cannot overflow int64 however
+            # large the supernode ids grow (see summary_ir.group_pairs).
+            head = (np.diff(ka) != 0) | (np.diff(kb) != 0)
+            bounds = np.concatenate([[0], np.flatnonzero(head) + 1, [ka.shape[0]]])
+            for i in range(bounds.shape[0] - 1):
+                s, e = bounds[i], bounds[i + 1]
+                A, B = int(ka[s]), int(kb[s])
+                if A == B:
+                    pu, pv = pos_of[u[s:e]], pos_of[v[s:e]]
+                    lo, hi = np.minimum(pu, pv), np.maximum(pu, pv)
+                    _, ee = encode_dp.encode_self(tvs[A], lo, hi)
+                else:
+                    pa, pb = pos_of[u[s:e]], pos_of[v[s:e]]
+                    _, ee = encode_dp.encode_pair(tvs[A], tvs[B], pa, pb)
+                edges_out.extend(ee)
+    finally:
+        sys.setrecursionlimit(old_limit)
 
     parent = state.parent[: state.n_ids].copy()
-    if edges_out:
-        arr = np.array(edges_out, dtype=np.int64)
-        lo = np.minimum(arr[:, 0], arr[:, 1])
-        hi = np.maximum(arr[:, 0], arr[:, 1])
-        arr = np.stack([lo, hi, arr[:, 2]], axis=1)
-    else:
-        arr = np.zeros((0, 3), dtype=np.int64)
+    arr = canon_edges(np.array(edges_out, dtype=np.int64).reshape(-1, 3))
     return Summary(n_leaves=n, parent=parent, edges=arr)
+
+
+def _emit_encoding(state: SluggerState, backend: str = "numpy") -> Summary:
+    """Exact hierarchical encoding of the input graph over the current merge
+    forest (plays the paper's 'update of encoding' role).
+
+    ``backend="loop"`` runs the per-root-pair recursive DP; other backends
+    run the batched level-synchronous DP over the flat Summary IR
+    (`core/encode_batched.py`), with the per-level membership counts
+    dispatched through the Pallas seghist kernel on ``backend="batched"``.
+    Both produce bit-identical canonical edge arrays (test-enforced)."""
+    if backend == "loop":
+        return _emit_encoding_reference(state)
+    g = state.g
+    parent = state.parent[: state.n_ids].copy()
+    ir = SummaryIR(parent, g.n)
+    if not forest_is_binary(ir):  # only the recursive DP handles n-ary trees
+        return _emit_encoding_reference(state)
+    el = g.edge_list()
+    u = el[:, 0] if el.size else np.zeros(0, dtype=np.int64)
+    v = el[:, 1] if el.size else np.zeros(0, dtype=np.int64)
+    _, edges = encode_forest(ir, u, v, backend=backend)
+    return Summary(n_leaves=g.n, parent=parent, edges=edges)
 
 
 def summarize(
@@ -341,7 +369,7 @@ def summarize(
                 f"[slugger] iter {t:3d}: θ={theta:.3f} groups={len(groups)} "
                 f"merges={merges} roots={state.alive.size} ({time.time()-t0:.2f}s)"
             )
-    summary = _emit_encoding(state)
+    summary = _emit_encoding(state, backend=backend)
     if prune_steps:
         summary = prune(summary, steps=prune_steps)
     return summary

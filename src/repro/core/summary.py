@@ -7,6 +7,14 @@ parent. An edge (u, v) exists in the decompressed graph iff
 
     #{p-edges between (ancestors(u) ∪ {u}) × (ancestors(v) ∪ {v})}
   > #{n-edges …}                                                   (Sect. II-B)
+
+All structure/query methods run on the flat Summary IR (`core/summary_ir.py`,
+DESIGN.md §5): leaf membership is one gather over DFS intervals, full
+decompression is one vectorized expansion over all edges, and `neighbors`
+(Algorithm 4, partial decompression) is a difference-array sweep over the
+intervals of the edges incident to v's ancestor chain — no recursion
+anywhere. `_decompress_reference`/`_neighbors_reference` keep the per-edge
+Python loops as the cross-checked semantics baseline.
 """
 from __future__ import annotations
 
@@ -14,6 +22,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.core.summary_ir import SummaryIR, segmented_indices
 from repro.graphs.csr import Graph
 
 
@@ -27,9 +36,8 @@ class Summary:
     # X <= Y normalized; X == Y is a supernode self-loop.
     edges: np.ndarray
 
-    _children: dict = field(default=None, repr=False, compare=False)
-    _leaves: dict = field(default=None, repr=False, compare=False)
-    _incidence: dict = field(default=None, repr=False, compare=False)
+    _ir: SummaryIR = field(default=None, repr=False, compare=False)
+    _inc_built: bool = field(default=False, repr=False, compare=False)
 
     # ------------------------------------------------------------------ basic
     @property
@@ -59,64 +67,139 @@ class Summary:
         return np.where(self.parent == -1)[0]
 
     # ------------------------------------------------------------- structure
+    @property
+    def ir(self) -> SummaryIR:
+        """Flat interval view of the forest (built once, invalidated on edit)."""
+        if self._ir is None:
+            self._ir = SummaryIR(self.parent, self.n_leaves)
+            self._inc_built = False
+        return self._ir
+
+    def _inc(self) -> SummaryIR:
+        ir = self.ir
+        if not self._inc_built:
+            ir.build_incidence(self.edges)
+            self._inc_built = True
+        return ir
+
     def children(self, x: int):
-        if self._children is None:
-            ch: dict = {}
-            for i, p in enumerate(self.parent):
-                if p >= 0:
-                    ch.setdefault(int(p), []).append(i)
-            self._children = ch
-        return self._children.get(int(x), [])
+        return self.ir.children_of(int(x)).tolist()
 
     def leaves(self, x: int) -> np.ndarray:
-        """Subnodes contained in supernode x (DFS order)."""
-        if self._leaves is None:
-            self._leaves = {}
-        cached = self._leaves.get(int(x))
-        if cached is not None:
-            return cached
-        if x < self.n_leaves:
-            out = np.array([x], dtype=np.int64)
-        else:
-            out = (
-                np.concatenate([self.leaves(c) for c in self.children(x)])
-                if self.children(x)
-                else np.zeros(0, dtype=np.int64)
-            )
-        self._leaves[int(x)] = out
-        return out
+        """Subnodes contained in supernode x (DFS order) — one gather."""
+        return self.ir.leaves_of(int(x))
 
     def depth_of_leaves(self) -> np.ndarray:
         """#ancestors per leaf (0 when the leaf is itself a root)."""
-        d = np.zeros(self.n_leaves, dtype=np.int64)
-        for u in range(self.n_leaves):
-            x, depth = u, 0
-            while self.parent[x] >= 0:
-                x = int(self.parent[x])
-                depth += 1
-            d[u] = depth
-        return d
+        return self.ir.depth[: self.n_leaves].copy()
 
     def tree_heights(self) -> list:
         """Height of each root's hierarchy tree."""
-        heights = {}
-
-        def h(x):
-            if x in heights:
-                return heights[x]
-            ch = self.children(x)
-            r = 0 if not ch else 1 + max(h(c) for c in ch)
-            heights[x] = r
-            return r
-
-        return [h(int(r)) for r in self.roots()]
+        return self.ir.tree_heights().tolist()
 
     def composition(self) -> dict:
         return {"pos": self.num_pos, "neg": self.num_neg, "h": self.num_h}
 
     # ---------------------------------------------------------- decompression
     def decompress(self) -> Graph:
-        """Exact reconstruction of the input graph (full decompression)."""
+        """Exact reconstruction of the input graph (full decompression).
+
+        One pass: cross edges (X ≠ Y) expand to their interval products with
+        a flat repeat/tile decomposition over ALL edges at once; self-loops
+        expand per distinct supernode size through one shared triu template.
+        """
+        n = self.n_leaves
+        ir = self.ir
+        edges = self.edges
+        if edges.shape[0] == 0:
+            return Graph.from_edges(n, np.zeros((0, 2), dtype=np.int64))
+        X, Y, S = edges[:, 0], edges[:, 1], edges[:, 2]
+        keys, weights = [], []
+
+        cross = X != Y
+        if cross.any():
+            cx, cy, cs = X[cross], Y[cross], S[cross]
+            sx, sy = ir.size(cx), ir.size(cy)
+            lens = sx * sy
+            if lens.sum():
+                local = segmented_indices(np.zeros_like(lens), lens)
+                wid = np.repeat(sy, lens)
+                i = local // wid
+                j = local - i * wid
+                u = ir.order[np.repeat(ir.first[cx], lens) + i]
+                v = ir.order[np.repeat(ir.first[cy], lens) + j]
+                lo, hi = np.minimum(u, v), np.maximum(u, v)
+                keys.append(lo * n + hi)
+                weights.append(np.repeat(cs, lens))
+
+        if (~cross).any():
+            lx, ls = X[~cross], S[~cross]
+            sz = ir.size(lx)
+            for s in np.unique(sz):
+                if s < 2:
+                    continue
+                iu, iv = np.triu_indices(int(s), k=1)
+                sel = lx[sz == s]
+                base = np.repeat(ir.first[sel], iu.size)
+                u = ir.order[base + np.tile(iu, sel.size)]
+                v = ir.order[base + np.tile(iv, sel.size)]
+                lo, hi = np.minimum(u, v), np.maximum(u, v)
+                keys.append(lo * n + hi)
+                weights.append(np.repeat(ls[sz == s], iu.size))
+
+        if not keys:
+            return Graph.from_edges(n, np.zeros((0, 2), dtype=np.int64))
+        keys = np.concatenate(keys)
+        weights = np.concatenate(weights)
+        uniq, inv = np.unique(keys, return_inverse=True)
+        tot = np.bincount(inv, weights=weights.astype(np.float64))
+        sel = uniq[tot > 0]
+        return Graph.from_edges(n, np.stack([sel // n, sel % n], axis=1))
+
+    def neighbors(self, v: int) -> np.ndarray:
+        """Partial decompression (Algorithm 4): one node's neighborhood,
+        touching only the edges incident to v's ancestors.
+
+        Each incident edge contributes a signed (start, end) event pair over
+        DFS positions; one sort + prefix-sum sweep over the ≤ 2·deg events
+        yields the positive-count ranges — O(deg·log(deg) + |answer|) per
+        query, independent of n."""
+        ir = self._inc()
+        v = int(v)
+        chain = [v]
+        x = v
+        while ir.parent[x] >= 0:
+            x = int(ir.parent[x])
+            chain.append(x)
+        eids, seg = ir.incident_eids(np.array(chain, dtype=np.int64))
+        if eids.size == 0:
+            return np.zeros(0, dtype=np.int64)
+        ex, ey, es = self.edges[eids, 0], self.edges[eids, 1], self.edges[eids, 2]
+        mine = np.array(chain, dtype=np.int64)[seg]
+        # the side whose leaves receive the count: the other endpoint, or the
+        # supernode itself for self-loops (pairs within X).
+        other = np.where(ex == mine, ey, ex)
+        pos = np.concatenate([ir.first[other], ir.last[other]])
+        val = np.concatenate([es, -es]).astype(np.int64)
+        order = np.argsort(pos, kind="stable")
+        pos, val = pos[order], val[order]
+        cum = np.cumsum(val)
+        tail = np.empty(pos.shape[0], dtype=bool)  # last event per position
+        tail[-1] = True
+        np.not_equal(pos[1:], pos[:-1], out=tail[:-1])
+        seg_pos, seg_cnt = pos[tail], cum[tail]
+        active = np.flatnonzero(seg_cnt[:-1] > 0)
+        lens = seg_pos[active + 1] - seg_pos[active]
+        hit = segmented_indices(seg_pos[active], lens)
+        if hit.size == 0:
+            return np.zeros(0, dtype=np.int64)
+        hit = hit[hit != ir.pos_of[v]]
+        return np.sort(ir.order[hit])
+
+    # ------------------------------------------------ reference (slow) paths
+    def _decompress_reference(self) -> Graph:
+        """Per-edge Python loop kept as the semantics baseline for tests and
+        the pipeline-breakdown benchmark."""
         n = self.n_leaves
         keys, weights = [], []
         for X, Y, s in self.edges:
@@ -141,34 +224,19 @@ class Summary:
         sel = uniq[tot > 0]
         return Graph.from_edges(n, np.stack([sel // n, sel % n], axis=1))
 
-    def _incident(self, x: int):
-        if self._incidence is None:
-            inc: dict = {}
-            for i, (X, Y, s) in enumerate(self.edges):
-                inc.setdefault(int(X), []).append((int(Y), int(s)))
-                if X != Y:
-                    inc.setdefault(int(Y), []).append((int(X), int(s)))
-            self._incidence = inc
-        return self._incidence.get(int(x), [])
-
-    def neighbors(self, v: int) -> np.ndarray:
-        """Partial decompression (Algorithm 4): one node's neighborhood,
-        touching only the edges incident to v's ancestors."""
+    def _neighbors_reference(self, v: int) -> np.ndarray:
+        ir = self._inc()
         count = np.zeros(self.n_leaves, dtype=np.int64)
-        x = int(v)
-        chain = []
-        while True:
-            chain.append(x)
-            if self.parent[x] < 0:
-                break
-            x = int(self.parent[x])
+        chain = [int(v)]
+        while ir.parent[chain[-1]] >= 0:
+            chain.append(int(ir.parent[chain[-1]]))
         for X in chain:
-            for Y, s in self._incident(X):
-                if Y == X:  # self-loop: applies to pairs within X
-                    count[self.leaves(X)] += s
-                else:
-                    count[self.leaves(Y)] += s
-        count[v] = 0
+            eids, _ = ir.incident_eids(np.array([X], dtype=np.int64))
+            for e in eids:
+                ex, ey, s = self.edges[e]
+                other = int(ey if ex == X else ex) if ex != ey else int(ex)
+                count[self.leaves(other)] += int(s)
+        count[int(v)] = 0
         return np.where(count > 0)[0].astype(np.int64)
 
     # ------------------------------------------------------------- validation
@@ -188,6 +256,5 @@ class Summary:
         }
 
     def invalidate_caches(self):
-        self._children = None
-        self._leaves = None
-        self._incidence = None
+        self._ir = None
+        self._inc_built = False

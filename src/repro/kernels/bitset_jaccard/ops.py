@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from repro.kernels.bitset_jaccard import ref
 from repro.kernels.bitset_jaccard.kernel import pairwise_intersection_kernel
+from repro.kernels.common import default_interpret, pow2
 
 
 def pack_bitsets(sets: list, universe: int) -> np.ndarray:
@@ -47,14 +48,6 @@ def group_jaccard(bits, use_kernel: bool = True, interpret: bool = True):
 _BATCH_JIT_CACHE: dict = {}
 
 
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
-
-
-def _pow2(x: int, floor: int = 8) -> int:
-    return max(floor, 1 << (max(1, x) - 1).bit_length())
-
-
 def _batched_intersection_fn(B: int, G: int, W: int, interpret: bool):
     key = (B, G, W, interpret)
     fn = _BATCH_JIT_CACHE.get(key)
@@ -76,9 +69,9 @@ def batched_pairwise_jaccard(bits: np.ndarray, tile_b: int = 64,
     processed in fixed ``tile_b`` tiles for the same reason.
     """
     if interpret is None:
-        interpret = _default_interpret()
+        interpret = default_interpret()
     B, G, W = bits.shape
-    Wp = _pow2(W)
+    Wp = pow2(W)
     out = np.empty((B, G, G), dtype=np.float64)
     for t0 in range(0, B, tile_b):
         nb = min(tile_b, B - t0)

@@ -1,0 +1,19 @@
+"""Shared kernel-dispatch helpers: backend detection and jit-cache shaping.
+
+Every kernel ops module (bitset_jaccard, seghist) keys its jit cache on
+power-of-two padded shapes and defaults to Pallas interpret mode off-TPU —
+one copy of both rules lives here.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def default_interpret() -> bool:
+    """Pallas kernels run interpreted everywhere except real TPU backends."""
+    return jax.default_backend() != "tpu"
+
+
+def pow2(x: int, floor: int = 8) -> int:
+    """Round up to a power of two (≥ floor) so jit caches stay small."""
+    return max(floor, 1 << (max(1, x) - 1).bit_length())

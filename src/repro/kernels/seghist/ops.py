@@ -1,0 +1,43 @@
+"""Public dispatch for per-level state membership counts.
+
+`membership_counts` is what the batched emission DP calls once per tree
+level: given each active subedge's pair-state id, return the number of
+subedges per state (the DP compares these against the interval products to
+classify states full/empty/mixed). ``backend="batched"`` routes through the
+Pallas one-hot histogram kernel with a small jit cache keyed on padded
+shapes, mirroring `kernels/bitset_jaccard/ops.batched_pairwise_jaccard`;
+``backend="numpy"`` is a plain ``np.bincount``.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+
+from repro.kernels.common import default_interpret, pow2
+from repro.kernels.seghist.kernel import segment_histogram_kernel
+
+_JIT_CACHE: dict = {}
+
+
+def membership_counts(state_of_edge: np.ndarray, num_states: int,
+                      backend: str = "numpy", interpret=None) -> np.ndarray:
+    """(E,) int64 state ids -> (num_states,) int64 subedge counts."""
+    if num_states == 0:
+        return np.zeros(0, dtype=np.int64)
+    if backend != "batched":
+        return np.bincount(state_of_edge, minlength=num_states).astype(np.int64)
+    if interpret is None:
+        interpret = default_interpret()
+    # pad E and S to powers of two so the jit cache stays small
+    Ep = pow2(int(state_of_edge.size), floor=256)
+    Sp = pow2(int(num_states), floor=256)
+    key = (Ep, Sp, interpret)
+    fn = _JIT_CACHE.get(key)
+    if fn is None:
+        fn = jax.jit(
+            lambda s: segment_histogram_kernel(s, Sp, interpret=interpret),
+        )
+        _JIT_CACHE[key] = fn
+    seg = np.full(Ep, -1, dtype=np.int32)
+    seg[: state_of_edge.size] = state_of_edge.astype(np.int32)
+    return np.asarray(fn(seg)).astype(np.int64)[:num_states]

@@ -1,0 +1,13 @@
+"""Pure-jnp reference for the segment histogram kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def segment_histogram(seg, num_segments: int):
+    """seg: (E,) int ids in [0, num_segments) or -1 -> (num_segments,) int32."""
+    seg = jnp.asarray(seg, dtype=jnp.int32)
+    valid = seg >= 0
+    return jnp.zeros(num_segments, dtype=jnp.int32).at[
+        jnp.where(valid, seg, 0)
+    ].add(valid.astype(jnp.int32))

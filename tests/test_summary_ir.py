@@ -1,0 +1,122 @@
+"""Unit tests for the flat Summary IR (Euler-tour/DFS-interval forest view)."""
+import numpy as np
+import pytest
+
+from repro.core import summarize
+from repro.core.summary_ir import SummaryIR, group_pairs
+from repro.graphs import generators as GG
+from repro.graphs.csr import Graph
+
+
+def _summaries():
+    out = []
+    for g, T in [(GG.caveman(10, 6, 0.05, seed=8), 6),
+                 (GG.barabasi_albert(120, 3, seed=9), 6),
+                 (GG.bipartite_nested(32, 31, 5), 8)]:
+        for steps in [(), (1, 2, 3)]:
+            out.append((g, summarize(g, T=T, seed=0, prune_steps=steps)))
+    return out
+
+
+def test_intervals_partition_leaves():
+    for g, s in _summaries():
+        ir = s.ir
+        # every leaf position is claimed exactly once
+        assert np.array_equal(np.sort(ir.pos_of), np.arange(g.n))
+        assert np.array_equal(ir.order[ir.pos_of], np.arange(g.n))
+        # root intervals tile [0, n)
+        starts = np.sort(ir.first[ir.roots])
+        assert starts[0] == 0
+        sizes = ir.size(ir.roots)
+        assert int(sizes.sum()) == g.n
+
+
+def test_leaves_and_children_match_recursive_walk():
+    for g, s in _summaries():
+        ir = s.ir
+        parent = s.parent
+        kids_ref: dict = {}
+        for i, p in enumerate(parent):
+            if p >= 0:
+                kids_ref.setdefault(int(p), []).append(i)
+
+        def leaves_ref(x):
+            if x < s.n_leaves:
+                return [x]
+            return [l for c in kids_ref.get(x, []) for l in leaves_ref(c)]
+
+        for x in np.flatnonzero(parent > -2):
+            x = int(x)
+            assert sorted(ir.children_of(x).tolist()) == sorted(kids_ref.get(x, []))
+            assert sorted(ir.leaves_of(x).tolist()) == sorted(leaves_ref(x))
+            # the child interval union is exactly the parent interval
+            ch = ir.children_of(x)
+            if ch.size:
+                assert ir.first[x] == ir.first[ch].min()
+                assert ir.last[x] == ir.last[ch].max()
+                assert int(ir.size(np.array([x]))[0]) == int(ir.size(ch).sum())
+
+
+def test_depth_and_heights():
+    for g, s in _summaries():
+        ir = s.ir
+        d_ref = np.zeros(g.n, dtype=np.int64)
+        for u in range(g.n):
+            x, depth = u, 0
+            while s.parent[x] >= 0:
+                x = int(s.parent[x])
+                depth += 1
+            d_ref[u] = depth
+        assert np.array_equal(ir.depth[: g.n], d_ref)
+        # height per root = max leaf depth inside the root's interval
+        hs = ir.tree_heights()
+        for r, h in zip(ir.roots, hs):
+            assert h == int(ir.depth[ir.leaves_of(int(r))].max())
+
+
+def test_incidence_csr():
+    g = GG.caveman(8, 5, 0.05, seed=1)
+    s = summarize(g, T=5, seed=2)
+    ir = s.ir
+    ir.build_incidence(s.edges)
+    inc_ref: dict = {}
+    for e, (X, Y, _sg) in enumerate(s.edges):
+        inc_ref.setdefault(int(X), []).append(e)
+        if X != Y:
+            inc_ref.setdefault(int(Y), []).append(e)
+    for x in range(ir.n_ids):
+        eids, _ = ir.incident_eids(np.array([x]))
+        assert sorted(eids.tolist()) == sorted(inc_ref.get(x, []))
+
+
+def test_parent_order_invariant_enforced():
+    # parent[x] <= x is not a merge forest; the builder must refuse it
+    with pytest.raises(ValueError):
+        SummaryIR(np.array([-1, 0, 1], dtype=np.int64), 1)
+
+
+def test_group_pairs_no_overflow():
+    """The ka * (max(kb)+1) + kb keying overflows int64 for large ids; the
+    diff-based grouping must not (the regression this guards: silent root-pair
+    collisions in emission on billion-node forests)."""
+    big = np.int64(2 ** 62)
+    a = np.array([big, big, 5, 5, big, 3], dtype=np.int64)
+    b = np.array([big - 1, big - 1, 7, 8, 3, big], dtype=np.int64)
+    order, starts = group_pairs(a, b)
+    sa, sb = a[order], b[order]
+    bounds = np.concatenate([starts, [a.size]])
+    got = {(int(sa[s]), int(sb[s])): int(e - s)
+           for s, e in zip(bounds[:-1], bounds[1:])}
+    assert got == {(3, int(big)): 1, (5, 7): 1, (5, 8): 1,
+                   (int(big), 3): 1, (int(big), int(big) - 1): 2}
+    # sanity: the old multiplicative key really does overflow here
+    with np.errstate(over="ignore"):
+        key = a * (np.max(b) + 1) + b
+    assert np.unique(key).size < len(got) + 1  # collisions under overflow
+
+
+def test_empty_and_singleton_forests():
+    ir = SummaryIR(np.full(4, -1, dtype=np.int64), 4)
+    assert np.array_equal(ir.roots, np.arange(4))
+    assert np.array_equal(ir.tree_heights(), np.zeros(4, dtype=np.int64))
+    assert ir.max_children() == 0
