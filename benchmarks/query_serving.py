@@ -1,0 +1,110 @@
+"""Serving throughput for queries ON the summary: batched engine vs the
+per-call loop.
+
+The serving regime (ROADMAP north star) is thousands of concurrent
+``neighbors``/``edge_exists`` queries against a frozen summary. PR 2 made a
+single `Summary.neighbors` call O(deg log deg + answer); this benchmark
+measures what batching adds on top: the per-call loop pays Python dispatch,
+chain climb, and an allocation per query, while `core/query_batch` answers
+the whole batch through one flat gather + sweep on the packed artifact
+(`summary_ir.PackedSummary`), per backend (numpy / jax / pallas).
+
+Artifact: ``BENCH_serving_queries.json`` with queries/sec per engine and the
+batched-over-loop speedup regression-tracked by the acceptance gate
+(>= 5x at n=220k).
+
+  PYTHONPATH=src python -m benchmarks.query_serving [--quick] [--full]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import fmt_table, save_result
+from repro.core.query_batch import (BACKENDS, edge_exists_batch,
+                                    neighbors_batch, unpack_csr)
+from repro.core.slugger import summarize
+from repro.graphs.generators import SERVING_GRAPHS
+
+
+def _best(fn, repeat: int = 3):
+    best, out = float("inf"), None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def run(quick: bool = True):
+    graphs = [("caveman-55k", SERVING_GRAPHS["55k"]()),
+              ("caveman-220k", SERVING_GRAPHS["220k"]())]
+    n_queries = 2000 if quick else 20000
+    backends = ("numpy", "jax") if quick else BACKENDS
+    rows, payload = [], {}
+    for name, g in graphs:
+        t0 = time.perf_counter()
+        s = summarize(g, T=5, seed=0)
+        ps = s.pack_for_serving()
+        t_build = time.perf_counter() - t0
+        rng = np.random.default_rng(0)
+        vs = rng.integers(0, g.n, size=n_queries)
+        us = rng.integers(0, g.n, size=n_queries)
+
+        s.neighbors(0)  # warm IR + incidence caches for the per-call loop
+        loop_ans, t_loop = _best(
+            lambda: [s.neighbors(int(v)) for v in vs], repeat=1)
+        ee_truth, t_loop_ee = _best(
+            lambda: np.array([np.isin(w, s.neighbors(int(u)))
+                              for u, w in zip(us, vs)]), repeat=1)
+
+        engines = {"loop": {"nb_sec": t_loop, "nb_qps": n_queries / t_loop,
+                            "ee_sec": t_loop_ee, "ee_qps": n_queries / t_loop_ee}}
+        for bk in backends:
+            neighbors_batch(ps, vs[:64], backend=bk)  # warm jit/kernel caches
+            edge_exists_batch(ps, us[:64], vs[:64], backend=bk)
+            (indptr, ids), t_nb = _best(
+                lambda: neighbors_batch(ps, vs, backend=bk))
+            got = unpack_csr(indptr, ids)
+            for i in range(n_queries):  # answers must stay bit-identical
+                assert np.array_equal(got[i], loop_ans[i]), (name, bk, i)
+            ee, t_ee = _best(lambda: edge_exists_batch(ps, us, vs, backend=bk))
+            assert np.array_equal(ee, ee_truth), (name, bk)
+            engines[bk] = {
+                "nb_sec": t_nb, "nb_qps": n_queries / t_nb,
+                "nb_speedup": t_loop / t_nb,
+                "ee_sec": t_ee, "ee_qps": n_queries / t_ee,
+                "ee_speedup": t_loop_ee / t_ee,
+            }
+            rows.append([name, bk, f"{n_queries/t_nb:,.0f}",
+                         f"{t_loop/t_nb:.1f}x", f"{n_queries/t_ee:,.0f}",
+                         f"{t_loop_ee/t_ee:.1f}x"])
+        rows.append([name, "loop", f"{n_queries/t_loop:,.0f}", "1.0x",
+                     f"{n_queries/t_loop_ee:,.0f}", "1.0x"])
+        payload[name] = {
+            "n": g.n, "m": g.m, "queries": n_queries,
+            "build_sec": t_build, "artifact_mb": ps.nbytes() / 1e6,
+            "engines": engines,
+        }
+    print("\n== Summary-query serving: batched engines vs per-call loop ==")
+    print(fmt_table(rows, ["graph", "engine", "neighbors q/s", "speedup",
+                           "edge_exists q/s", "speedup"]))
+    save_result("BENCH_serving_queries", payload)
+    return payload
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--quick", action="store_true",
+                      help="2k queries, numpy+jax backends (default)")
+    mode.add_argument("--full", action="store_true",
+                      help="20k queries, all backends")
+    args = ap.parse_args(argv)
+    run(quick=not args.full)
+
+
+if __name__ == "__main__":
+    main()

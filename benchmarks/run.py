@@ -11,13 +11,15 @@ import time
 
 from benchmarks import (compactness, composition, decompression, height,
                         iterations, merge_throughput, pipeline_breakdown,
-                        pruning_bench, roofline_report, scalability, speed)
+                        pruning_bench, query_serving, roofline_report,
+                        scalability, speed)
 
 SUITES = {
     "compactness": compactness.run,     # Fig 5a / Fig 1a
     "speed": speed.run,                 # Fig 5b
     "merge": merge_throughput.run,      # batched-engine speedup (BENCH_merge)
     "pipeline": pipeline_breakdown.run, # stage-level IR speedups (BENCH_pipeline)
+    "serving": query_serving.run,       # batched query qps (BENCH_serving_queries)
     "scalability": scalability.run,     # Fig 1b
     "iterations": iterations.run,       # Table III
     "pruning": pruning_bench.run,       # Table IV

@@ -41,7 +41,9 @@ def root_shingles(g: Graph, root_of: np.ndarray, seed: int, n_ids=None) -> np.nd
     """shingle(A) = min over leaves u ∈ A of node_level_min(u).
 
     Returns an array indexed by root id (size ``n_ids``); ids owning no
-    leaves fall back to their own id as a unique sentinel.
+    leaves get ``_P + id`` as a unique sentinel — genuine hashes live in
+    [0, _P), so a leafless root can never collide with (and spuriously
+    group under) another root's real shingle value.
     """
     if n_ids is None:
         n_ids = int(root_of.max()) + 1 if root_of.size else 0
@@ -55,7 +57,7 @@ def root_shingles(g: Graph, root_of: np.ndarray, seed: int, n_ids=None) -> np.nd
         starts = np.concatenate([[0], np.flatnonzero(np.diff(sorted_roots)) + 1])
         out[sorted_roots[starts]] = np.minimum.reduceat(sorted_vals, starts)
     missing = np.flatnonzero(out < 0)
-    out[missing] = missing
+    out[missing] = _P + missing
     return out
 
 

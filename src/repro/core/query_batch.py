@@ -1,0 +1,262 @@
+"""Batched summary queries on the frozen serving artifact.
+
+`Summary.neighbors` (Algorithm 4) answers one query per Python call; the
+serving workload is thousands of concurrent `neighbors`/`edge_exists`
+queries against an immutable summary (`PackedSummary`). This module answers
+whole batches at once, in three phases:
+
+  gather   climb all ancestor chains level-synchronously and gather every
+           incident edge's pre-resolved (lo, hi, sign) interval — flat
+           segment arrays, one CSR expansion (`segmented_indices`) total.
+  sweep    turn intervals into per-query active DFS-position ranges. Three
+           interchangeable backends:
+             * ``numpy``  — one global event sweep (lexsort + cumsum); the
+               per-query signed sums never interact because each query's
+               events sum to zero, so a single flat cumsum serves the batch.
+             * ``jax``    — jit'd fixed-shape sweep over (B, E)-padded rows
+               (argsort + cumsum per row), cached on padded shapes.
+             * ``pallas`` — the `kernels/interval_expand` compare-and-sum
+               kernel evaluates the signed membership count at every interval
+               boundary directly (count at a boundary == the sweep's running
+               sum over the range it opens), trading the sort for an
+               MXU/VPU-friendly O(E·P) tile reduction.
+  expand   shared range-to-leaf expansion: one `segmented_indices` gather,
+           drop each query's own position, sort per query. Because every
+           backend feeds the same expansion with the same ranges, answers are
+           bit-identical across backends (test-enforced) and identical to
+           `Summary.neighbors` / decompressed rows.
+
+`edge_exists_batch` is the one-probe special case: the signed membership
+count of v's DFS position in u's chain intervals, > 0 iff the edge exists.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.summary_ir import PackedSummary, segmented_indices
+
+BACKENDS = ("numpy", "jax", "pallas")
+
+_JAX_SWEEP_CACHE: dict = {}
+_JAX_COUNT_CACHE: dict = {}
+
+
+def _require_backend(backend: str):
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; use one of {BACKENDS}")
+
+
+# ---------------------------------------------------------------------------
+# gather phase (shared by all backends)
+# ---------------------------------------------------------------------------
+def _gather_chain_intervals(ps: PackedSummary, vs: np.ndarray):
+    """Flat (seg, lo, hi, sign) of every edge incident to each query's
+    ancestor chain. ``seg`` indexes into ``vs`` and is non-decreasing only
+    after explicit sorting — chains are emitted level by level."""
+    vs = np.asarray(vs, dtype=np.int64)
+    seg = np.arange(vs.size, dtype=np.int64)
+    node = vs
+    segs, nodes = [seg], [node]
+    for _ in range(ps.max_depth):
+        node = ps.parent[node].astype(np.int64)
+        up = node >= 0
+        if not up.any():
+            break
+        seg, node = seg[up], node[up]
+        segs.append(seg)
+        nodes.append(node)
+    seg_n = np.concatenate(segs)
+    nodes = np.concatenate(nodes)
+    lens = ps.inc_ptr[nodes + 1] - ps.inc_ptr[nodes]
+    idx = segmented_indices(ps.inc_ptr[nodes], lens)
+    ent_seg = np.repeat(seg_n, lens)
+    return ent_seg, ps.inc_lo[idx], ps.inc_hi[idx], ps.inc_sign[idx]
+
+
+def _padded_batch(ent_seg, lo, hi, sg, B: int):
+    """Scatter the flat per-entry intervals into pow2-padded (Bp, E) int32
+    tiles — the shared fixed-shape layout of the jax and pallas backends.
+    Padded slots are (0, 0, 0): zero-sign empty intervals that match nothing
+    and move no count."""
+    from repro.kernels.common import pow2
+
+    cnt = np.bincount(ent_seg, minlength=B)
+    E = pow2(int(cnt.max()), floor=8)
+    Bp = pow2(B, floor=8)
+    order = np.argsort(ent_seg, kind="stable")
+    ends = np.cumsum(cnt)
+    rank = np.arange(ent_seg.size, dtype=np.int64) - np.repeat(ends - cnt, cnt)
+    rows = ent_seg[order]
+    out = []
+    for col in (lo, hi, sg):
+        m = np.zeros((Bp, E), dtype=np.int32)
+        m[rows, rank] = col[order]
+        out.append(m)
+    return (*out, Bp, E)
+
+
+# ---------------------------------------------------------------------------
+# sweep phase: intervals -> active (seg, start, len) ranges
+# ---------------------------------------------------------------------------
+def _ranges_numpy(ent_seg, lo, hi, sg, B: int):
+    """One flat event sweep over the whole batch. Each interval contributes
+    (+s at lo, -s at hi); within a query the running sum over sorted events
+    is the membership count of the half-open range a boundary opens. Event
+    sums are zero per query, so the global cumsum needs no per-segment
+    reset."""
+    if ent_seg.size == 0:
+        z = np.zeros(0, dtype=np.int64)
+        return z, z, z
+    pos = np.concatenate([lo, hi])
+    val = np.concatenate([sg, -sg])
+    seg2 = np.concatenate([ent_seg, ent_seg])
+    order = np.lexsort((pos, seg2))
+    seg2, pos, val = seg2[order], pos[order], val[order]
+    cum = np.cumsum(val)
+    tail = np.empty(pos.size, dtype=bool)  # last event of each (seg, pos)
+    tail[-1] = True
+    tail[:-1] = (seg2[1:] != seg2[:-1]) | (pos[1:] != pos[:-1])
+    active = np.flatnonzero(tail & (cum > 0))
+    # a query's final boundary always sweeps to zero, so active events have a
+    # successor in the same segment and pos[i + 1] is this range's end
+    return seg2[active], pos[active], pos[active + 1] - pos[active]
+
+
+def _ranges_jax(ent_seg, lo, hi, sg, B: int):
+    """Fixed-shape per-row sweep, jit-cached on the pow2-padded (B, E).
+    Padded slots are (0, 0, 0) zero-weight events at position 0 — they move
+    no count and a boundary is only active when its count is positive."""
+    import jax
+    import jax.numpy as jnp
+
+    if ent_seg.size == 0:
+        z = np.zeros(0, dtype=np.int64)
+        return z, z, z
+    lo_p, hi_p, sg_p, Bp, E = _padded_batch(ent_seg, lo, hi, sg, B)
+    key = (Bp, E)
+    fn = _JAX_SWEEP_CACHE.get(key)
+    if fn is None:
+        @jax.jit
+        def fn(l, h, s):
+            pos = jnp.concatenate([l, h], axis=1)
+            val = jnp.concatenate([s, -s], axis=1)
+            order = jnp.argsort(pos, axis=1)
+            pos = jnp.take_along_axis(pos, order, axis=1)
+            val = jnp.take_along_axis(val, order, axis=1)
+            cum = jnp.cumsum(val, axis=1)
+            tail = jnp.concatenate(
+                [pos[:, 1:] != pos[:, :-1],
+                 jnp.ones((pos.shape[0], 1), dtype=bool)], axis=1)
+            nxt = jnp.concatenate([pos[:, 1:], pos[:, -1:]], axis=1)
+            return pos, nxt, tail & (cum > 0)
+        _JAX_SWEEP_CACHE[key] = fn
+    pos, nxt, act = (np.asarray(a) for a in fn(lo_p, hi_p, sg_p))
+    rseg, col = np.nonzero(act)
+    start = pos[rseg, col].astype(np.int64)
+    return rseg.astype(np.int64), start, nxt[rseg, col].astype(np.int64) - start
+
+
+def _ranges_pallas(ent_seg, lo, hi, sg, B: int):
+    """Boundary evaluation through the interval-expand kernel: probe every
+    (sorted) interval boundary, keep boundaries whose signed membership
+    count is positive. No cumsum — the count at a boundary IS the sweep's
+    running sum there."""
+    from repro.kernels.interval_expand.ops import batch_interval_counts
+
+    if ent_seg.size == 0:
+        z = np.zeros(0, dtype=np.int64)
+        return z, z, z
+    lo_p, hi_p, sg_p, _, _ = _padded_batch(ent_seg, lo, hi, sg, B)
+    pos = np.sort(np.concatenate([lo_p, hi_p], axis=1), axis=1)
+    cnt = batch_interval_counts(lo_p, hi_p, sg_p, pos, backend="pallas")
+    tail = np.empty(pos.shape, dtype=bool)
+    tail[:, -1] = True
+    tail[:, :-1] = pos[:, 1:] != pos[:, :-1]
+    rseg, col = np.nonzero(tail & (cnt > 0))
+    start = pos[rseg, col].astype(np.int64)
+    return (rseg.astype(np.int64), start,
+            pos[rseg, col + 1].astype(np.int64) - start)
+
+
+_RANGES = {"numpy": _ranges_numpy, "jax": _ranges_jax, "pallas": _ranges_pallas}
+
+
+# ---------------------------------------------------------------------------
+# expand phase (shared) and the public batch queries
+# ---------------------------------------------------------------------------
+def _expand_ranges(ps: PackedSummary, vs, rseg, rstart, rlen, B: int):
+    hits = segmented_indices(rstart, rlen)
+    hseg = np.repeat(rseg, rlen)
+    keep = hits != ps.pos_of[vs[hseg]]  # each query drops its own position
+    hits, hseg = hits[keep], hseg[keep]
+    ids = ps.order[hits].astype(np.int64)
+    order = np.lexsort((ids, hseg))
+    hseg, ids = hseg[order], ids[order]
+    indptr = np.zeros(B + 1, dtype=np.int64)
+    np.cumsum(np.bincount(hseg, minlength=B), out=indptr[1:])
+    return indptr, ids
+
+
+def neighbors_batch(ps: PackedSummary, vs, backend: str = "numpy"):
+    """Batched Algorithm 4: the neighborhood of every query leaf.
+
+    Returns CSR ``(indptr, ids)`` — query i's neighbors are
+    ``ids[indptr[i]:indptr[i+1]]``, sorted ascending, bit-identical to
+    ``Summary.neighbors(vs[i])``."""
+    _require_backend(backend)
+    vs = np.asarray(vs, dtype=np.int64)
+    ent_seg, lo, hi, sg = _gather_chain_intervals(ps, vs)
+    rseg, rstart, rlen = _RANGES[backend](ent_seg, lo, hi, sg, vs.size)
+    return _expand_ranges(ps, vs, rseg, rstart, rlen, vs.size)
+
+
+def edge_exists_batch(ps: PackedSummary, us, vs, backend: str = "numpy"):
+    """Batched membership probes: does edge (us[i], vs[i]) exist?
+
+    The signed count of v's DFS position over the intervals incident to u's
+    ancestor chain is exactly the p-minus-n count of Sect. II-B; the edge
+    exists iff it is positive (and u != v)."""
+    _require_backend(backend)
+    us = np.asarray(us, dtype=np.int64)
+    vs = np.asarray(vs, dtype=np.int64)
+    B = us.size
+    ent_seg, lo, hi, sg = _gather_chain_intervals(ps, us)
+    pv = ps.pos_of[vs]
+    if ent_seg.size == 0:
+        return np.zeros(B, dtype=bool)
+    if backend == "numpy":
+        inside = (lo <= pv[ent_seg]) & (pv[ent_seg] < hi)
+        cnt = np.zeros(B, dtype=np.int64)
+        np.add.at(cnt, ent_seg[inside], sg[inside])
+    else:
+        from repro.kernels.interval_expand.ops import batch_interval_counts
+
+        lo_p, hi_p, sg_p, Bp, _ = _padded_batch(ent_seg, lo, hi, sg, B)
+        probes = np.full((Bp, 1), -1, dtype=np.int32)
+        probes[:B, 0] = pv
+        if backend == "pallas":
+            cnt = batch_interval_counts(lo_p, hi_p, sg_p, probes,
+                                        backend="pallas")[:B, 0]
+        else:
+            cnt = _jax_probe_counts(lo_p, hi_p, sg_p, probes)[:B, 0]
+    return (cnt > 0) & (us != vs)
+
+
+def _jax_probe_counts(lo_p, hi_p, sg_p, probes):
+    import jax
+    import jax.numpy as jnp
+
+    key = lo_p.shape
+    fn = _JAX_COUNT_CACHE.get(key)
+    if fn is None:
+        @jax.jit
+        def fn(l, h, s, p):
+            inside = (l <= p) & (p < h)
+            return (inside * s).sum(axis=1, keepdims=True)
+        _JAX_COUNT_CACHE[key] = fn
+    return np.asarray(fn(lo_p, hi_p, sg_p, probes)).astype(np.int64)
+
+
+def unpack_csr(indptr: np.ndarray, ids: np.ndarray) -> list:
+    """CSR batch answer -> list of per-query arrays (convenience)."""
+    return [ids[indptr[i]: indptr[i + 1]] for i in range(indptr.size - 1)]

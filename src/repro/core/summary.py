@@ -22,7 +22,8 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core.summary_ir import SummaryIR, segmented_indices
+from repro.core.summary_ir import (SummaryIR, pack_for_serving,
+                                   segmented_indices)
 from repro.graphs.csr import Graph
 
 
@@ -254,6 +255,11 @@ class Summary:
             "n_supernodes": int(self.alive().shape[0]),
             "n_roots": int(self.roots().shape[0]),
         }
+
+    def pack_for_serving(self):
+        """Freeze into the immutable batched-serving artifact
+        (`summary_ir.PackedSummary`; query it via `core.query_batch`)."""
+        return pack_for_serving(self)
 
     def invalidate_caches(self):
         self._ir = None

@@ -224,3 +224,141 @@ class SummaryIR:
             return idx, idx
         seg = np.repeat(np.arange(xs.size, dtype=np.int64), lens)
         return self.inc_eid[idx], seg
+
+
+# ---------------------------------------------------------------------------
+# Frozen serving artifact
+# ---------------------------------------------------------------------------
+def pack_sign_bits(sign: np.ndarray) -> np.ndarray:
+    """(k,) ±1 signs -> bit-packed uint32 words (bit set = positive)."""
+    sign = np.asarray(sign, dtype=np.int64)
+    bits = np.zeros((sign.size + 31) // 32, dtype=np.uint32)
+    pos = np.flatnonzero(sign > 0)
+    if pos.size:
+        np.bitwise_or.at(bits, pos >> 5, np.uint32(1) << (pos & 31).astype(np.uint32))
+    return bits
+
+
+def unpack_sign_bits(bits: np.ndarray, k: int) -> np.ndarray:
+    """Inverse of `pack_sign_bits`: uint32 words -> (k,) int64 ±1 signs."""
+    e = np.arange(k, dtype=np.int64)
+    hit = (bits[e >> 5] >> (e & 31).astype(np.uint32)) & np.uint32(1)
+    return np.where(hit.astype(bool), 1, -1).astype(np.int64)
+
+
+class PackedSummary:
+    """Frozen, device-ready serving artifact of one (pruned) summary.
+
+    The mutable `Summary` answers one query at a time through lazily built
+    caches; serving wants an immutable blob of flat arrays that batched
+    backends (NumPy / JAX / Pallas, `core/query_batch.py`) can gather from
+    without touching the forest again. Serialized state (``save``/``load``,
+    compact ``.npz``):
+
+      ``parent/first/last``   interval table per supernode id (int32)
+      ``order``               leaf id per global DFS position (int32)
+      ``inc_ptr/inc_eid``     CSR signed-edge incidence per supernode
+      ``edge_x/edge_y``       edge endpoints (int32)
+      ``sign_bits``           1 bit per edge (set = p-edge), uint32-packed
+
+    Everything else is derived on construction: ``pos_of`` inverts ``order``;
+    ``inc_lo/inc_hi/inc_sign`` pre-resolve, for every incidence entry, the
+    *other* endpoint's DFS interval and the edge sign, so a query never
+    chases ``edge_x/edge_y`` indirection at serve time; ``max_depth`` bounds
+    the ancestor-chain climb. DESIGN.md §7.
+    """
+
+    __slots__ = (
+        "n_leaves", "n_ids", "parent", "first", "last", "order",
+        "inc_ptr", "inc_eid", "edge_x", "edge_y", "sign_bits",
+        "pos_of", "inc_lo", "inc_hi", "inc_sign", "max_depth",
+    )
+
+    def __init__(self, n_leaves: int, parent, first, last, order,
+                 inc_ptr, inc_eid, edge_x, edge_y, sign_bits):
+        self.n_leaves = int(n_leaves)
+        self.n_ids = int(np.asarray(parent).shape[0])
+        self.parent = np.asarray(parent, dtype=np.int32)
+        self.first = np.asarray(first, dtype=np.int32)
+        self.last = np.asarray(last, dtype=np.int32)
+        self.order = np.asarray(order, dtype=np.int32)
+        self.inc_ptr = np.asarray(inc_ptr, dtype=np.int64)
+        self.inc_eid = np.asarray(inc_eid, dtype=np.int32)
+        self.edge_x = np.asarray(edge_x, dtype=np.int32)
+        self.edge_y = np.asarray(edge_y, dtype=np.int32)
+        self.sign_bits = np.asarray(sign_bits, dtype=np.uint32)
+        self._derive()
+
+    @property
+    def n_edges(self) -> int:
+        return int(self.edge_x.shape[0])
+
+    def _derive(self):
+        self.pos_of = self.first[: self.n_leaves].astype(np.int64)
+        sign = unpack_sign_bits(self.sign_bits, self.n_edges)
+        # per incidence entry: owning node, then the other endpoint's interval
+        node = np.repeat(np.arange(self.n_ids, dtype=np.int64),
+                         np.diff(self.inc_ptr))
+        eid = self.inc_eid.astype(np.int64)
+        ex, ey = self.edge_x[eid].astype(np.int64), self.edge_y[eid].astype(np.int64)
+        other = np.where(ex == node, ey, ex)
+        self.inc_lo = self.first[other].astype(np.int64)
+        self.inc_hi = self.last[other].astype(np.int64)
+        self.inc_sign = sign[eid]
+        # deepest leaf chain, by climbing all leaves level-synchronously
+        depth = 0
+        cur = self.parent[: self.n_leaves].astype(np.int64)
+        cur = cur[cur >= 0]
+        while cur.size:
+            depth += 1
+            cur = self.parent[cur].astype(np.int64)
+            cur = cur[cur >= 0]
+        self.max_depth = depth
+
+    # ------------------------------------------------------------------- io
+    @staticmethod
+    def _npz_path(path: str) -> str:
+        # savez_compressed appends ".npz" to suffix-less paths; normalize in
+        # BOTH directions so save(p) and load(p) always name the same file
+        return path if path.endswith(".npz") else path + ".npz"
+
+    def save(self, path: str) -> str:
+        path = self._npz_path(path)
+        np.savez_compressed(
+            path, n_leaves=np.int64(self.n_leaves), parent=self.parent,
+            first=self.first, last=self.last, order=self.order,
+            inc_ptr=self.inc_ptr, inc_eid=self.inc_eid,
+            edge_x=self.edge_x, edge_y=self.edge_y, sign_bits=self.sign_bits,
+            n_edges=np.int64(self.n_edges))
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "PackedSummary":
+        with np.load(cls._npz_path(path)) as d:
+            return cls(int(d["n_leaves"]), d["parent"], d["first"], d["last"],
+                       d["order"], d["inc_ptr"], d["inc_eid"],
+                       d["edge_x"], d["edge_y"], d["sign_bits"])
+
+    def nbytes(self) -> int:
+        """Serialized payload size (uncompressed array bytes)."""
+        return sum(getattr(self, f).nbytes for f in (
+            "parent", "first", "last", "order", "inc_ptr", "inc_eid",
+            "edge_x", "edge_y", "sign_bits"))
+
+
+def pack_for_serving(summary) -> PackedSummary:
+    """Freeze a (pruned) `Summary` into the immutable serving artifact.
+
+    Accepts any object with ``n_leaves``/``parent``/``edges`` — the
+    `Summary` dataclass itself — without importing it (core.summary already
+    imports this module)."""
+    parent = np.asarray(summary.parent, dtype=np.int64)
+    n = int(summary.n_leaves)
+    if parent.shape[0] >= np.iinfo(np.int32).max:
+        raise ValueError("packed artifact uses int32 ids; summary too large")
+    edges = np.asarray(summary.edges, dtype=np.int64).reshape(-1, 3)
+    ir = SummaryIR(parent, n)
+    ir.build_incidence(edges)
+    return PackedSummary(
+        n, parent, ir.first, ir.last, ir.order, ir.inc_ptr, ir.inc_eid,
+        edges[:, 0], edges[:, 1], pack_sign_bits(edges[:, 2]))

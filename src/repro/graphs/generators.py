@@ -157,6 +157,17 @@ def bipartite_nested(n_left: int, n_right: int, levels: int = 3, seed: int = 0) 
     return Graph.from_edges(n_left + n_right, np.array(edges, dtype=np.int64))
 
 
+# Named serving-scale graphs, shared by the serving driver
+# (launch/summary_serve.py) and its benchmark (benchmarks/query_serving.py)
+# so the --edges presets and BENCH_serving_queries.json measure the SAME
+# graphs. Keys name the edge count.
+SERVING_GRAPHS = {
+    "smoke": lambda: caveman(40, 8, 0.05, seed=0),
+    "55k": lambda: caveman(1000, 11, 0.03, seed=0),
+    "220k": lambda: caveman(4000, 11, 0.03, seed=0),
+}
+
+
 def sample_subgraph(g: Graph, n_nodes: int, seed: int = 0) -> Graph:
     """Random induced subgraph (used for the Fig. 1(b) scalability series)."""
     rng = np.random.default_rng(seed)

@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: signed interval-membership counts.
+
+Role in the system: the batched summary-query engine (`core/query_batch.py`)
+answers ``neighbors``/``edge_exists`` on the packed serving artifact by
+counting, for every probe position p of a query, the signed number of
+incident-edge intervals that contain p:
+
+    count[b, p] = sum_e sign[b, e] * [lo[b, e] <= pos[b, p] < hi[b, e]]
+
+This is the membership-count inner loop of the interval sweep — for
+``edge_exists`` the probes are the partner positions, for ``neighbors`` they
+are the 2·deg interval boundaries (the count at a boundary equals the sweep's
+running sum over the half-open range it opens). The kernel follows the
+`seghist` layout: a (query, probe-block, interval-block) grid where each step
+broadcasts a (BE, 1) interval column against a (1, BP) probe row and
+accumulates compare-and-sum hits over the streamed interval axis.
+
+Padding contract: callers pad intervals with lo == hi == 0 (empty, matches no
+probe) and probes with -1 (contained in no interval, since lo >= 0).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _interval_count_block(lo_ref, hi_ref, sg_ref, pos_ref, out_ref):
+    k = pl.program_id(2)  # interval block (streamed, accumulated)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    lo = lo_ref[...]   # (1, BE) int32
+    hi = hi_ref[...]   # (1, BE) int32
+    sg = sg_ref[...]   # (1, BE) int32, padded entries are 0
+    p = pos_ref[...]   # (1, BP) int32, padded probes are -1
+    inside = (lo[0, :, None] <= p[0, None, :]) & (p[0, None, :] < hi[0, :, None])
+    out_ref[...] += (inside * sg[0, :, None]).sum(axis=0, keepdims=True)
+
+
+def interval_count_kernel(lo: jax.Array, hi: jax.Array, sign: jax.Array,
+                          pos: jax.Array, block_p: int = 512,
+                          block_e: int = 1024,
+                          interpret: bool = True) -> jax.Array:
+    """(B, E) int32 intervals + (B, P) int32 probes -> (B, P) int32 counts."""
+    B, E = lo.shape
+    P = pos.shape[1]
+    bp = min(block_p, max(P, 1))
+    be = min(block_e, max(E, 1))
+    Ep = pl.cdiv(max(E, 1), be) * be
+    Pp = pl.cdiv(max(P, 1), bp) * bp
+
+    def _pad(a, width, fill):
+        return jnp.full((B, width), fill, dtype=jnp.int32).at[:, : a.shape[1]].set(
+            a.astype(jnp.int32))
+
+    lo2, hi2, sg2 = _pad(lo, Ep, 0), _pad(hi, Ep, 0), _pad(sign, Ep, 0)
+    pos2 = _pad(pos, Pp, -1)
+    grid = (B, Pp // bp, Ep // be)
+    out = pl.pallas_call(
+        _interval_count_block,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, be), lambda b, j, k: (b, k)),
+            pl.BlockSpec((1, be), lambda b, j, k: (b, k)),
+            pl.BlockSpec((1, be), lambda b, j, k: (b, k)),
+            pl.BlockSpec((1, bp), lambda b, j, k: (b, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bp), lambda b, j, k: (b, j)),
+        out_shape=jax.ShapeDtypeStruct((B, Pp), jnp.int32),
+        interpret=interpret,
+    )(lo2, hi2, sg2, pos2)
+    return out[:, :P]

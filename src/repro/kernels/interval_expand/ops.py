@@ -1,0 +1,55 @@
+"""Public dispatch for batched signed interval-membership counts.
+
+`batch_interval_counts` is what the batched query engine calls: given each
+query's padded incident intervals (lo, hi, sign) and its probe positions,
+return the signed containment count per probe. ``backend="pallas"`` routes
+through the Pallas compare-and-sum kernel with a small jit cache keyed on
+power-of-two padded shapes (mirroring `kernels/seghist/ops`);
+``backend="numpy"`` is the plain broadcast reduction.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+
+from repro.kernels.common import default_interpret, pow2
+from repro.kernels.interval_expand.kernel import interval_count_kernel
+
+_JIT_CACHE: dict = {}
+
+
+def batch_interval_counts(lo: np.ndarray, hi: np.ndarray, sign: np.ndarray,
+                          pos: np.ndarray, backend: str = "numpy",
+                          interpret=None) -> np.ndarray:
+    """(B, E) int intervals + (B, P) int probes -> (B, P) int64 counts.
+
+    Padding contract: interval slots beyond a query's degree carry
+    lo == hi == 0 (and sign 0); probe slots beyond a query's probe count are
+    -1. Both match nothing, so padded slots contribute zero.
+    """
+    B, E = lo.shape
+    P = pos.shape[1]
+    if B == 0 or P == 0:
+        return np.zeros((B, P), dtype=np.int64)
+    if backend != "pallas":
+        inside = (lo[:, :, None] <= pos[:, None, :]) & (pos[:, None, :] < hi[:, :, None])
+        return (inside * sign[:, :, None].astype(np.int64)).sum(axis=1)
+    if interpret is None:
+        interpret = default_interpret()
+    Ep = pow2(int(E), floor=128)
+    Pp = pow2(int(P), floor=128)
+    key = (Ep, Pp, interpret)
+    fn = _JIT_CACHE.get(key)
+    if fn is None:
+        fn = jax.jit(
+            lambda l, h, s, p: interval_count_kernel(l, h, s, p, interpret=interpret))
+        _JIT_CACHE[key] = fn
+
+    def _pad(a, width, fill):
+        out = np.full((B, width), fill, dtype=np.int32)
+        out[:, : a.shape[1]] = a
+        return out
+
+    counts = fn(_pad(lo, Ep, 0), _pad(hi, Ep, 0), _pad(sign, Ep, 0),
+                _pad(pos, Pp, -1))
+    return np.asarray(counts).astype(np.int64)[:, :P]

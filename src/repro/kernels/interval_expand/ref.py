@@ -1,0 +1,14 @@
+"""Pure-jnp reference for the interval-membership count kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def interval_counts(lo, hi, sign, pos):
+    """(B, E) intervals + (B, P) probes -> (B, P) int32 signed counts."""
+    lo = jnp.asarray(lo, dtype=jnp.int32)
+    hi = jnp.asarray(hi, dtype=jnp.int32)
+    sign = jnp.asarray(sign, dtype=jnp.int32)
+    pos = jnp.asarray(pos, dtype=jnp.int32)
+    inside = (lo[:, :, None] <= pos[:, None, :]) & (pos[:, None, :] < hi[:, :, None])
+    return (inside * sign[:, :, None]).sum(axis=1).astype(jnp.int32)

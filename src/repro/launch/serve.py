@@ -22,6 +22,18 @@ def mask_pad_logits(cfg, logits):
     return logits
 
 
+def pad_to_slots(chunk: list, slots: int) -> list:
+    """Pad a request chunk to exactly ``slots`` entries by repeating the last
+    one (fixed-slot batching needs a full batch; duplicates are discarded by
+    the caller). Raises on an empty chunk — there is nothing to repeat.
+
+    Shared by the LM `BatchServer` and the summary-query server
+    (`launch/summary_serve.py`)."""
+    if not chunk:
+        raise ValueError("cannot pad an empty chunk")
+    return list(chunk) + [chunk[-1]] * (slots - len(chunk))
+
+
 class BatchServer:
     """Fixed-slot continuous batching: requests occupy slots; every step is
     one batched decode; finished slots are refilled from the queue."""
@@ -35,13 +47,13 @@ class BatchServer:
 
     def run(self, prompts: list, gen_tokens: int = 16, greedy=True, seed=0):
         """prompts: list of 1-D int arrays (equal length for simplicity)."""
+        if not prompts:  # nothing queued: don't pad (chunk[-1] of []) or decode
+            return []
         cfg = self.cfg
         rng = np.random.default_rng(seed)
         out = []
         for i in range(0, len(prompts), self.B):
-            chunk = prompts[i : i + self.B]
-            while len(chunk) < self.B:
-                chunk.append(chunk[-1])
+            chunk = pad_to_slots(prompts[i : i + self.B], self.B)
             toks = jnp.asarray(np.stack(chunk), jnp.int32)
             plen = toks.shape[1]
             logits, cache = self.api.prefill(

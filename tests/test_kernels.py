@@ -8,6 +8,8 @@ from repro.graphs import generators as GG
 from repro.kernels.bitset_jaccard import ops as jops
 from repro.kernels.bitset_jaccard import ref as jref
 from repro.kernels.bitset_jaccard.kernel import pairwise_intersection_kernel
+from repro.kernels.interval_expand import ref as iref
+from repro.kernels.interval_expand.kernel import interval_count_kernel
 from repro.kernels.minhash import ops as mops
 from repro.kernels.minhash import ref as mref
 from repro.kernels.minhash.kernel import rowmin_hash_kernel
@@ -58,6 +60,35 @@ def test_jaccard_kernel_block_shapes(block_g, block_w):
     got = pairwise_intersection_kernel(jnp.asarray(bits), block_g=block_g,
                                        block_w=block_w, interpret=True)
     want = jref.pairwise_intersection(jnp.asarray(bits))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("B,E,P", [(1, 1, 1), (4, 33, 17), (8, 200, 513)])
+def test_interval_count_kernel_matches_ref(B, E, P):
+    rng = np.random.default_rng(B * E + P)
+    lo = rng.integers(0, 60, size=(B, E)).astype(np.int32)
+    hi = lo + rng.integers(0, 25, size=(B, E)).astype(np.int32)
+    sg = rng.choice([-1, 0, 1], size=(B, E)).astype(np.int32)
+    pos = rng.integers(-1, 90, size=(B, P)).astype(np.int32)
+    got = interval_count_kernel(jnp.asarray(lo), jnp.asarray(hi),
+                                jnp.asarray(sg), jnp.asarray(pos),
+                                interpret=True)
+    want = iref.interval_counts(lo, hi, sg, pos)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("block_p,block_e", [(8, 8), (512, 1024), (7, 5)])
+def test_interval_count_kernel_block_shapes(block_p, block_e):
+    rng = np.random.default_rng(9)
+    lo = rng.integers(0, 40, size=(3, 29)).astype(np.int32)
+    hi = lo + rng.integers(0, 12, size=(3, 29)).astype(np.int32)
+    sg = rng.choice([-1, 1], size=(3, 29)).astype(np.int32)
+    pos = rng.integers(0, 60, size=(3, 23)).astype(np.int32)
+    got = interval_count_kernel(jnp.asarray(lo), jnp.asarray(hi),
+                                jnp.asarray(sg), jnp.asarray(pos),
+                                block_p=block_p, block_e=block_e,
+                                interpret=True)
+    want = iref.interval_counts(lo, hi, sg, pos)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 

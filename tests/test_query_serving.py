@@ -1,0 +1,181 @@
+"""Batched summary-query serving (ISSUE 3 acceptance): every query backend —
+numpy flat sweep, jit/vmap jax sweep, Pallas interval-expand boundary counts —
+and the packed/reloaded artifact must answer `neighbors`/`edge_exists`
+bit-identically to the per-call `Summary.neighbors` / decompressed rows."""
+import numpy as np
+import pytest
+
+from repro.core import summarize
+from repro.core.query_batch import (BACKENDS, edge_exists_batch,
+                                    neighbors_batch, unpack_csr)
+from repro.core.summary_ir import (PackedSummary, pack_for_serving,
+                                   pack_sign_bits, unpack_sign_bits)
+from repro.graphs import generators as GG
+from repro.graphs.csr import Graph
+from repro.launch.summary_serve import SummaryQueryServer, make_queries
+
+
+def _graphs():
+    return [
+        ("er", GG.erdos_renyi(120, 0.05, seed=21)),
+        ("caveman", GG.caveman(12, 6, 0.05, seed=23)),
+        ("star", GG.star_of_cliques(16, 5, seed=25)),
+    ]
+
+
+def _all_neighbors_match(s, ps, backend):
+    vs = np.arange(s.n_leaves, dtype=np.int64)
+    want = [s.neighbors(int(v)) for v in vs]
+    indptr, ids = neighbors_batch(ps, vs, backend=backend)
+    got = unpack_csr(indptr, ids)
+    assert ids.dtype == np.int64
+    for v in range(s.n_leaves):
+        assert np.array_equal(got[v], want[v]), (backend, v)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("name,g", _graphs(), ids=lambda v: v if isinstance(v, str) else "")
+def test_neighbors_batch_matches_per_call(name, g, backend):
+    for steps in [(), (1, 2, 3)]:
+        s = summarize(g, T=5, seed=7, prune_steps=steps)
+        _all_neighbors_match(s, s.pack_for_serving(), backend)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_edge_exists_matches_decompress_rows(backend):
+    rng = np.random.default_rng(5)
+    for name, g in _graphs():
+        s = summarize(g, T=5, seed=9)
+        ps = s.pack_for_serving()
+        dec = s.decompress()
+        us = rng.integers(0, g.n, size=120)
+        vs = rng.integers(0, g.n, size=120)
+        want = np.array([dec.has_edge(int(u), int(v)) for u, v in zip(us, vs)])
+        got = edge_exists_batch(ps, us, vs, backend=backend)
+        assert got.dtype == bool
+        assert np.array_equal(got, want), (name, backend)
+
+
+def test_packed_roundtrip_bit_identical(tmp_path):
+    """save/load must preserve every serialized array AND every answer."""
+    g = GG.caveman(10, 6, 0.05, seed=3)
+    s = summarize(g, T=5, seed=3)
+    ps = pack_for_serving(s)
+    path = str(tmp_path / "packed.npz")
+    ps.save(path)
+    ps2 = PackedSummary.load(path)
+    for f in ("parent", "first", "last", "order", "inc_ptr", "inc_eid",
+              "edge_x", "edge_y", "sign_bits", "pos_of", "inc_lo", "inc_hi",
+              "inc_sign"):
+        assert np.array_equal(getattr(ps, f), getattr(ps2, f)), f
+    assert (ps.n_leaves, ps.n_ids, ps.max_depth) == (
+        ps2.n_leaves, ps2.n_ids, ps2.max_depth)
+    for backend in BACKENDS:
+        _all_neighbors_match(s, ps2, backend)
+    # suffix-less path: savez appends ".npz"; load must find the same file
+    p = ps.save(str(tmp_path / "noext"))
+    assert p.endswith("noext.npz")
+    assert PackedSummary.load(str(tmp_path / "noext")).n_edges == ps.n_edges
+
+
+def test_sign_bit_packing_roundtrip():
+    rng = np.random.default_rng(0)
+    for k in (0, 1, 31, 32, 33, 100):
+        sign = rng.choice([-1, 1], size=k)
+        assert np.array_equal(unpack_sign_bits(pack_sign_bits(sign), k), sign)
+
+
+def test_query_batch_random_graphs():
+    rng = np.random.default_rng(11)
+    for trial in range(8):
+        n = int(rng.integers(2, 32))
+        e = rng.integers(0, n, size=(max(int(n * n * rng.random() * 0.5), 1), 2))
+        g = Graph.from_edges(n, e)
+        s = summarize(g, T=4, seed=trial)
+        ps = s.pack_for_serving()
+        for backend in BACKENDS:
+            _all_neighbors_match(s, ps, backend)
+
+
+def test_query_batch_edgeless_and_singleton():
+    # no edges: every answer is empty; n=1: the only query answers empty
+    for g in (Graph.from_edges(5, np.zeros((0, 2), dtype=np.int64)),
+              Graph.from_edges(1, np.zeros((0, 2), dtype=np.int64))):
+        s = summarize(g, T=2, seed=0)
+        ps = s.pack_for_serving()
+        for backend in BACKENDS:
+            indptr, ids = neighbors_batch(ps, np.arange(g.n), backend=backend)
+            assert ids.size == 0 and indptr[-1] == 0
+            assert not edge_exists_batch(ps, np.zeros(3, dtype=np.int64),
+                                         np.zeros(3, dtype=np.int64),
+                                         backend=backend).any()
+
+
+def test_unknown_backend_rejected():
+    g = GG.caveman(4, 4, 0.0, seed=0)
+    ps = summarize(g, T=2, seed=0).pack_for_serving()
+    with pytest.raises(ValueError):
+        neighbors_batch(ps, np.array([0]), backend="cuda")
+    with pytest.raises(ValueError):
+        SummaryQueryServer(ps, backend="cuda")
+
+
+def test_interval_expand_kernel_matches_numpy():
+    from repro.kernels.interval_expand.ops import batch_interval_counts
+    rng = np.random.default_rng(2)
+    for B, E, P in [(1, 1, 1), (3, 17, 9), (8, 130, 257)]:
+        lo = rng.integers(0, 50, size=(B, E)).astype(np.int32)
+        hi = lo + rng.integers(0, 20, size=(B, E)).astype(np.int32)
+        sg = rng.choice([-1, 0, 1], size=(B, E)).astype(np.int32)
+        pos = rng.integers(-1, 70, size=(B, P)).astype(np.int32)
+        want = batch_interval_counts(lo, hi, sg, pos, backend="numpy")
+        got = batch_interval_counts(lo, hi, sg, pos, backend="pallas")
+        assert np.array_equal(got, want), (B, E, P)
+
+
+def test_query_server_mixed_queries_in_order():
+    g = GG.caveman(12, 6, 0.05, seed=1)
+    s = summarize(g, T=5, seed=1)
+    ps = s.pack_for_serving()
+    queries = make_queries(g.n, 101, edge_frac=0.4, seed=4)  # 101 % slots != 0
+    for backend in ("numpy", "jax"):
+        server = SummaryQueryServer(ps, batch_slots=16, backend=backend)
+        answers = server.run(queries)
+        assert len(answers) == len(queries)
+        for q, a in zip(queries, answers):
+            if q[0] == "neighbors":
+                assert np.array_equal(a, s.neighbors(q[1])), q
+            else:
+                assert a == bool(np.isin(q[2], s.neighbors(q[1]))), q
+    assert SummaryQueryServer(ps).run([]) == []
+    with pytest.raises(ValueError):
+        SummaryQueryServer(ps).run([("bfs", 0)])
+
+
+def test_query_batch_property_hypothesis():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=20, deadline=None)
+    @given(n=st.integers(min_value=1, max_value=20),
+           density=st.floats(min_value=0.0, max_value=0.7),
+           seed=st.integers(min_value=0, max_value=2 ** 31 - 1))
+    def inner(n, density, seed):
+        rng = np.random.default_rng(seed)
+        k = int(n * n * density)
+        e = (rng.integers(0, n, size=(k, 2)) if k
+             else np.zeros((0, 2), dtype=np.int64))
+        g = Graph.from_edges(n, e)
+        s = summarize(g, T=3, seed=seed % 89)
+        ps = s.pack_for_serving()
+        dec = s.decompress()
+        us = rng.integers(0, n, size=2 * n)
+        ws = rng.integers(0, n, size=2 * n)
+        for backend in BACKENDS:
+            _all_neighbors_match(s, ps, backend)
+            got = edge_exists_batch(ps, us, ws, backend=backend)
+            want = np.array([dec.has_edge(int(u), int(w))
+                             for u, w in zip(us, ws)])
+            assert np.array_equal(got, want), backend
+
+    inner()

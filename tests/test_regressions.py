@@ -1,0 +1,78 @@
+"""Regression tests for the ISSUE 3 latent-bug sweep in the merge/emission
+path: recursion-limit leaking, min-hash sentinel collisions, and fixed-slot
+padding of short/empty serving chunks."""
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import minhash
+from repro.core.slugger import SluggerState, _emit_encoding_reference
+from repro.graphs import generators as GG
+from repro.launch.serve import pad_to_slots
+
+
+# ---------------------------------------------------------------- slugger
+def test_recursionlimit_restored_on_emission_error(monkeypatch):
+    """An exception inside the recursive-DP emission must not leak the
+    inflated recursion limit into the caller's process (try/finally)."""
+    g = GG.caveman(6, 5, 0.05, seed=2)
+    state = SluggerState(g)
+    state.merge(0, 1)  # nonzero height so the limit is actually raised
+
+    def boom(*a, **k):
+        assert sys.getrecursionlimit() >= 2000  # the raise DID happen
+        raise RuntimeError("mid-emission failure")
+
+    monkeypatch.setattr("repro.core.slugger.encode_dp.TreeView", boom)
+    before = sys.getrecursionlimit()
+    with pytest.raises(RuntimeError, match="mid-emission"):
+        _emit_encoding_reference(state)
+    assert sys.getrecursionlimit() == before
+
+
+# ---------------------------------------------------------------- minhash
+def test_root_shingles_sentinel_outside_hash_range():
+    """Leafless ids must get sentinels disjoint from [0, _P) — a root's own
+    id is a valid hash value and can collide with another root's genuine
+    shingle."""
+    g = GG.caveman(3, 4, 0.0, seed=0)
+    root_of = np.full(g.n, 13, dtype=np.int64)  # all leaves under root 13
+    sh = minhash.root_shingles(g, root_of, seed=0, n_ids=20)
+    missing = np.setdiff1d(np.arange(20), [13])
+    assert sh[13] < minhash._P  # genuine shingle stays a hash value
+    assert (sh[missing] >= minhash._P).all()  # sentinels can't collide with it
+    assert np.unique(sh[missing]).size == missing.size  # nor with each other
+
+
+def test_leafless_root_not_grouped_by_id_collision(monkeypatch):
+    """Regression: with node_level_min forced so that root 5's shingle equals
+    leafless root 7's id, the old ``out[missing] = missing`` sentinel put 5
+    and 7 in one candidate group; the offset sentinel must not."""
+    g = GG.caveman(2, 2, 0.0, seed=0)  # 4 leaves
+    monkeypatch.setattr(minhash, "node_level_min",
+                        lambda g_, seed: np.array([7, 7, 3, 3], dtype=np.int64))
+    root_of = np.array([5, 5, 6, 6], dtype=np.int64)
+    alive = np.array([5, 6, 7], dtype=np.int64)  # 7 is alive but leafless
+    sh = minhash.root_shingles(g, root_of, seed=0, n_ids=8)
+    assert sh[5] == 7 and sh[7] != 7  # the collision the old sentinel had
+    groups = minhash.candidate_groups(g, root_of, alive, seed=0)
+    assert all(7 not in grp for grp in groups)
+
+
+# ---------------------------------------------------------------- serving
+def test_pad_to_slots():
+    assert pad_to_slots([1, 2], 4) == [1, 2, 2, 2]
+    assert pad_to_slots([1, 2, 3], 3) == [1, 2, 3]
+    with pytest.raises(ValueError):
+        pad_to_slots([], 4)
+
+
+def test_batch_server_empty_prompt_list():
+    """BatchServer.run([]) used to crash on chunk[-1]; it must return []."""
+    from repro.configs.registry import get_config
+    from repro.launch.serve import BatchServer
+
+    cfg = get_config("qwen2.5-3b", smoke=True)
+    server = BatchServer(cfg, params=None)  # params untouched for 0 requests
+    assert server.run([]) == []

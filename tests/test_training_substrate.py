@@ -107,7 +107,9 @@ def test_resilient_loop_restores_persistent(tmp_path):
         return {"x": state["x"] + batch}, {"loss": 0.0}
 
     def restore_fn():
-        st, sp = CKPT.restore({"x": jnp.int64(0)}, str(tmp_path))
+        # x64 is disabled in tests, so the restore template must request the
+        # 32-bit dtype explicitly (jnp.int64 would warn and truncate)
+        st, sp = CKPT.restore({"x": jnp.int32(0)}, str(tmp_path))
         boom["armed"] = False  # "replacement node" fixes the fault
         return {"x": int(st["x"])}, sp
 
