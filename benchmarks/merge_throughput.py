@@ -26,12 +26,13 @@ ENGINES = ("loop", "numpy", "batched")
 def _merge_phase(g, backend: str, T: int, seed: int = 0, max_group: int = 500):
     state = SluggerState(g)
     rng = np.random.default_rng(seed)
+    streams = np.random.SeedSequence(seed).spawn(max(T, 1))
     merges = groups_n = 0
     t0 = time.perf_counter()
     for t in range(1, T + 1):
         theta = 0.0 if t == T else 1.0 / (1 + t)
         groups = candidate_groups(g, state.root_of, state.alive,
-                                  seed=seed * 7919 + t, max_group=max_group)
+                                  seed=streams[t - 1], max_group=max_group)
         groups_n += len(groups)
         if backend == "loop":
             for grp in groups:

@@ -32,11 +32,12 @@ from repro.graphs import generators as GG
 def _merge_phase(g, T: int, seed: int = 0):
     state = SluggerState(g)
     rng = np.random.default_rng(seed)
+    streams = np.random.SeedSequence(seed).spawn(max(T, 1))
     t0 = time.perf_counter()
     for t in range(1, T + 1):
         theta = 0.0 if t == T else 1.0 / (1 + t)
         groups = candidate_groups(g, state.root_of, state.alive,
-                                  seed=seed * 7919 + t, max_group=500)
+                                  seed=streams[t - 1], max_group=500)
         process_groups(state, groups, theta, rng, backend="numpy")
     return state, time.perf_counter() - t0
 

@@ -21,6 +21,7 @@ SUITES = {
     "pipeline": pipeline_breakdown.run, # stage-level IR speedups (BENCH_pipeline)
     "serving": query_serving.run,       # batched query qps (BENCH_serving_queries)
     "scalability": scalability.run,     # Fig 1b
+    "partitioned": scalability.run_partitioned,  # engine partition sweep (BENCH_partitioned)
     "iterations": iterations.run,       # Table III
     "pruning": pruning_bench.run,       # Table IV
     "height": height.run,               # Table V

@@ -1,11 +1,25 @@
 """Fig. 1(b): SLUGGER scales linearly with |E| (node-sampled series of the
-largest stand-in, as the paper samples UK-05)."""
+largest stand-in, as the paper samples UK-05) — plus the partition sweep of
+the stage-based engine (DESIGN.md §8).
+
+  PYTHONPATH=src python -m benchmarks.scalability                 # Fig 1b
+  PYTHONPATH=src python -m benchmarks.scalability --partitions 1,2,4
+                                                                  # sweep
+
+The partition sweep times ONLY the merge phase (the five engine stages, no
+emission/pruning) on the 220k-edge serving bench graph (55k with --quick),
+against the seed per-group loop engine as the baseline — the same protocol
+`benchmarks/merge_throughput.py` uses. Artifact: ``BENCH_partitioned.json``.
+"""
 from __future__ import annotations
+
+import argparse
 
 import numpy as np
 
 from benchmarks.common import Timer, fmt_table, save_result
 from repro.core import summarize
+from repro.core.engine import STAGE_ORDER, SummarizerEngine
 from repro.graphs import datasets, generators
 
 
@@ -29,3 +43,78 @@ def run(quick: bool = True):
     print(f"   max/min time-per-edge ratio: {ratio:.2f} (linear ⇒ ≈ constant)")
     save_result("scalability", {"series": payload, "tpe_ratio": ratio})
     return payload
+
+
+def _merge_phase_secs(engine: SummarizerEngine, g) -> dict:
+    engine.merge_forest(g)
+    stats = engine.stats
+    return {
+        "sec": float(sum(stats[name] for name in STAGE_ORDER)),
+        "stages": {name: float(stats[name]) for name in STAGE_ORDER},
+        "merges": int(stats["merges"]),
+    }
+
+
+def run_partitioned(quick: bool = True, partitions=(1, 2, 4),
+                    backend: str = "numpy", T: int = 5):
+    """Partition sweep: merge-phase wall time at each partition count,
+    loop-engine baseline included. Writes ``BENCH_partitioned.json``."""
+    name, g = (("caveman-55k", generators.caveman(1000, 11, 0.03, seed=0))
+               if quick else
+               ("caveman-220k", generators.caveman(4000, 11, 0.03, seed=0)))
+    loop = _merge_phase_secs(
+        SummarizerEngine(partitions=1, backend="loop", T=T, seed=0), g)
+    rows = [[name, g.m, "loop", 1, f"{loop['sec']:.2f}s", loop["merges"],
+             "1.00x", "-"]]
+    sweep = {}
+    for k in partitions:
+        res = _merge_phase_secs(
+            SummarizerEngine(partitions=int(k), backend=backend, T=T,
+                             seed=0), g)
+        res["speedup_vs_loop"] = loop["sec"] / res["sec"]
+        sweep[int(k)] = res
+    # "vs p1" is meaningful only when partitions=1 is actually in the sweep
+    base_p1 = sweep[1]["sec"] if 1 in sweep else None
+    for k, res in sweep.items():
+        res["speedup_vs_p1"] = (base_p1 / res["sec"]
+                                if base_p1 is not None else None)
+        rows.append([name, g.m, backend, k, f"{res['sec']:.2f}s",
+                     res["merges"], f"{res['speedup_vs_loop']:.2f}x",
+                     "-" if res["speedup_vs_p1"] is None
+                     else f"{res['speedup_vs_p1']:.2f}x"])
+    # the sweep is only meaningful if every partition count merged the same
+    # forest — the engine guarantees it, assert it here too
+    merge_counts = {r["merges"] for r in sweep.values()}
+    assert len(merge_counts) == 1, f"partition counts disagree: {sweep}"
+    print(f"\n== Partition sweep: merge phase on {name} (T={T}) ==")
+    print(fmt_table(rows, ["graph", "m", "engine", "parts", "time", "merges",
+                           "vs loop", "vs p1"]))
+    payload = {"graph": name, "m": g.m, "T": T, "backend": backend,
+               "loop_baseline": loop, "partitions": sweep}
+    save_result("BENCH_partitioned", payload)
+    return payload
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--quick", action="store_true",
+                      help="small graph (default)")
+    mode.add_argument("--full", action="store_true",
+                      help="paper-scale settings (220k-edge sweep graph)")
+    ap.add_argument("--partitions", default=None,
+                    help="comma-separated partition counts; selects the "
+                         "partition-sweep mode (e.g. --partitions 1,2,4)")
+    ap.add_argument("--backend", default="numpy",
+                    choices=("numpy", "batched"))
+    args = ap.parse_args(argv)
+    if args.partitions:
+        ks = tuple(int(x) for x in args.partitions.split(","))
+        run_partitioned(quick=not args.full, partitions=ks,
+                        backend=args.backend)
+    else:
+        run(quick=not args.full)
+
+
+if __name__ == "__main__":
+    main()

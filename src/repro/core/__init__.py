@@ -1,5 +1,7 @@
 from repro.core.summary import Summary
 from repro.core.slugger import summarize, SluggerState
+from repro.core.engine import SummarizerEngine
 from repro.core import baselines, encode_dp, minhash, pruning
 
-__all__ = ["Summary", "summarize", "SluggerState", "baselines", "encode_dp", "minhash", "pruning"]
+__all__ = ["Summary", "summarize", "SluggerState", "SummarizerEngine",
+           "baselines", "encode_dp", "minhash", "pruning"]

@@ -1,14 +1,24 @@
-"""Distributed (JAX) engine for SLUGGER.
+"""Distributed (JAX) engine pieces for SLUGGER.
 
-Deployment story (DESIGN.md §2.2/§6): the O(|E|) scans (hashing, segment-min
-shingles) and the O(k²) in-group scoring are device-side, sharded with
-``shard_map`` over the mesh's data axis; only the tiny, inherently sequential
-merge decisions run on host. On a real pod the edge list lives sharded in HBM
-and never leaves the devices; the host sees (n_roots,) shingles and per-group
-top-pairs.
+Deployment story (DESIGN.md §2.2/§6/§8): the O(|E|) scans (hashing,
+segment-min shingles) and the O(k²) in-group scoring are device-side,
+sharded with ``shard_map`` over the mesh's data axis; only the tiny,
+inherently sequential merge decisions run on host. On a real pod the edge
+list lives sharded in HBM and never leaves the devices; the host sees
+(n_roots,) shingles and per-group top-pairs.
+
+`shingle_provider` and `batched_jaccard_mesh` are the production hooks: the
+`SummarizerEngine` plugs them into its shingle stage and its bitset-Jaccard
+ranking whenever ``backend="batched"`` sees more than one device (or an
+explicit mesh) — this module is the engine's multi-device path, not a
+stand-alone demo.
 
 Engines:
   * ``shingles_sharded``     — edge-sharded minhash shingles (pmin combine)
+  * ``shingle_provider``     — the engine hook: sharded shingles + host
+                               root segment-min + leafless-root sentinel
+  * ``batched_jaccard_mesh`` — (B, G, W) bitset-Jaccard batches shard_map'd
+                               over the data axis, kernel per shard
   * ``greedy_group_matching``— vmapped on-device greedy matching per group
   * ``summarize_jax``        — hybrid engine: device scoring + host decisions,
                                exactness restored by the emission DP
@@ -24,6 +34,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.slugger import SluggerState, _emit_encoding
+from repro.core.minhash import rootwise_min
 from repro.core.pruning import prune
 from repro.graphs.csr import Graph
 
@@ -83,6 +94,103 @@ def shingles_sharded(mesh, data_axes=("data",)):
 
 def root_shingles_jax(node_sh, root_of, n_ids):
     return jax.ops.segment_min(node_sh, root_of, num_segments=n_ids)
+
+
+def _data_axes_of(mesh, data_axes):
+    if data_axes is not None:
+        return tuple(data_axes)
+    from repro.launch.mesh import dp_axes_of
+    return dp_axes_of(mesh)
+
+
+def shingle_provider(g: Graph, mesh, data_axes=None):
+    """Engine hook: mesh-sharded shingle computation (DESIGN.md §8).
+
+    Uploads the padded, edge-sharded adjacency once; returns
+    ``for_roots(root_of) -> shingle_fn(sub_seed, n_ids)`` matching the
+    `minhash.candidate_groups` provider protocol. Node-level minima come
+    from the `shingles_sharded` shard_map (local segment-min + cross-shard
+    pmin); the root-level segment-min and the leafless-root sentinel run on
+    host via the same `rootwise_min` the host path uses. Sentinels are
+    ``2^32 + id`` — device hashes are uint32, so they can never collide.
+    """
+    data_axes = _data_axes_of(mesh, data_axes)
+    n_shards = int(np.prod([mesh.shape[a] for a in data_axes]))
+    src = np.repeat(np.arange(g.n), np.diff(g.indptr)).astype(np.int32)
+    dst = np.asarray(g.indices, dtype=np.int32)
+    pad = (-src.size) % max(n_shards, 1)
+    src_p = jnp.asarray(np.concatenate([src, np.full(pad, g.n, np.int32)]))
+    dst_p = jnp.asarray(np.concatenate([dst, np.zeros(pad, np.int32)]))
+    sharded = shingles_sharded(mesh, data_axes)
+
+    def for_roots(root_of: np.ndarray):
+        root_of = np.asarray(root_of, dtype=np.int64)
+
+        def shingle_fn(sub_seed: int, n_ids: int) -> np.ndarray:
+            a = np.uint32((2654435761 * (int(sub_seed) | 1)) & 0xFFFFFFFF)
+            b = np.uint32((int(sub_seed) * 0x9E3779B9) & 0xFFFFFFFF)
+            node_sh = np.asarray(sharded(src_p, dst_p, g.n, a, b))
+            return rootwise_min(node_sh.astype(np.int64), root_of, n_ids,
+                                1 << 32)
+
+        return shingle_fn
+
+    return for_roots
+
+
+_MESH_JACCARD_CACHE: dict = {}
+
+
+def batched_jaccard_mesh(mesh, data_axes=None):
+    """Engine hook: the bitset-Jaccard dispatch shard_map'd over the mesh.
+
+    Returns ``fn((B, G, W) uint32) -> (B, G, G) float64``: the batch is
+    padded to a shard multiple of the data axis, each shard runs the vmap'd
+    Pallas `pairwise_intersection_kernel` on its slice, and the host turns
+    intersection counts into Jaccard exactly like the single-device
+    `kernels.bitset_jaccard.ops.batched_pairwise_jaccard` — so scores (and
+    therefore merge decisions) are bit-identical to the host path given the
+    same bitmaps.
+    """
+    from repro.kernels.bitset_jaccard.kernel import pairwise_intersection_kernel
+    from repro.kernels.common import default_interpret, pow2
+
+    data_axes = _data_axes_of(mesh, data_axes)
+    n_shards = int(np.prod([mesh.shape[a] for a in data_axes]))
+    spec = P(data_axes if len(data_axes) > 1 else data_axes[0])
+    # cache by mesh CONTENT, not object identity: the engine builds a fresh
+    # mesh per run, and equivalent meshes must reuse the same executables
+    mesh_key = (tuple(int(d.id) for d in np.asarray(mesh.devices).ravel()),
+                tuple(mesh.axis_names), tuple(mesh.shape.values()))
+
+    def fn(bits: np.ndarray) -> np.ndarray:
+        B, G, W = bits.shape
+        Wp = pow2(W)
+        # pad the batch to a pow2 multiple of the shard count so the jit
+        # cache stays small (same rule as the single-device ops tiling)
+        Bp = n_shards * pow2((B + n_shards - 1) // n_shards, floor=1)
+        batch = np.zeros((Bp, G, Wp), dtype=np.uint32)
+        batch[:B, :, :W] = bits
+        key = (mesh_key, Bp, G, Wp)
+        f = _MESH_JACCARD_CACHE.get(key)
+        if f is None:
+            interpret = default_interpret()
+            local = jax.vmap(
+                lambda bb: pairwise_intersection_kernel(bb, interpret=interpret))
+            try:  # pallas_call has no replication rule: disable the check
+                sm = _shard_map(local, mesh=mesh, in_specs=(spec,),
+                                out_specs=spec, check_rep=False)
+            except TypeError:  # newer jax renamed the kwarg
+                sm = _shard_map(local, mesh=mesh, in_specs=(spec,),
+                                out_specs=spec, check_vma=False)
+            f = jax.jit(sm)
+            _MESH_JACCARD_CACHE[key] = f
+        inter = np.asarray(f(batch)).astype(np.int64)
+        deg = np.diagonal(inter, axis1=1, axis2=2)  # popcount(x & x) = |x|
+        union = deg[:, :, None] + deg[:, None, :] - inter
+        return np.where(union > 0, inter / np.maximum(union, 1), 0.0)[:B]
+
+    return fn
 
 
 # --------------------------------------------------------------------------
@@ -199,11 +307,12 @@ def summarize_jax(
     from repro.core.minhash import candidate_groups
 
     state = SluggerState(g)
-    rng = np.random.default_rng(seed)
+    iter_streams = np.random.SeedSequence((seed, 31337)).spawn(max(T, 1))
     for t in range(1, T + 1):
         theta = 0.0 if t == T else 1.0 / (1 + t)
         alive = state.alive
-        groups = candidate_groups(g, state.root_of, alive, seed=seed * 31337 + t, max_group=max_group)
+        groups = candidate_groups(g, state.root_of, alive,
+                                  seed=iter_streams[t - 1], max_group=max_group)
         if not groups:
             continue
         K = max(len(gr) for gr in groups)

@@ -35,6 +35,87 @@ def _pair_cost(cnt, poss):
     return np.minimum(cnt, poss - cnt + 1)
 
 
+# ---------------------------------------------------------------------------
+# Shard-local merge plans (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+class MergePlan:
+    """Ordered merge decisions of ONE candidate group, recorded shard-local.
+
+    ``rounds[r] = (a_rows, z_rows)`` are disjoint local row pairs (indices
+    into ``members0``, the row → global-root map at build time); a pair in
+    round r+1 may reference a row merged in rounds ≤ r. Recording instead of
+    mutating the global state is what makes partition-parallel sweeps safe:
+    workspaces decide everything locally, and `apply_plans` replays all
+    groups' rounds against `SluggerState` in ONE canonical order — so the
+    minted parent ids (and therefore the summary) are bit-identical however
+    the groups were sharded or scheduled.
+    """
+
+    __slots__ = ("members0", "rounds")
+
+    def __init__(self, members0: np.ndarray):
+        self.members0 = np.asarray(members0, dtype=np.int64)
+        self.rounds: list = []
+
+    def record(self, a_rows: np.ndarray, z_rows: np.ndarray):
+        self.rounds.append((np.asarray(a_rows, dtype=np.int64).copy(),
+                            np.asarray(z_rows, dtype=np.int64).copy()))
+
+    @property
+    def n_merges(self) -> int:
+        return sum(a.size for a, _ in self.rounds)
+
+
+def apply_plans(state, plans: list) -> int:
+    """Exchange stage: replay recorded merge rounds in canonical order.
+
+    Round r applies every group's r-th recorded round in plan-list order via
+    ONE ``merge_batch`` — all pairs are disjoint (rounds are matchings and
+    candidate groups partition the alive roots). Only the forward/root
+    pointers and freshly minted parents flow back; the decisions themselves
+    never re-read global state, so the replay is scheduling-independent.
+    Returns the number of merges applied.
+    """
+    cur = [p.members0.copy() for p in plans]
+    merges = 0
+    r = 0
+    while True:
+        As, Zs, backrefs = [], [], []
+        for gi, p in enumerate(plans):
+            if r < len(p.rounds):
+                a_rows, z_rows = p.rounds[r]
+                As.append(cur[gi][a_rows])
+                Zs.append(cur[gi][z_rows])
+                backrefs.append((gi, a_rows))
+        if not As:
+            break
+        M = state.merge_batch(np.concatenate(As), np.concatenate(Zs))
+        off = 0
+        for gi, a_rows in backrefs:
+            cur[gi][a_rows] = M[off:off + a_rows.size]
+            off += a_rows.size
+        merges += M.size
+        r += 1
+    return merges
+
+
+def _mix64(seed: np.ndarray, round_no: int, rows: np.ndarray) -> np.ndarray:
+    """Counter-based per-proposal priority: splitmix64 of (group seed, round,
+    proposing row), with the row id appended in the low bits so priorities
+    are UNIQUE within a group — randomized-priority matching then never ties,
+    and the outcome is a pure function of (group, round, row), independent of
+    how groups were chunked or sharded."""
+    round_mix = np.uint64(((round_no + 1) * 0x9E3779B97F4A7C15) & (2**64 - 1))
+    x = seed.astype(np.uint64) ^ round_mix
+    x = x + rows.astype(np.uint64) * np.uint64(0xBF58476D1CE4E5B9)
+    x ^= x >> np.uint64(30)
+    x *= np.uint64(0xBF58476D1CE4E5B9)
+    x ^= x >> np.uint64(27)
+    x *= np.uint64(0x94D049BB133111EB)
+    x ^= x >> np.uint64(31)
+    return (x << np.uint64(8)) | rows.astype(np.uint64)  # rows < 256 = 2*G_max
+
+
 class GroupWorkspace:
     """Dense group-local view: rows = group members, cols = neighbor roots.
 
@@ -43,8 +124,9 @@ class GroupWorkspace:
     neighbor roots, in sorted-id order; members always own a column.
     """
 
-    def __init__(self, state, group):
+    def __init__(self, state, group, plan: MergePlan | None = None):
         self.state = state
+        self.plan = plan  # record-mode: decisions go here, not to `state`
         members = np.asarray(group, dtype=np.int64)
         k = members.size
         self.members = members.tolist()  # global root ids (updated on merge)
@@ -137,10 +219,14 @@ class GroupWorkspace:
         old_ca = _pair_cost(self.CNT[:, ca], self.s * self.colsize[ca])
         old_cz = _pair_cost(self.CNT[:, cz], self.s * self.colsize[cz])
         cab = self.CNT[a, cz]
-        # global merge
-        m_gid = st.merge(int(self.members[a]), int(self.members[z]))
+        # global merge — or, in record mode, defer it to `apply_plans`
+        if self.plan is not None:
+            self.plan.record(np.array([a]), np.array([z]))
+            m_gid = -1
+        else:
+            m_gid = st.merge(int(self.members[a]), int(self.members[z]))
+            self.colid[m_gid] = ca
         self.members[a] = m_gid
-        self.colid[m_gid] = ca
         self.col_gid[ca] = m_gid
         # local rows
         self.CNT[a] += self.CNT[z]
@@ -175,16 +261,10 @@ class GroupWorkspace:
 # ---------------------------------------------------------------------------
 # Sequential engine (seed baseline)
 # ---------------------------------------------------------------------------
-def process_group(
-    state,
-    group,
-    theta: float,
-    rng: np.random.Generator,
-    top_j: int = 16,
-    height_bound=None,
-) -> int:
-    """Algorithm 2 over one candidate set. Returns the number of merges."""
-    ws = GroupWorkspace(state, group)
+def _sweep_sequential(ws: GroupWorkspace, theta: float,
+                      rng: np.random.Generator, top_j: int = 16,
+                      height_bound=None) -> int:
+    """Algorithm 2 over one built workspace. Returns the number of merges."""
     k = len(ws.members)
     queue = list(rng.permutation(k))
     merges = 0
@@ -197,7 +277,7 @@ def process_group(
             break
         if cand.size > top_j:
             jac = ws.jaccard_to(a, cand)
-            cand = cand[np.argsort(-jac)[:top_j]]
+            cand = cand[np.argsort(-jac, kind="stable")[:top_j]]
         sav = ws.savings(a, cand, height_bound=height_bound)
         j = int(np.argmax(sav))
         if sav[j] >= theta and np.isfinite(sav[j]):
@@ -207,6 +287,25 @@ def process_group(
             queue.insert(0, a)  # merged node rejoins Q (Alg. 2 line 8)
             merges += 1
     return merges
+
+
+def process_group(
+    state,
+    group,
+    theta: float,
+    rng: np.random.Generator,
+    top_j: int = 16,
+    height_bound=None,
+    plan: MergePlan | None = None,
+) -> int:
+    """Algorithm 2 over one candidate set. Returns the number of merges.
+
+    With ``plan`` given the sweep runs in record mode: decisions land in the
+    plan (each as its own single-pair round) instead of mutating ``state``.
+    """
+    ws = GroupWorkspace(state, group, plan=plan)
+    return _sweep_sequential(ws, theta, rng, top_j=top_j,
+                             height_bound=height_bound)
 
 
 # ---------------------------------------------------------------------------
@@ -244,6 +343,8 @@ class BatchedGroupWorkspace:
     def __init__(self, state, B: int, G: int, R: int):
         self.state = state
         self.B, self.G, self.R = B, G, R
+        self.plans = None  # record mode: per-local-group MergePlan targets
+        self.gseed = np.zeros(B, dtype=np.uint64)  # per-group priority seeds
         self.memcol = np.zeros((B, G), dtype=np.int64)
         self.members = np.full((B, G), -1, dtype=np.int64)
         self.CNT = np.zeros((B, G, R), dtype=np.float64)
@@ -283,11 +384,15 @@ class BatchedGroupWorkspace:
         self.cost_row = cost
 
     @staticmethod
-    def build_bucket(state, groups: list, G: int) -> list:
+    def build_bucket(state, groups: list, G: int, plans=None,
+                     group_seeds=None) -> list:
         """One gather + keyed unique for ALL groups of a size bucket, then
         workspaces chunked so column universes within a chunk are within 2×
         of each other and the (B, G, R) tensors respect the memory budget —
-        a narrow group never pays a wide group's padding."""
+        a narrow group never pays a wide group's padding.
+
+        ``plans``/``group_seeds`` (aligned with ``groups``) switch the
+        workspaces to record mode with per-group deterministic priorities."""
         B = len(groups)
         ks = np.array([len(g) for g in groups], dtype=np.int64)
         members_flat = np.concatenate([np.asarray(g, dtype=np.int64) for g in groups])
@@ -345,13 +450,29 @@ class BatchedGroupWorkspace:
                 colidx[nm:][esel], cnt[esel],
                 newb_of_group[col_grp[csel]], col_pos[csel], (uniq % big)[csel],
             )
+            gsel = np.flatnonzero(chunk_of_group == ci)
+            if group_seeds is not None:
+                ws.gseed[newb_of_group[gsel]] = np.asarray(
+                    group_seeds, dtype=np.uint64)[gsel]
+            if plans is not None:
+                pl = [None] * bc
+                for gidx in gsel:
+                    pl[int(newb_of_group[gidx])] = plans[int(gidx)]
+                ws.plans = pl
             out.append(ws)
         return out
 
     # -- Jaccard ranking ---------------------------------------------------
-    def pairwise_jaccard(self, backend: str) -> np.ndarray:
-        """(B, G, G) Jaccard — one vmap'd kernel dispatch for the batch."""
+    def pairwise_jaccard(self, backend: str, dispatch=None) -> np.ndarray:
+        """(B, G, G) Jaccard — one vmap'd kernel dispatch for the batch.
+
+        ``dispatch`` overrides the device path with a custom callable
+        ``(B, G, W32) uint32 -> (B, G, G) float64`` — the engine's
+        mesh-sharded dispatch (`core/distributed.batched_jaccard_mesh`)
+        plugs in here."""
         if backend == "batched":
+            if dispatch is not None:
+                return dispatch(self.bits.view(np.uint32))
             try:
                 from repro.kernels.bitset_jaccard.ops import batched_pairwise_jaccard
             except ImportError:  # jax unavailable: fall through to NumPy
@@ -406,6 +527,8 @@ class BatchedGroupWorkspace:
     # -- batched merge application -----------------------------------------
     def apply_merges(self, b: np.ndarray, a: np.ndarray, z: np.ndarray):
         """Fold row z into row a of group b for a round of disjoint pairs."""
+        if b.size == 0:
+            return
         G = self.G
         ca = self.memcol[b, a]
         cz = self.memcol[b, z]
@@ -413,7 +536,15 @@ class BatchedGroupWorkspace:
         old_ca = _pair_cost(self.CNT[b, :, ca], self.s[b] * self.colsize[b, ca][:, None])
         old_cz = _pair_cost(self.CNT[b, :, cz], self.s[b] * self.colsize[b, cz][:, None])
         cab = self.CNT[b, a, cz]
-        Ms = self.state.merge_batch(self.members[b, a], self.members[b, z])
+        if self.plans is not None:
+            # record mode: one round per group (b arrives sorted ascending)
+            head = np.concatenate([[0], np.flatnonzero(b[1:] != b[:-1]) + 1,
+                                   [b.size]])
+            for s0, e0 in zip(head[:-1], head[1:]):
+                self.plans[int(b[s0])].record(a[s0:e0], z[s0:e0])
+            Ms = np.full(b.size, -1, dtype=np.int64)
+        else:
+            Ms = self.state.merge_batch(self.members[b, a], self.members[b, z])
         self.members[b, a] = Ms
         self.members[b, z] = -1
         self.col_gid[b, ca] = Ms
@@ -476,7 +607,7 @@ class BatchedGroupWorkspace:
         jac[b, :, z] = -1.0
 
     # -- the sweep ---------------------------------------------------------
-    def sweep(self, jac: np.ndarray, theta: float, rng: np.random.Generator,
+    def sweep(self, jac: np.ndarray, theta: float,
               top_j: int = 16, height_bound=None) -> int:
         """Vectorized Algorithm-2 rounds over the whole batch.
 
@@ -490,6 +621,11 @@ class BatchedGroupWorkspace:
         falls below θ leaves it for good, a merged survivor re-enters it
         ("merged node rejoins Q"), and a row that lost the matching retries
         next round.
+
+        Every random choice is a counter-based hash of (group seed, round,
+        row) and the candidate ranking is a per-row total order, so a
+        group's outcome is a pure function of its own tensors — independent
+        of which chunk, partition, or thread swept it (DESIGN.md §8).
         """
         B, G = self.B, self.G
         jac = np.asarray(jac, dtype=np.float64)  # mutated; callers discard it
@@ -500,17 +636,26 @@ class BatchedGroupWorkspace:
         jac[np.broadcast_to(dead[:, :, None], jac.shape)] = -1.0
         merges = 0
         dirty = self.alive.copy()
+        alive_cnt = self.alive.sum(axis=1)
+        round_no = 0
         while G > 1 and dirty.any():
-            # a row only has alive groupmates as real partners: adapt J to
-            # the largest alive group instead of paying top_j on everyone
-            J = min(top_j, int(self.alive.sum(axis=1).max()) - 1)
-            if J < 1:
+            # J adapts to the largest alive group for array sizing; each row
+            # is masked to its OWN group's alive count below, so the chunk
+            # composition never leaks into a group's candidate set
+            j_max = min(top_j, int(alive_cnt.max()) - 1)
+            if j_max < 1:
                 break
             rb, rr = np.nonzero(dirty)
             jrows = jac[rb, rr]                                    # (n, G)
-            part = np.argpartition(-jrows, kth=J - 1, axis=1)[:, :J]
+            # deterministic total ranking: desc jaccard, ties by asc column
+            # (stable argsort) — a row's top-j prefix is then invariant to
+            # j_max and to how the bucket was chunked
+            order = np.argsort(-jrows, axis=1, kind="stable")
+            part = order[:, :j_max]
             sav = self.savings_rows(rb, rr, part, height_bound=height_bound)
+            j_row = np.minimum(top_j, alive_cnt[rb] - 1)
             cand_ok = self.alive[rb[:, None], part] & (part != rr[:, None])
+            cand_ok &= np.arange(j_max)[None, :] < j_row[:, None]
             sav = np.where(cand_ok, sav, -np.inf)
             best_j = np.argmax(sav, axis=1)
             ri = np.arange(rb.size)
@@ -522,11 +667,12 @@ class BatchedGroupWorkspace:
                 break
             gb, ar, zr = rb[prop], rr[prop], best_z[prop]
             # randomized-priority conflict resolution over node keys: a
-            # proposal wins iff it holds the min priority at both endpoints
-            p = rng.random(gb.size)
+            # proposal wins iff it holds the min priority at both endpoints;
+            # priorities are row-unique, so there are never ties
+            p = _mix64(self.gseed[gb], round_no, ar)
             a_key = gb * G + ar
             z_key = gb * G + zr
-            winner = np.full(B * G, np.inf)
+            winner = np.full(B * G, np.iinfo(np.uint64).max, dtype=np.uint64)
             np.minimum.at(winner, a_key, p)
             np.minimum.at(winner, z_key, p)
             acc = (winner[a_key] == p) & (winner[z_key] == p)
@@ -537,11 +683,77 @@ class BatchedGroupWorkspace:
             # the matching stayed dirty and retry next round
             dirty[ab, az] = False
             dirty[ab, am] = True
+            np.subtract.at(alive_cnt, ab, 1)
             merges += ab.size
+            round_no += 1
         return merges
 
 
 _BATCH_MAX_GROUP = 128  # larger groups amortize row-level vectorization alone
+
+
+def build_merge_work(
+    state,
+    groups: list,
+    theta: float,
+    *,
+    group_seeds: np.ndarray,
+    rng_of=None,
+    top_j: int = 16,
+    height_bound=None,
+    backend: str = "numpy",
+    jaccard_fn=None,
+):
+    """Build record-mode workspaces for one iteration's candidate groups.
+
+    Returns ``(plans, thunks)``: ``plans[i]`` is group i's `MergePlan`;
+    each thunk runs one workspace chunk's (or one large group's) Jaccard +
+    sweep entirely against local tensors and returns its merge count.
+    Workspaces are built HERE, against the current state snapshot — builds
+    stay serial because `gather_rows` compacts arena rows in place — while
+    the returned thunks touch no shared state and may run on any schedule:
+    sequentially, per partition, or on a thread pool (DESIGN.md §8).
+
+    ``group_seeds`` are per-group uint64 priority seeds; ``rng_of(i)``
+    supplies the queue-permutation generator for groups swept sequentially
+    (``backend="loop"`` and oversized groups). ``jaccard_fn`` overrides the
+    batched Jaccard dispatch (mesh sharding).
+    """
+    groups = [np.asarray(g, dtype=np.int64) for g in groups]
+    group_seeds = np.asarray(group_seeds, dtype=np.uint64)
+    plans = [MergePlan(g) for g in groups]
+    if rng_of is None:
+        def rng_of(i):
+            return np.random.default_rng(group_seeds[i])
+    thunks: list = []
+
+    def _seq_thunk(ws, rng):
+        return lambda: _sweep_sequential(ws, theta, rng, top_j=top_j,
+                                         height_bound=height_bound)
+
+    def _batch_thunk(ws):
+        def run():
+            jac = ws.pairwise_jaccard(backend, dispatch=jaccard_fn)
+            return ws.sweep(jac, theta, top_j=top_j,
+                            height_bound=height_bound)
+        return run
+
+    buckets: dict = {}
+    for i, grp in enumerate(groups):
+        if backend == "loop" or grp.size > _BATCH_MAX_GROUP:
+            ws = GroupWorkspace(state, grp, plan=plans[i])
+            thunks.append(_seq_thunk(ws, rng_of(i)))
+            continue
+        buckets.setdefault(1 << max(3, int(grp.size - 1).bit_length()),
+                           []).append(i)
+    for G in sorted(buckets):
+        idxs = buckets[G]
+        for ws in BatchedGroupWorkspace.build_bucket(
+                state, [groups[i] for i in idxs], G,
+                plans=[plans[i] for i in idxs],
+                group_seeds=group_seeds[idxs]):
+            thunks.append(_batch_thunk(ws))
+    return plans, thunks
 
 
 def process_groups(
@@ -560,24 +772,19 @@ def process_groups(
     dominate. The few larger groups already amortize their array ops over
     wide rows, so they run the sequential per-group sweep.
 
-    Workspaces for a batch are built against one state snapshot; merges in
-    one group never touch another group's rows (candidate sets partition the
-    alive roots), so the only cross-group effect is slightly stale neighbor
-    sizes in the Saving estimate — quality-neutral and lossless either way.
+    All workspaces snapshot the state BEFORE any of this iteration's merges
+    (record mode, DESIGN.md §8); merges in one group never touch another
+    group's rows (candidate sets partition the alive roots), so the only
+    cross-group effect is slightly stale neighbor sizes in the Saving
+    estimate — quality-neutral and lossless either way. The recorded plans
+    are then replayed in canonical order by `apply_plans`.
     """
-    buckets: dict = {}
-    large: list = []
-    for grp in groups:
-        grp = np.asarray(grp, dtype=np.int64)
-        if grp.size > _BATCH_MAX_GROUP:
-            large.append(grp)
-            continue
-        buckets.setdefault(1 << max(3, int(grp.size - 1).bit_length()), []).append(grp)
-    merges = 0
-    for G in sorted(buckets):
-        for ws in BatchedGroupWorkspace.build_bucket(state, buckets[G], G):
-            jac = ws.pairwise_jaccard(backend)
-            merges += ws.sweep(jac, theta, rng, top_j=top_j, height_bound=height_bound)
-    for grp in large:
-        merges += process_group(state, grp, theta, rng, top_j=top_j, height_bound=height_bound)
-    return merges
+    group_seeds = rng.integers(0, np.iinfo(np.int64).max,
+                               size=max(len(groups), 1)).astype(np.uint64)
+    plans, thunks = build_merge_work(
+        state, groups, theta, group_seeds=group_seeds,
+        rng_of=lambda i: rng, top_j=top_j, height_bound=height_bound,
+        backend=backend)
+    for thunk in thunks:
+        thunk()
+    return apply_plans(state, plans)

@@ -37,6 +37,24 @@ def node_level_min(g: Graph, seed: int) -> np.ndarray:
     return nm
 
 
+def rootwise_min(values: np.ndarray, root_of: np.ndarray, n_ids: int,
+                 sentinel_base: int) -> np.ndarray:
+    """Segment-min of per-leaf ``values`` over root ids, with ids owning no
+    leaves set to the unique sentinel ``sentinel_base + id``. Shared by the
+    host shingle path and the mesh-sharded one (`core/distributed`) — the
+    sentinel rule must match so leafless roots never spuriously group."""
+    out = np.full(n_ids, -1, dtype=np.int64)
+    if root_of.size:
+        order = np.argsort(root_of, kind="stable")
+        sorted_roots = root_of[order]
+        sorted_vals = np.asarray(values, dtype=np.int64)[order]
+        starts = np.concatenate([[0], np.flatnonzero(np.diff(sorted_roots)) + 1])
+        out[sorted_roots[starts]] = np.minimum.reduceat(sorted_vals, starts)
+    missing = np.flatnonzero(out < 0)
+    out[missing] = sentinel_base + missing
+    return out
+
+
 def root_shingles(g: Graph, root_of: np.ndarray, seed: int, n_ids=None) -> np.ndarray:
     """shingle(A) = min over leaves u ∈ A of node_level_min(u).
 
@@ -48,17 +66,7 @@ def root_shingles(g: Graph, root_of: np.ndarray, seed: int, n_ids=None) -> np.nd
     if n_ids is None:
         n_ids = int(root_of.max()) + 1 if root_of.size else 0
     nm = node_level_min(g, seed)
-    out = np.full(n_ids, -1, dtype=np.int64)
-    if root_of.size:
-        # segment-min over root ids
-        order = np.argsort(root_of, kind="stable")
-        sorted_roots = root_of[order]
-        sorted_vals = nm[order]
-        starts = np.concatenate([[0], np.flatnonzero(np.diff(sorted_roots)) + 1])
-        out[sorted_roots[starts]] = np.minimum.reduceat(sorted_vals, starts)
-    missing = np.flatnonzero(out < 0)
-    out[missing] = _P + missing
-    return out
+    return rootwise_min(nm, root_of, n_ids, _P)
 
 
 def _split_groups(roots: np.ndarray, keys: np.ndarray, sub_keys=None) -> list:
@@ -85,21 +93,48 @@ def _split_groups(roots: np.ndarray, keys: np.ndarray, sub_keys=None) -> list:
     return [p for p, sz in zip(pieces, sizes) if sz > 1]
 
 
+def shingle_seed_streams(seed, max_rehash: int):
+    """Per-rehash shingle seeds + the split RNG, derived collision-free.
+
+    ``seed`` may be an int or a ``np.random.SeedSequence``; either way the
+    ``max_rehash + 1`` shingle seeds and the random-split generator come from
+    spawned children, so distinct (outer seed, iteration) pairs can never
+    alias the way the old ``seed * 7919 + t`` / ``seed * 1000003 + rehash``
+    arithmetic could (e.g. seed=0,t=7919 vs seed=1,t=0).
+    """
+    ss = (seed if isinstance(seed, np.random.SeedSequence)
+          else np.random.SeedSequence(seed))
+    children = ss.spawn(max_rehash + 2)
+    seeds = [int(c.generate_state(1, dtype=np.uint64)[0]) for c in children[:-1]]
+    return seeds, np.random.default_rng(children[-1])
+
+
 def candidate_groups(
     g: Graph,
     root_of: np.ndarray,
     alive_roots: np.ndarray,
-    seed: int,
+    seed,
     max_group: int = 500,
     max_rehash: int = 10,
+    shingle_fn=None,
 ) -> list:
-    """Partition alive roots into candidate sets of size ≤ max_group."""
+    """Partition alive roots into candidate sets of size ≤ max_group.
+
+    ``seed`` is an int or a ``SeedSequence`` (engine iterations pass spawned
+    streams). ``shingle_fn(sub_seed, n_ids) -> (n_ids,) int64`` overrides how
+    per-root shingles are computed — the engine's mesh-dispatched path
+    (`core/distributed.shingle_provider`) plugs in here; the default is the
+    host `root_shingles`.
+    """
     alive_roots = np.asarray(alive_roots, dtype=np.int64)
     if alive_roots.size < 2:
         return []
     n_ids = int(max(int(root_of.max()) if root_of.size else 0, int(alive_roots.max()))) + 1
-    rng = np.random.default_rng(seed)
-    sh = root_shingles(g, root_of, seed, n_ids)
+    if shingle_fn is None:
+        def shingle_fn(sub_seed, nn):
+            return root_shingles(g, root_of, sub_seed, nn)
+    seeds, rng = shingle_seed_streams(seed, max_rehash)
+    sh = shingle_fn(seeds[0], n_ids)
     pending = _split_groups(alive_roots, sh[alive_roots])
 
     groups: list = []
@@ -125,7 +160,7 @@ def candidate_groups(
                     if chunk.size > 1:
                         groups.append(chunk)
             break
-        sh2 = root_shingles(g, root_of, seed * 1000003 + rehash, n_ids)
+        sh2 = shingle_fn(seeds[rehash], n_ids)
         gidx = np.repeat(np.arange(len(oversized)), [o.size for o in oversized])
         pending = _split_groups(members, gidx, sh2[members])
     return groups

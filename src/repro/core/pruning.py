@@ -194,28 +194,16 @@ class _IRWork:
             removed += cands.size
 
     # ---- step 3 (benefit-tested splice of any non-leaf supernode) ----------
-    def step3(self) -> int:
-        cap = self._cap()
-        ir = SummaryIR(self.parent, self.n)
-        nk = ir.n_children()
-        ids = np.arange(cap)
-        cand_mask = self._alive() & (ids >= self.n) & (nk > 0)
-        cands = np.flatnonzero(cand_mask)
+    def _step3_bulk(self, ir, cands, nk, sizes, bex, bey, bec, delta):
+        """Bulk feasibility/plan/delta pass for one candidate subset.
+
+        Emits the subset's plan rows (plo, phi, ps, pc) and accumulates each
+        candidate's benefit delta into ``delta`` in place. Per-candidate
+        outputs never interact, which is what lets `step3` run this per
+        partition bucket with bit-identical results."""
+        z = np.zeros(0, dtype=np.int64)
         if cands.size == 0:
-            return 0
-        # deterministic bottom-up order: deepest first, then ascending id
-        cands = cands[np.lexsort((cands, -ir.depth[cands]))]
-        sizes = ir.size(ids)
-        bex, bey, bec = self.ex, self.ey, self.ec
-        ir.build_incidence(np.stack([bex, bey, bec], axis=1))
-
-        # -- bulk pass: feasibility, plans, deltas against the entry state --
-        bad = np.abs(bec) != 1
-        bad_ends = np.concatenate([bex[bad], bey[bad & (bex != bey)]])
-        infeasible_cnt = np.bincount(bad_ends, minlength=cap)
-        deg_all = self._deg()
-        is_root0 = self.parent == -1
-
+            return z, z.copy(), z.copy(), z.copy()
         eids, seg = ir.incident_eids(cands)  # per-candidate incident edges
         a_of = cands[seg]
         loop_m = bex[eids] == bey[eids]
@@ -260,9 +248,56 @@ class _IRWork:
         plo, phi = np.minimum(pu, pv), np.maximum(pu, pv)
         cur = _pair_lookup(bex, bey, bec, plo, phi)
         contrib = np.where(cur == -ps, -1, 1)
+        np.add.at(delta, pc, contrib)
+        return plo, phi, ps, pc
+
+    def step3(self, partition_map=None) -> int:
+        cap = self._cap()
+        ir = SummaryIR(self.parent, self.n)
+        nk = ir.n_children()
+        ids = np.arange(cap)
+        cand_mask = self._alive() & (ids >= self.n) & (nk > 0)
+        cands = np.flatnonzero(cand_mask)
+        if cands.size == 0:
+            return 0
+        # deterministic bottom-up order: deepest first, then ascending id
+        cands = cands[np.lexsort((cands, -ir.depth[cands]))]
+        sizes = ir.size(ids)
+        bex, bey, bec = self.ex, self.ey, self.ec
+        ir.build_incidence(np.stack([bex, bey, bec], axis=1))
+
+        # -- bulk pass: feasibility, plans, deltas against the entry state --
+        # Per-candidate outputs are independent, so the pass runs per
+        # partition bucket when a partition map is given (DESIGN.md §8):
+        # temporaries shrink to the bucket's plan size and the result is
+        # bit-identical to the monolithic pass.
+        bad = np.abs(bec) != 1
+        bad_ends = np.concatenate([bex[bad], bey[bad & (bex != bey)]])
+        infeasible_cnt = np.bincount(bad_ends, minlength=cap)
+        deg_all = self._deg()
+        is_root0 = self.parent == -1
         delta = np.where(is_root0, -nk, -1).astype(np.int64)
         delta = delta - deg_all
-        np.add.at(delta, pc, contrib)
+
+        if partition_map is None:
+            buckets = [cands]
+        else:
+            part_of_cand = np.asarray(partition_map, dtype=np.int64)[
+                ir.order[ir.first[cands]]]
+            buckets = [cands[part_of_cand == p]
+                       for p in np.unique(part_of_cand)]
+        plo_b, phi_b, ps_b, pc_b = [], [], [], []
+        for csub in buckets:
+            plo_c, phi_c, ps_c, pc_c = self._step3_bulk(
+                ir, csub, nk, sizes, bex, bey, bec, delta)
+            plo_b.append(plo_c)
+            phi_b.append(phi_c)
+            ps_b.append(ps_c)
+            pc_b.append(pc_c)
+        plo = np.concatenate(plo_b)
+        phi = np.concatenate(phi_b)
+        ps = np.concatenate(ps_b)
+        pc = np.concatenate(pc_b)
         # plan rows CSR by candidate (pc is emitted in ascending-candidate
         # runs per construction branch; re-sort to be safe)
         p_order = np.argsort(pc, kind="stable")
@@ -607,12 +642,15 @@ class _Work:
 
 
 def prune(summary: Summary, steps=(1, 2, 3), rounds: int = 3,
-          impl: str = "ir") -> Summary:
+          impl: str = "ir", partition_map=None) -> Summary:
     """Run the selected pruning substeps (repeated until fixpoint, ≤ rounds).
 
     ``impl="ir"`` (default) runs the vectorized array implementation;
     ``impl="dict"`` the dict-of-set reference. Both produce bit-identical
-    summaries (test-enforced)."""
+    summaries (test-enforced). ``partition_map`` (node → partition,
+    DESIGN.md §8) makes the step-3 bulk pass run per partition bucket —
+    bounded temporaries, bit-identical output; the dict reference ignores
+    it."""
     if impl not in ("ir", "dict"):
         raise ValueError(f"unknown prune impl {impl!r}; use 'ir' or 'dict'")
     w = _IRWork(summary) if impl == "ir" else _Work(summary)
@@ -623,7 +661,10 @@ def prune(summary: Summary, steps=(1, 2, 3), rounds: int = 3,
         if 2 in steps:
             changed += w.step2()
         if 3 in steps:
-            changed += w.step3()
+            if impl == "ir":
+                changed += w.step3(partition_map=partition_map)
+            else:
+                changed += w.step3()
         if not changed:
             break
     if impl == "ir":

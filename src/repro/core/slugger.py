@@ -22,16 +22,13 @@ Merging runs on one of three engines selected by ``backend=`` (DESIGN.md §3):
 """
 from __future__ import annotations
 
+import logging
 import sys
-import time
 
 import numpy as np
 
 from repro.core import encode_dp
 from repro.core.encode_batched import encode_forest, forest_is_binary
-from repro.core.merging import process_group, process_groups
-from repro.core.minhash import candidate_groups
-from repro.core.pruning import prune
 from repro.core.summary import Summary
 from repro.core.summary_ir import SummaryIR, canon_edges
 from repro.graphs.csr import Graph
@@ -138,6 +135,15 @@ class SluggerState:
     @property
     def alive(self) -> np.ndarray:
         return np.flatnonzero(self.alive_mask[: self.n_ids])
+
+    def root_min_leaf(self) -> np.ndarray:
+        """Smallest leaf id owned by each root (n for leafless ids) — THE
+        partition key of a root (DESIGN.md §8.1). The engine's group
+        assignment and the partition-aware emission both key through this
+        one method so their bucketing can never drift apart."""
+        ml = np.full(self.n_ids, self.g.n, dtype=np.int64)
+        np.minimum.at(ml, self.root_of, np.arange(self.g.n, dtype=np.int64))
+        return ml
 
     # -- adjacency reads ---------------------------------------------------
     def gather_rows(self, roots: np.ndarray):
@@ -309,7 +315,8 @@ def _emit_encoding_reference(state: SluggerState) -> Summary:
     return Summary(n_leaves=n, parent=parent, edges=arr)
 
 
-def _emit_encoding(state: SluggerState, backend: str = "numpy") -> Summary:
+def _emit_encoding(state: SluggerState, backend: str = "numpy",
+                   owner=None) -> Summary:
     """Exact hierarchical encoding of the input graph over the current merge
     forest (plays the paper's 'update of encoding' role).
 
@@ -317,10 +324,18 @@ def _emit_encoding(state: SluggerState, backend: str = "numpy") -> Summary:
     run the batched level-synchronous DP over the flat Summary IR
     (`core/encode_batched.py`), with the per-level membership counts
     dispatched through the Pallas seghist kernel on ``backend="batched"``.
-    Both produce bit-identical canonical edge arrays (test-enforced)."""
+    Both produce bit-identical canonical edge arrays (test-enforced).
+
+    ``owner`` (node → partition, DESIGN.md §8) buckets the root pairs by
+    partition and emits each bucket separately: per-pair encodings are
+    independent and the export is canonical-sorted, so the result is
+    bit-identical to the monolithic emission for any ownership map."""
+    g = state.g
+    if g.n == 0:
+        return Summary(n_leaves=0, parent=np.zeros(0, dtype=np.int64),
+                       edges=np.zeros((0, 3), dtype=np.int64))
     if backend == "loop":
         return _emit_encoding_reference(state)
-    g = state.g
     parent = state.parent[: state.n_ids].copy()
     ir = SummaryIR(parent, g.n)
     if not forest_is_binary(ir):  # only the recursive DP handles n-ary trees
@@ -328,7 +343,21 @@ def _emit_encoding(state: SluggerState, backend: str = "numpy") -> Summary:
     el = g.edge_list()
     u = el[:, 0] if el.size else np.zeros(0, dtype=np.int64)
     v = el[:, 1] if el.size else np.zeros(0, dtype=np.int64)
-    _, edges = encode_forest(ir, u, v, backend=backend)
+    if owner is None or u.size == 0:
+        _, edges = encode_forest(ir, u, v, backend=backend)
+        return Summary(n_leaves=g.n, parent=parent, edges=edges)
+    # partition-aware emission: a root pair belongs to the partition owning
+    # the smaller root's smallest leaf; buckets encode independently
+    root_of = state.root_of
+    min_leaf = state.root_min_leaf()
+    key_root = np.minimum(root_of[u], root_of[v])
+    part = np.asarray(owner, dtype=np.int64)[min_leaf[key_root]]
+    chunks = []
+    for p in np.unique(part):
+        sel = part == p
+        _, e_p = encode_forest(ir, u[sel], v[sel], backend=backend)
+        chunks.append(e_p)
+    edges = canon_edges(np.concatenate(chunks, axis=0))
     return Summary(n_leaves=g.n, parent=parent, edges=edges)
 
 
@@ -342,34 +371,49 @@ def summarize(
     prune_steps=(1, 2, 3),
     verbose: bool = False,
     backend: str = "numpy",
+    partitions: int = 1,
 ) -> Summary:
     """Run SLUGGER end to end. ``prune_steps=()`` skips pruning (paper's
     'state 0' in Table IV); ``height_bound`` is the Table-V H_b variant.
-    ``backend`` selects the merge engine (see module docstring)."""
-    if backend not in ("numpy", "batched", "loop"):
-        raise ValueError(f"unknown backend {backend!r}; use 'numpy', 'batched' or 'loop'")
-    state = SluggerState(g)
-    rng = np.random.default_rng(seed)
-    for t in range(1, T + 1):
-        theta = 0.0 if t == T else 1.0 / (1 + t)
-        alive = state.alive
-        groups = candidate_groups(g, state.root_of, alive, seed=seed * 7919 + t, max_group=max_group)
-        t0 = time.time()
-        if backend == "loop":
-            merges = 0
-            for grp in groups:
-                merges += process_group(state, grp, theta, rng, top_j=top_j, height_bound=height_bound)
-        else:
-            merges = process_groups(
-                state, groups, theta, rng,
-                top_j=top_j, height_bound=height_bound, backend=backend,
-            )
-        if verbose:
-            print(
-                f"[slugger] iter {t:3d}: θ={theta:.3f} groups={len(groups)} "
-                f"merges={merges} roots={state.alive.size} ({time.time()-t0:.2f}s)"
-            )
-    summary = _emit_encoding(state, backend=backend)
-    if prune_steps:
-        summary = prune(summary, steps=prune_steps)
-    return summary
+    ``backend`` selects the merge engine (see module docstring).
+
+    This is a thin wrapper over `repro.core.engine.SummarizerEngine` — the
+    stage-based partition-parallel driver (DESIGN.md §8). ``partitions``
+    shards the work by node ownership; the result is bit-identical for
+    every value. ``verbose`` raises the engine loggers to INFO (progress
+    goes through `logging`, not prints)."""
+    from repro.core.engine import SummarizerEngine  # circular-safe
+
+    engine = SummarizerEngine(
+        partitions=partitions, backend=backend, T=T, seed=seed,
+        max_group=max_group, top_j=top_j, height_bound=height_bound,
+        prune_steps=prune_steps)
+    if not verbose:
+        return engine.run(g)
+    restore = _ensure_info_logging()
+    try:
+        return engine.run(g)
+    finally:
+        restore()
+
+
+def _ensure_info_logging():
+    """`verbose=True` compatibility shim: surface engine INFO logs on
+    stderr when the caller has not configured logging themselves. Returns
+    a restore callback — a later ``verbose=False`` call must be silent
+    again, so nothing may stick to the logger."""
+    logger = logging.getLogger("repro.engine")
+    old_level = logger.level
+    logger.setLevel(logging.INFO)
+    handler = None
+    if not logging.getLogger().handlers and not logger.handlers:
+        handler = logging.StreamHandler()
+        handler.setFormatter(logging.Formatter("[%(name)s] %(message)s"))
+        logger.addHandler(handler)
+
+    def restore():
+        logger.setLevel(old_level)
+        if handler is not None:
+            logger.removeHandler(handler)
+
+    return restore

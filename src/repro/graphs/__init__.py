@@ -1,4 +1,7 @@
 from repro.graphs.csr import Graph
+from repro.graphs.partitioned import (GraphShard, PartitionedGraph,
+                                      as_partitioned, block_owner)
 from repro.graphs import generators, datasets
 
-__all__ = ["Graph", "generators", "datasets"]
+__all__ = ["Graph", "PartitionedGraph", "GraphShard", "as_partitioned",
+           "block_owner", "generators", "datasets"]

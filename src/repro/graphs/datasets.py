@@ -1,10 +1,26 @@
-"""Offline stand-ins for the paper's 16 datasets (Table II).
+"""Offline stand-ins for the paper's 16 datasets (Table II) + real downloads.
 
 Every stand-in is a seeded synthetic graph in the same *regime* (domain,
 density, structure) at a size that runs on one CPU core. The mapping is
 recorded so benchmark tables carry the paper's dataset mnemonics.
+
+`load_remote` additionally fetches the real SNAP edge lists the paper uses,
+with a disk cache under ``$REPRO_DATA_DIR`` (default
+``~/.cache/repro-slugger``): downloads are verified against a sha256 sidecar
+(trust-on-first-use when the registry pins no digest), cache hits never
+touch the network, and network/corruption failures raise
+`DatasetFetchError` with the exact path to drop a manually obtained file
+into — never a raw ``URLError``.
 """
 from __future__ import annotations
+
+import gzip
+import hashlib
+import os
+import urllib.error
+import urllib.request
+
+import numpy as np
 
 from repro.graphs import generators as G
 from repro.graphs.csr import Graph
@@ -57,3 +73,118 @@ def info(name: str):
 def load(name: str) -> Graph:
     reg = {**_REGISTRY, **_LARGE}
     return reg[name][2]()
+
+
+# ---------------------------------------------------------------------------
+# Real datasets: cached, checksummed downloads
+# ---------------------------------------------------------------------------
+_CACHE_ENV = "REPRO_DATA_DIR"
+
+# name -> (url, pinned sha256 or None = trust-on-first-use via sidecar)
+REMOTE = {
+    "ca-GrQc": ("https://snap.stanford.edu/data/ca-GrQc.txt.gz", None),
+    "ca-HepTh": ("https://snap.stanford.edu/data/ca-HepTh.txt.gz", None),
+    "email-Enron": ("https://snap.stanford.edu/data/email-Enron.txt.gz", None),
+}
+
+
+class DatasetFetchError(RuntimeError):
+    """Download/cache failure with an actionable recovery hint."""
+
+
+def cache_dir() -> str:
+    return os.environ.get(
+        _CACHE_ENV, os.path.join(os.path.expanduser("~"), ".cache",
+                                 "repro-slugger"))
+
+
+def _sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for block in iter(lambda: f.read(1 << 20), b""):
+            h.update(block)
+    return h.hexdigest()
+
+
+def fetch(name: str, cache: str | None = None, opener=None) -> str:
+    """Return the local path of dataset ``name``, downloading on miss.
+
+    Cache layout: ``<cache>/<name><ext>`` plus a ``.sha256`` sidecar. A hit
+    is served only if its digest matches the pinned (or recorded) one; a
+    corrupt file raises instead of silently re-parsing. ``opener`` overrides
+    ``urllib.request.urlopen`` (tests inject a mock here).
+    """
+    if name not in REMOTE:
+        raise KeyError(f"unknown remote dataset {name!r}; "
+                       f"known: {sorted(REMOTE)}")
+    url, pinned = REMOTE[name]
+    cache = cache or cache_dir()
+    os.makedirs(cache, exist_ok=True)
+    ext = ".txt.gz" if url.endswith(".gz") else ".txt"
+    path = os.path.join(cache, name + ext)
+    sidecar = path + ".sha256"
+    if os.path.exists(path):
+        want = pinned
+        if want is None and os.path.exists(sidecar):
+            with open(sidecar) as f:
+                want = f.read().strip()
+        got = _sha256(path)
+        if want is None or got == want:
+            return path
+        raise DatasetFetchError(
+            f"checksum mismatch for cached {path}: expected {want}, got "
+            f"{got}. Delete the file to re-download, or replace it with a "
+            f"correct copy from {url}.")
+    opener = opener or urllib.request.urlopen
+    try:
+        with opener(url) as resp:
+            data = resp.read()
+    except (urllib.error.URLError, OSError, ValueError) as e:
+        raise DatasetFetchError(
+            f"could not download {name} from {url}: {e}. If this host is "
+            f"offline, fetch the file elsewhere and place it at {path} "
+            f"(cache dir overridable via ${_CACHE_ENV}).") from e
+    got = hashlib.sha256(data).hexdigest()
+    if pinned is not None and got != pinned:
+        raise DatasetFetchError(
+            f"downloaded {name} has sha256 {got}, registry pins {pinned}; "
+            f"refusing to cache a corrupt/tampered file.")
+    tmp = path + ".part"
+    with open(tmp, "wb") as f:
+        f.write(data)
+    os.replace(tmp, path)
+    with open(sidecar, "w") as f:
+        f.write(got + "\n")
+    return path
+
+
+def _parse_edge_text(raw: bytes) -> np.ndarray:
+    """SNAP edge-list text: '#' comments, one 'u<ws>v' pair per line."""
+    rows = []
+    for line in raw.decode("utf-8", errors="replace").splitlines():
+        line = line.strip()
+        if not line or line.startswith(("#", "%")):
+            continue
+        parts = line.split()
+        if len(parts) >= 2:
+            rows.append((int(parts[0]), int(parts[1])))
+    return (np.array(rows, dtype=np.int64) if rows
+            else np.zeros((0, 2), dtype=np.int64))
+
+
+def load_remote(name: str, cache: str | None = None, opener=None) -> Graph:
+    """Fetch (or reuse) a remote dataset and parse it into a `Graph`.
+
+    Node ids are compacted to ``0..n-1`` in ascending original-id order, so
+    the result is deterministic for a fixed file.
+    """
+    path = fetch(name, cache=cache, opener=opener)
+    with open(path, "rb") as f:
+        raw = f.read()
+    if path.endswith(".gz"):
+        raw = gzip.decompress(raw)
+    edges = _parse_edge_text(raw)
+    if edges.size == 0:
+        return Graph.from_edges(0, edges)
+    uniq, inv = np.unique(edges, return_inverse=True)
+    return Graph.from_edges(int(uniq.size), inv.reshape(-1, 2))

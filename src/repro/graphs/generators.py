@@ -173,3 +173,50 @@ def sample_subgraph(g: Graph, n_nodes: int, seed: int = 0) -> Graph:
     rng = np.random.default_rng(seed)
     nodes = rng.choice(g.n, size=min(n_nodes, g.n), replace=False)
     return g.subgraph(np.sort(nodes))
+
+
+# ---------------------------------------------------------------------------
+# Streamed emission (bounded-memory ingestion, DESIGN.md §8)
+# ---------------------------------------------------------------------------
+def as_chunks(edges: np.ndarray, chunk_edges: int = 1 << 18):
+    """Yield an in-memory (m, 2) edge array in bounded chunks — the adapter
+    that lets any eager generator feed `PartitionedGraph.from_edge_stream`."""
+    edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+    for s in range(0, edges.shape[0], chunk_edges):
+        yield edges[s:s + chunk_edges]
+
+
+def stream_edges(g: Graph, chunk_edges: int = 1 << 18):
+    """Yield a built graph's undirected edge list in chunks (tests/replay)."""
+    yield from as_chunks(g.edge_list(), chunk_edges)
+
+
+def rmat_stream(scale: int, edge_factor: int = 8, a=0.57, b=0.19, c=0.19,
+                seed: int = 0, chunk_edges: int = 1 << 18):
+    """Streamed R-MAT: emit the edge list in bounded chunks without ever
+    materializing it whole. Each chunk draws from its own `SeedSequence`
+    child, so the stream is deterministic per (seed, chunk_edges) and chunks
+    can in principle be generated independently (out-of-core / parallel
+    ingestion). Dedup/symmetrization is the consumer's job —
+    `PartitionedGraph.from_edge_stream` applies the same cleaning as
+    `Graph.from_edges`.
+    """
+    n = 1 << scale
+    m = n * edge_factor
+    d = 1.0 - a - b - c
+    n_chunks = (m + chunk_edges - 1) // chunk_edges
+    children = np.random.SeedSequence(seed).spawn(max(n_chunks, 1))
+    for ci in range(n_chunks):
+        k = min(chunk_edges, m - ci * chunk_edges)
+        rng = np.random.default_rng(children[ci])
+        src = np.zeros(k, dtype=np.int64)
+        dst = np.zeros(k, dtype=np.int64)
+        for _ in range(scale):
+            r = rng.random(k)
+            bit_src = (r >= a + b).astype(np.int64)
+            r2 = rng.random(k)
+            p_right = np.where(bit_src == 0, b / (a + b), d / (c + d))
+            bit_dst = (r2 < p_right).astype(np.int64)
+            src = src * 2 + bit_src
+            dst = dst * 2 + bit_dst
+        yield np.stack([src, dst], axis=1)

@@ -35,3 +35,10 @@ def make_host_mesh(data: int = 1, model: int = 1):
     model = min(model, n)
     data = max(1, min(data, n // model))
     return _make_mesh((data, model), ("data", "model"))
+
+
+def make_data_mesh():
+    """Pure data-parallel mesh over every visible device — what the
+    summarization engine's mesh-dispatched shingle/Jaccard path shards over
+    (`core/engine.SummarizerEngine`, DESIGN.md §8)."""
+    return _make_mesh((len(jax.devices()),), ("data",))

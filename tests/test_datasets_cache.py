@@ -1,0 +1,101 @@
+"""Dataset download cache: checksum verification + offline behavior, all
+against a mocked fetch — no network in tests."""
+import gzip
+import io
+import urllib.error
+
+import numpy as np
+import pytest
+
+from repro.graphs import datasets
+
+
+EDGE_TEXT = b"""\
+# Undirected graph: mock
+# FromNodeId\tToNodeId
+0\t1
+1\t2
+2\t0
+2\t3
+"""
+
+
+class _MockOpener:
+    """urlopen stand-in serving fixed bytes and counting calls."""
+
+    def __init__(self, payload: bytes, fail: Exception | None = None):
+        self.payload = payload
+        self.fail = fail
+        self.calls = 0
+
+    def __call__(self, url):
+        self.calls += 1
+        if self.fail is not None:
+            raise self.fail
+        return io.BytesIO(self.payload)
+
+
+def _gz_payload() -> bytes:
+    return gzip.compress(EDGE_TEXT)
+
+
+def test_load_remote_parses_and_caches(tmp_path):
+    opener = _MockOpener(_gz_payload())
+    g = datasets.load_remote("ca-GrQc", cache=str(tmp_path), opener=opener)
+    assert opener.calls == 1
+    assert g.n == 4 and g.m == 4
+    assert g.has_edge(0, 1) and g.has_edge(2, 3)
+    # second load: served from disk, the network is never touched
+    g2 = datasets.load_remote("ca-GrQc", cache=str(tmp_path), opener=opener)
+    assert opener.calls == 1
+    assert g2 == g
+    # sha256 sidecar was recorded (trust-on-first-use)
+    sidecars = list(tmp_path.glob("*.sha256"))
+    assert len(sidecars) == 1
+
+
+def test_offline_error_is_actionable(tmp_path):
+    opener = _MockOpener(b"", fail=urllib.error.URLError("no route to host"))
+    with pytest.raises(datasets.DatasetFetchError) as ei:
+        datasets.load_remote("ca-GrQc", cache=str(tmp_path), opener=opener)
+    msg = str(ei.value)
+    # the message must say where to put a manually fetched file
+    assert str(tmp_path) in msg
+    assert "offline" in msg
+    assert datasets._CACHE_ENV in msg
+
+
+def test_corrupt_cache_detected(tmp_path):
+    opener = _MockOpener(_gz_payload())
+    path = datasets.fetch("ca-GrQc", cache=str(tmp_path), opener=opener)
+    with open(path, "ab") as f:
+        f.write(b"corruption")
+    with pytest.raises(datasets.DatasetFetchError) as ei:
+        datasets.fetch("ca-GrQc", cache=str(tmp_path), opener=opener)
+    assert "checksum mismatch" in str(ei.value)
+    assert path in str(ei.value)
+
+
+def test_pinned_digest_rejects_tampered_download(tmp_path, monkeypatch):
+    url, _ = datasets.REMOTE["ca-GrQc"]
+    monkeypatch.setitem(datasets.REMOTE, "ca-GrQc", (url, "0" * 64))
+    opener = _MockOpener(_gz_payload())
+    with pytest.raises(datasets.DatasetFetchError) as ei:
+        datasets.fetch("ca-GrQc", cache=str(tmp_path), opener=opener)
+    assert "refusing to cache" in str(ei.value)
+    assert not list(tmp_path.glob("*.txt.gz"))
+
+
+def test_unknown_remote_name():
+    with pytest.raises(KeyError):
+        datasets.fetch("definitely-not-a-dataset")
+
+
+def test_cache_dir_env_override(monkeypatch, tmp_path):
+    monkeypatch.setenv(datasets._CACHE_ENV, str(tmp_path / "alt"))
+    assert datasets.cache_dir() == str(tmp_path / "alt")
+
+
+def test_parse_edge_text_skips_comments_and_blanks():
+    arr = datasets._parse_edge_text(b"# c\n\n% x\n5 7\n7 5\n")
+    assert np.array_equal(arr, np.array([[5, 7], [7, 5]]))

@@ -1,0 +1,114 @@
+"""PartitionedGraph: shard round-trips, streamed ingestion, ownership."""
+import numpy as np
+import pytest
+
+from repro.graphs import Graph, PartitionedGraph, block_owner
+from repro.graphs import generators as GG
+
+
+def _graphs():
+    return [
+        ("caveman", GG.caveman(14, 6, 0.05, seed=13)),
+        ("rmat", GG.rmat(8, 4, seed=2)),
+        ("ba", GG.barabasi_albert(120, 3, seed=5)),
+        ("no-edges", Graph.from_edges(9, np.zeros((0, 2)))),
+        ("empty", Graph.from_edges(0, np.zeros((0, 2)))),
+    ]
+
+
+@pytest.mark.parametrize("name,g", _graphs(), ids=lambda v: v if isinstance(v, str) else "")
+@pytest.mark.parametrize("k", [1, 2, 4, 7])
+def test_from_graph_round_trip(name, g, k):
+    pg = PartitionedGraph.from_graph(g, k)
+    assert pg.to_graph() == g
+    assert pg.m == g.m
+    assert pg.n_parts == k
+    # shards cover every node exactly once with their full adjacency rows
+    seen = np.concatenate([s.nodes for s in pg.shards])
+    assert np.array_equal(np.sort(seen), np.arange(g.n))
+    for s in pg.shards:
+        for i, u in enumerate(s.nodes):
+            assert np.array_equal(s.neighbors(i), g.neighbors(int(u)))
+
+
+@pytest.mark.parametrize("name,g", _graphs(), ids=lambda v: v if isinstance(v, str) else "")
+@pytest.mark.parametrize("k", [1, 3])
+def test_from_edge_stream_matches_from_edges(name, g, k):
+    pg = PartitionedGraph.from_edge_stream(
+        g.n, GG.stream_edges(g, chunk_edges=57), n_parts=k)
+    assert pg.to_graph() == g
+
+
+def test_from_edge_stream_spill_dir_matches_in_memory(tmp_path):
+    g = GG.caveman(10, 6, 0.05, seed=3)
+    spill = tmp_path / "runs"
+    pg = PartitionedGraph.from_edge_stream(
+        g.n, GG.stream_edges(g, chunk_edges=41), n_parts=3,
+        spill_dir=str(spill))
+    assert pg.to_graph() == g
+    assert not list(spill.glob("*.npy"))  # spilled runs were cleaned up
+
+
+def test_from_edge_stream_cleans_dirty_chunks():
+    # self-loops, duplicates, and cross-chunk duplicates must all fold away
+    chunks = [
+        np.array([[0, 1], [1, 1], [2, 3], [1, 0]]),
+        np.array([[0, 1], [3, 2], [4, 0]]),
+    ]
+    pg = PartitionedGraph.from_edge_stream(5, iter(chunks), n_parts=2)
+    want = Graph.from_edges(5, np.concatenate(chunks))
+    assert pg.to_graph() == want
+
+
+def test_graph_partitioned_helper_is_one_partition_special_case():
+    g = GG.caveman(6, 5, 0.1, seed=1)
+    pg = g.partitioned()
+    assert pg.n_parts == 1
+    s = pg.shard(0)
+    assert np.array_equal(s.indptr, g.indptr)
+    assert np.array_equal(s.indices, g.indices)
+    assert np.array_equal(s.nodes, np.arange(g.n))
+
+
+def test_block_owner_balanced_and_contiguous():
+    own = block_owner(10, 3)
+    assert own.min() == 0 and own.max() == 2
+    assert np.all(np.diff(own) >= 0)  # contiguous blocks
+    counts = np.bincount(own)
+    assert counts.max() - counts.min() <= 1
+
+
+def test_out_of_range_owner_rejected():
+    g = GG.caveman(4, 4, 0.0, seed=0)
+    with pytest.raises(ValueError):
+        PartitionedGraph.from_graph(g, 2, owner=np.array([0, 0, 1, 2] * 4))
+    with pytest.raises(ValueError):
+        PartitionedGraph.from_edge_stream(
+            4, iter([np.array([[0, 1], [2, 3]])]), n_parts=2,
+            owner=np.array([0, 0, 1, 2]))
+    with pytest.raises(ValueError):  # wrong length
+        PartitionedGraph.from_graph(g, 2, owner=np.zeros(3, dtype=np.int64))
+
+
+def test_custom_owner_map():
+    g = GG.caveman(8, 4, 0.0, seed=0)
+    owner = np.arange(g.n) % 3  # interleaved, non-contiguous
+    pg = PartitionedGraph.from_graph(g, 3, owner=owner)
+    assert pg.to_graph() == g
+    for s in pg.shards:
+        assert np.array_equal(np.asarray(owner)[s.nodes], np.full(s.n_local, s.part))
+
+
+def test_rmat_stream_deterministic_and_bounded():
+    chunks1 = list(GG.rmat_stream(7, 4, seed=9, chunk_edges=100))
+    chunks2 = list(GG.rmat_stream(7, 4, seed=9, chunk_edges=100))
+    assert len(chunks1) == len(chunks2)
+    assert all(np.array_equal(a, b) for a, b in zip(chunks1, chunks2))
+    assert all(c.shape[0] <= 100 for c in chunks1)
+    assert sum(c.shape[0] for c in chunks1) == (1 << 7) * 4
+    # the partition count must not change the resulting graph
+    g2 = PartitionedGraph.from_edge_stream(
+        128, GG.rmat_stream(7, 4, seed=9, chunk_edges=100), 2).to_graph()
+    g1 = PartitionedGraph.from_edge_stream(
+        128, GG.rmat_stream(7, 4, seed=9, chunk_edges=100), 1).to_graph()
+    assert g1 == g2
