@@ -1,11 +1,18 @@
-"""Merge-phase throughput: seed per-group loop vs the batched engine.
+"""Merge-phase throughput: seed per-group loop vs the batched engines.
 
 Times ONLY the merging hot path (candidate generation + Algorithm-2 sweeps,
 no emission/pruning) on a generator graph, reporting merges/sec and
-groups/sec per engine plus the speedup over the ``loop`` baseline. Artifact:
-``BENCH_merge.json`` — the perf trajectory the ROADMAP tracks.
+groups/sec per engine plus the speedup over the ``loop`` baseline — and,
+for the device engines, the host↔device traffic from the `core.transfer`
+counter. Artifact: ``BENCH_merge.json`` — the perf trajectory the ROADMAP
+tracks.
+
+``--real`` additionally runs the suite on `datasets.load_remote` SNAP
+graphs (cached, checksummed downloads); offline hosts skip them with the
+reason recorded in the artifact.
 
   PYTHONPATH=src python -m benchmarks.merge_throughput [--quick] [--full]
+                                                       [--real]
 """
 from __future__ import annotations
 
@@ -14,13 +21,14 @@ import time
 
 import numpy as np
 
-from benchmarks.common import fmt_table, save_result
+from benchmarks.common import fmt_table, load_real_graphs, save_result
 from repro.core.merging import process_group, process_groups
 from repro.core.minhash import candidate_groups
 from repro.core.slugger import SluggerState
+from repro.core.transfer import GLOBAL as TRANSFER
 from repro.graphs import generators as GG
 
-ENGINES = ("loop", "numpy", "batched")
+ENGINES = ("loop", "numpy", "batched", "resident")
 
 
 def _merge_phase(g, backend: str, T: int, seed: int = 0, max_group: int = 500):
@@ -28,6 +36,7 @@ def _merge_phase(g, backend: str, T: int, seed: int = 0, max_group: int = 500):
     rng = np.random.default_rng(seed)
     streams = np.random.SeedSequence(seed).spawn(max(T, 1))
     merges = groups_n = 0
+    transfer0 = TRANSFER.snapshot()
     t0 = time.perf_counter()
     for t in range(1, T + 1):
         theta = 0.0 if t == T else 1.0 / (1 + t)
@@ -47,10 +56,28 @@ def _merge_phase(g, backend: str, T: int, seed: int = 0, max_group: int = 500):
         "merges_per_s": merges / dt,
         "groups_per_s": groups_n / dt,
         "roots_left": int(state.alive.size),
+        "transfer": TRANSFER.delta_since(transfer0),
     }
 
 
-def run(quick: bool = True):
+def _bench_graphs(graphs, rows, payload):
+    for name, g, T in graphs:
+        res = {be: _merge_phase(g, be, T=T) for be in ENGINES}
+        base = res["loop"]["sec"]
+        for be in ENGINES:
+            r = res[be]
+            r["speedup_vs_loop"] = base / r["sec"]
+            tr = r["transfer"]
+            rows.append([
+                name, g.m, be, f"{r['sec']:.2f}s", r["merges"],
+                f"{r['merges_per_s']:.0f}", f"{r['groups_per_s']:.0f}",
+                f"{r['speedup_vs_loop']:.2f}x",
+                f"{tr['bytes_total']/1e6:.2f}MB",
+            ])
+        payload[name] = {"m": g.m, "T": T, "engines": res}
+
+
+def run(quick: bool = True, real: bool = False):
     if quick:
         graphs = [("caveman-55k", GG.caveman(1000, 11, 0.03, seed=0), 5)]
     else:
@@ -60,21 +87,15 @@ def run(quick: bool = True):
             ("ba-60k", GG.barabasi_albert(20000, 3, seed=1), 10),
         ]
     rows, payload = [], {}
-    for name, g, T in graphs:
-        res = {be: _merge_phase(g, be, T=T) for be in ENGINES}
-        base = res["loop"]["sec"]
-        for be in ENGINES:
-            r = res[be]
-            r["speedup_vs_loop"] = base / r["sec"]
-            rows.append([
-                name, g.m, be, f"{r['sec']:.2f}s", r["merges"],
-                f"{r['merges_per_s']:.0f}", f"{r['groups_per_s']:.0f}",
-                f"{r['speedup_vs_loop']:.2f}x",
-            ])
-        payload[name] = {"m": g.m, "T": T, "engines": res}
-    print("\n== Merge throughput: seed loop vs batched engine ==")
+    _bench_graphs(graphs, rows, payload)
+    if real:
+        real_graphs, notes = load_real_graphs()
+        payload["real_datasets"] = notes
+        _bench_graphs([(f"snap-{n}", g, 5) for n, g in real_graphs],
+                      rows, payload)
+    print("\n== Merge throughput: seed loop vs batched engines ==")
     print(fmt_table(rows, ["graph", "m", "engine", "time", "merges",
-                           "merges/s", "groups/s", "speedup"]))
+                           "merges/s", "groups/s", "speedup", "h2d+d2h"]))
     save_result("BENCH_merge", payload)
     return payload
 
@@ -84,8 +105,11 @@ def main(argv=None):
     mode = ap.add_mutually_exclusive_group()
     mode.add_argument("--quick", action="store_true", help="one small graph (default)")
     mode.add_argument("--full", action="store_true", help="paper-scale graph set")
+    ap.add_argument("--real", action="store_true",
+                    help="also run on load_remote SNAP graphs (skips "
+                         "cleanly when offline)")
     args = ap.parse_args(argv)
-    run(quick=not args.full)
+    run(quick=not args.full, real=args.real)
 
 
 if __name__ == "__main__":

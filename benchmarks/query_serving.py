@@ -14,6 +14,7 @@ batched-over-loop speedup regression-tracked by the acceptance gate
 (>= 5x at n=220k).
 
   PYTHONPATH=src python -m benchmarks.query_serving [--quick] [--full]
+                                                    [--real]
 """
 from __future__ import annotations
 
@@ -22,7 +23,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import fmt_table, save_result
+from benchmarks.common import fmt_table, load_real_graphs, save_result
 from repro.core.query_batch import (BACKENDS, edge_exists_batch,
                                     neighbors_batch, unpack_csr)
 from repro.core.slugger import summarize
@@ -38,12 +39,16 @@ def _best(fn, repeat: int = 3):
     return out, best
 
 
-def run(quick: bool = True):
+def run(quick: bool = True, real: bool = False):
     graphs = [("caveman-55k", SERVING_GRAPHS["55k"]()),
               ("caveman-220k", SERVING_GRAPHS["220k"]())]
     n_queries = 2000 if quick else 20000
     backends = ("numpy", "jax") if quick else BACKENDS
     rows, payload = [], {}
+    if real:  # opt-in SNAP datasets; offline hosts skip with a note
+        real_graphs, notes = load_real_graphs()
+        payload["real_datasets"] = notes
+        graphs += [(f"snap-{n}", g) for n, g in real_graphs]
     for name, g in graphs:
         t0 = time.perf_counter()
         s = summarize(g, T=5, seed=0)
@@ -102,8 +107,11 @@ def main(argv=None):
                       help="2k queries, numpy+jax backends (default)")
     mode.add_argument("--full", action="store_true",
                       help="20k queries, all backends")
+    ap.add_argument("--real", action="store_true",
+                    help="also serve load_remote SNAP graphs (skips "
+                         "cleanly when offline)")
     args = ap.parse_args(argv)
-    run(quick=not args.full)
+    run(quick=not args.full, real=args.real)
 
 
 if __name__ == "__main__":

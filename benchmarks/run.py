@@ -22,6 +22,7 @@ SUITES = {
     "serving": query_serving.run,       # batched query qps (BENCH_serving_queries)
     "scalability": scalability.run,     # Fig 1b
     "partitioned": scalability.run_partitioned,  # engine partition sweep (BENCH_partitioned)
+    "resident": scalability.run_resident,  # resident merge rounds (BENCH_resident)
     "iterations": iterations.run,       # Table III
     "pruning": pruning_bench.run,       # Table IV
     "height": height.run,               # Table V

@@ -5,6 +5,8 @@ the stage-based engine (DESIGN.md §8).
   PYTHONPATH=src python -m benchmarks.scalability                 # Fig 1b
   PYTHONPATH=src python -m benchmarks.scalability --partitions 1,2,4
                                                                   # sweep
+  PYTHONPATH=src python -m benchmarks.scalability --resident --full
+                                     # resident merge rounds (BENCH_resident)
 
 The partition sweep times ONLY the merge phase (the five engine stages, no
 emission/pruning) on the 220k-edge serving bench graph (55k with --quick),
@@ -95,6 +97,90 @@ def run_partitioned(quick: bool = True, partitions=(1, 2, 4),
     return payload
 
 
+def run_resident(quick: bool = True, smoke: bool = False):
+    """Device-resident merge rounds vs the batched mesh path (ISSUE 5).
+
+    Both engines run the SAME config (mesh shingles, identical candidate
+    groups — merge decisions are asserted identical) on the scalability
+    bench graph; what differs is the round loop: the batched mesh path
+    ships the (B, G, W) bitmap batch to devices and pulls a dense (B, G, G)
+    intersection matrix back EVERY round, the resident backend uploads each
+    chunk's bitmaps once and exchanges only ranked top-J candidates and
+    merge plans (DESIGN.md §9).
+
+    Protocol: two reps per engine, gate on the faster (steady state — jit
+    caches warm; rep timings both land in the artifact). Bytes are
+    deterministic and come from the `core.transfer` counter; a "round" is
+    one ranking round-trip. Gates (``BENCH_resident.json``):
+
+    * merge decisions bit-identical (always enforced),
+    * host↔device bytes/round reduced ≥ 4x (enforced in quick/full —
+      byte counts on the smoke graph are too small to be meaningful),
+    * merge phase ≥ 1.5x (enforced at the 220k-edge ``--full`` config the
+      acceptance criterion names; recorded elsewhere — 2-core CI runners
+      are too noisy to gate wall time on the small graphs).
+
+    ``smoke`` is the CI config: a tiny graph, and typically run with
+    ``REPRO_FORCE_PALLAS=1`` so the resident path exercises the Pallas
+    kernels in interpret mode (bit-identity still enforced).
+    """
+    from repro.launch.mesh import make_data_mesh
+
+    if smoke:
+        name, g, T = "caveman-1k", generators.caveman(40, 5, 0.05, seed=0), 3
+    elif quick:
+        name, g, T = "caveman-55k", generators.caveman(1000, 11, 0.03, seed=0), 5
+    else:
+        name, g, T = "caveman-220k", generators.caveman(4000, 11, 0.03, seed=0), 5
+    mesh = make_data_mesh()
+    rows, results = [], {}
+    for be in ("batched", "resident"):
+        reps = []
+        for _ in range(1 if smoke else 2):
+            eng = SummarizerEngine(partitions=1, backend=be, T=T, seed=0,
+                                   mesh=mesh)
+            reps.append(_merge_phase_secs(eng, g)
+                        | {"transfer": eng.stats["transfer"]})
+        best = min(reps, key=lambda r: r["sec"])
+        results[be] = {"reps": reps, "best_sec": best["sec"],
+                       "merges": best["merges"],
+                       "transfer": best["transfer"]}
+        tr = best["transfer"]
+        rows.append([name, g.m, be, f"{best['sec']:.2f}s", best["merges"],
+                     tr["rounds"], f"{tr['bytes_total']/1e6:.2f}MB",
+                     f"{tr['bytes_per_round']/1e3:.0f}KB"])
+    b, r = results["batched"], results["resident"]
+    speedup = b["best_sec"] / r["best_sec"]
+    bytes_ratio = (b["transfer"]["bytes_per_round"]
+                   / max(r["transfer"]["bytes_per_round"], 1e-9))
+    gates = {
+        "decisions_identical": b["merges"] == r["merges"],
+        "speedup_vs_batched_mesh": speedup,
+        "speedup_ok": speedup >= 1.5,
+        "bytes_per_round_ratio": bytes_ratio,
+        "bytes_ok": bytes_ratio >= 4.0,
+    }
+    print(f"\n== Resident merge rounds vs batched mesh path on {name} "
+          f"(T={T}) ==")
+    print(fmt_table(rows, ["graph", "m", "engine", "time", "merges",
+                           "rounds", "bytes", "bytes/round"]))
+    print(f"   speedup {speedup:.2f}x (gate ≥ 1.5x at --full) · bytes/round "
+          f"{bytes_ratio:.2f}x (gate ≥ 4x)")
+    payload = {"graph": name, "m": g.m, "T": T, "engines": results,
+               "gates": gates}
+    save_result("BENCH_resident", payload)
+    assert gates["decisions_identical"], (
+        f"resident merge decisions diverged from batched: "
+        f"{b['merges']} vs {r['merges']}")
+    if not smoke:
+        assert gates["bytes_ok"], (
+            f"bytes/round reduction {bytes_ratio:.2f}x below the 4x gate")
+    if not (smoke or quick):
+        assert gates["speedup_ok"], (
+            f"resident speedup {speedup:.2f}x below the 1.5x gate")
+    return payload
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     mode = ap.add_mutually_exclusive_group()
@@ -107,8 +193,16 @@ def main(argv=None):
                          "partition-sweep mode (e.g. --partitions 1,2,4)")
     ap.add_argument("--backend", default="numpy",
                     choices=("numpy", "batched"))
+    ap.add_argument("--resident", action="store_true",
+                    help="resident-vs-batched merge-round comparison "
+                         "(BENCH_resident.json)")
+    ap.add_argument("--resident-smoke", action="store_true",
+                    help="tiny resident equivalence smoke (CI; pair with "
+                         "REPRO_FORCE_PALLAS=1 to exercise the kernels)")
     args = ap.parse_args(argv)
-    if args.partitions:
+    if args.resident or args.resident_smoke:
+        run_resident(quick=not args.full, smoke=args.resident_smoke)
+    elif args.partitions:
         ks = tuple(int(x) for x in args.partitions.split(","))
         run_partitioned(quick=not args.full, partitions=ks,
                         backend=args.backend)

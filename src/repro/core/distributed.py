@@ -7,18 +7,19 @@ inherently sequential merge decisions run on host. On a real pod the edge
 list lives sharded in HBM and never leaves the devices; the host sees
 (n_roots,) shingles and per-group top-pairs.
 
-`shingle_provider` and `batched_jaccard_mesh` are the production hooks: the
-`SummarizerEngine` plugs them into its shingle stage and its bitset-Jaccard
-ranking whenever ``backend="batched"`` sees more than one device (or an
-explicit mesh) — this module is the engine's multi-device path, not a
-stand-alone demo.
+`shingle_provider` and `batched_intersections_mesh` are the production
+hooks: the `SummarizerEngine` plugs them into its shingle stage and its
+candidate ranking whenever ``backend="batched"`` sees more than one device
+(or an explicit mesh) — this module is the engine's multi-device path, not
+a stand-alone demo.
 
 Engines:
   * ``shingles_sharded``     — edge-sharded minhash shingles (pmin combine)
   * ``shingle_provider``     — the engine hook: sharded shingles + host
                                root segment-min + leafless-root sentinel
-  * ``batched_jaccard_mesh`` — (B, G, W) bitset-Jaccard batches shard_map'd
-                               over the data axis, kernel per shard
+  * ``batched_intersections_mesh`` — (B, G, W) bitset batches shard_map'd
+                               over the data axis, masked kernel per shard
+                               (padding early-exits; transfer-only)
   * ``greedy_group_matching``— vmapped on-device greedy matching per group
   * ``summarize_jax``        — hybrid engine: device scoring + host decisions,
                                exactness restored by the emission DP
@@ -138,57 +139,64 @@ def shingle_provider(g: Graph, mesh, data_axes=None):
     return for_roots
 
 
-_MESH_JACCARD_CACHE: dict = {}
+from repro.kernels.common import LruCache, mesh_content_key, shard_map_no_check
+
+_MESH_JACCARD_CACHE = LruCache(8)  # compiled shard_map executables, by shape
 
 
-def batched_jaccard_mesh(mesh, data_axes=None):
-    """Engine hook: the bitset-Jaccard dispatch shard_map'd over the mesh.
+def batched_intersections_mesh(mesh, data_axes=None):
+    """Engine hook: the bitset intersection dispatch shard_map'd over the
+    mesh — the ``backend="batched"`` ranking source.
 
-    Returns ``fn((B, G, W) uint32) -> (B, G, G) float64``: the batch is
-    padded to a shard multiple of the data axis, each shard runs the vmap'd
-    Pallas `pairwise_intersection_kernel` on its slice, and the host turns
-    intersection counts into Jaccard exactly like the single-device
-    `kernels.bitset_jaccard.ops.batched_pairwise_jaccard` — so scores (and
-    therefore merge decisions) are bit-identical to the host path given the
-    same bitmaps.
+    Returns ``fn((B, G, W) uint32) -> (B, G, G) int64``: the batch is
+    padded to a pow2 multiple of the shard count (jit-cache shaping), each
+    shard runs `batch_masked_intersection_kernel` on its slice with its OWN
+    valid-row count — real rows live in a contiguous prefix, so shard s of
+    size Bs holds ``clip(B − s·Bs, 0, Bs)`` of them and the padded rows
+    early-exit before the O(G²·W) popcount: padding is transfer-only
+    (ISSUE 5). Intersection counts are exact integers, so merge decisions
+    are bit-identical to the host ranking given the same bitmaps. Transfers
+    report to `core.transfer.GLOBAL` (one ranking round per dispatch).
     """
-    from repro.kernels.bitset_jaccard.kernel import pairwise_intersection_kernel
+    from repro.core.transfer import GLOBAL as TRANSFER
+    from repro.kernels.bitset_jaccard.kernel import (
+        batch_masked_intersection_kernel)
     from repro.kernels.common import default_interpret, pow2
 
     data_axes = _data_axes_of(mesh, data_axes)
     n_shards = int(np.prod([mesh.shape[a] for a in data_axes]))
     spec = P(data_axes if len(data_axes) > 1 else data_axes[0])
-    # cache by mesh CONTENT, not object identity: the engine builds a fresh
-    # mesh per run, and equivalent meshes must reuse the same executables
-    mesh_key = (tuple(int(d.id) for d in np.asarray(mesh.devices).ravel()),
-                tuple(mesh.axis_names), tuple(mesh.shape.values()))
+    mesh_key = mesh_content_key(mesh)
 
     def fn(bits: np.ndarray) -> np.ndarray:
         B, G, W = bits.shape
         Wp = pow2(W)
         # pad the batch to a pow2 multiple of the shard count so the jit
         # cache stays small (same rule as the single-device ops tiling)
-        Bp = n_shards * pow2((B + n_shards - 1) // n_shards, floor=1)
+        Bs = pow2((B + n_shards - 1) // n_shards, floor=1)
+        Bp = n_shards * Bs
         batch = np.zeros((Bp, G, Wp), dtype=np.uint32)
         batch[:B, :, :W] = bits
+        # per-shard valid-row counts (real rows are a contiguous prefix);
+        # shipped as a sharded input so the compiled fn is B-agnostic
+        valid = np.clip(B - np.arange(n_shards, dtype=np.int64) * Bs,
+                        0, Bs).astype(np.int32)
         key = (mesh_key, Bp, G, Wp)
         f = _MESH_JACCARD_CACHE.get(key)
         if f is None:
             interpret = default_interpret()
-            local = jax.vmap(
-                lambda bb: pairwise_intersection_kernel(bb, interpret=interpret))
-            try:  # pallas_call has no replication rule: disable the check
-                sm = _shard_map(local, mesh=mesh, in_specs=(spec,),
-                                out_specs=spec, check_rep=False)
-            except TypeError:  # newer jax renamed the kwarg
-                sm = _shard_map(local, mesh=mesh, in_specs=(spec,),
-                                out_specs=spec, check_vma=False)
-            f = jax.jit(sm)
+
+            def local(bb, vv):
+                return batch_masked_intersection_kernel(bb, vv,
+                                                        interpret=interpret)
+
+            f = jax.jit(shard_map_no_check(local, mesh, (spec, spec), spec))
             _MESH_JACCARD_CACHE[key] = f
-        inter = np.asarray(f(batch)).astype(np.int64)
-        deg = np.diagonal(inter, axis1=1, axis2=2)  # popcount(x & x) = |x|
-        union = deg[:, :, None] + deg[:, None, :] - inter
-        return np.where(union > 0, inter / np.maximum(union, 1), 0.0)[:B]
+        TRANSFER.add_h2d(batch.nbytes + valid.nbytes)
+        inter = np.asarray(f(batch, valid))
+        TRANSFER.add_d2h(inter.nbytes)
+        TRANSFER.tick_round()
+        return inter[:B].astype(np.int64)
 
     return fn
 

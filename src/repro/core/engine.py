@@ -25,10 +25,14 @@ Per-iteration randomness comes from `np.random.SeedSequence(seed).spawn(T)`
 triples can never alias (the old ``seed * 7919 + t`` did: seed=0,t=7919 ≡
 seed=1,t=0).
 
-``backend="batched"`` additionally routes shingles and the bitset-Jaccard
-ranking through `core/distributed`'s `shard_map` dispatches when more than
-one device is visible (or a mesh is passed explicitly) — the multi-device
-path of the production engine rather than a disconnected demo.
+``backend="batched"`` additionally routes shingles and the bitset
+intersection ranking through `core/distributed`'s `shard_map` dispatches
+when more than one device is visible (or a mesh is passed explicitly) — the
+multi-device path of the production engine rather than a disconnected demo.
+``backend="resident"`` goes further: each workspace chunk's bitmaps are
+uploaded ONCE into a `core/resident.ResidentBitmapArena` and every merge
+round runs as on-device fused top-J ranking + bitset-OR folds, with only
+tiny plans crossing the host↔device boundary (DESIGN.md §9).
 """
 from __future__ import annotations
 
@@ -81,9 +85,10 @@ class SummarizerEngine:
     * ``workers`` — threads for the merge_round stage (record-mode sweeps
       are pure local array work, so they parallelize safely). Defaults to
       ``min(partitions, cpu count)``.
-    * ``mesh`` — a jax mesh for the multi-device shingle/Jaccard dispatch
-      (``backend="batched"`` only). ``None`` auto-enables when more than
-      one device is visible.
+    * ``mesh`` — a jax mesh for the multi-device shingle/intersection
+      dispatch (``backend="batched"``) and the resident arena placement
+      (``backend="resident"``). ``None`` auto-enables when more than one
+      device is visible.
     * ``stages`` — dict overriding any of the five stage callables (each
       called as ``fn(engine, ctx)``).
     """
@@ -92,9 +97,10 @@ class SummarizerEngine:
                  T: int = 20, seed: int = 0, max_group: int = 500,
                  top_j: int = 16, height_bound=None, prune_steps=(1, 2, 3),
                  workers: int | None = None, mesh=None, stages: dict | None = None):
-        if backend not in ("numpy", "batched", "loop"):
+        if backend not in ("numpy", "batched", "loop", "resident"):
             raise ValueError(
-                f"unknown backend {backend!r}; use 'numpy', 'batched' or 'loop'")
+                f"unknown backend {backend!r}; use 'numpy', 'batched', "
+                f"'resident' or 'loop'")
         if partitions < 1:
             raise ValueError("partitions must be >= 1")
         self.partitions = int(partitions)
@@ -118,12 +124,13 @@ class SummarizerEngine:
             self.stages.update(stages)
         self.stats: dict = {}
         self._shingle_provider = None
-        self._jaccard_fn = None
+        self._rank_dispatch = None
+        self._resident_factory = None
 
     # ------------------------------------------------------------- plumbing
     def _mesh_active(self):
         """Resolve the mesh for the multi-device dispatches (or None)."""
-        if self.backend != "batched":
+        if self.backend not in ("batched", "resident"):
             return None
         if self.mesh is not None:
             return self.mesh
@@ -137,15 +144,24 @@ class SummarizerEngine:
         return None
 
     def _setup_dispatches(self, g):
-        """Wire the distributed shingle/Jaccard paths for this run."""
+        """Wire the distributed/resident device paths for this run."""
         self._shingle_provider = None
-        self._jaccard_fn = None
+        self._rank_dispatch = None
+        self._resident_factory = None
         mesh = self._mesh_active()
+        if self.backend == "resident":
+            from repro.core.resident import ResidentBitmapArena
+
+            def factory(ws, _mesh=mesh, _j=self.top_j):
+                return ResidentBitmapArena.from_workspace(ws, top_j=_j,
+                                                          mesh=_mesh)
+            self._resident_factory = factory
         if mesh is None:
             return
         from repro.core import distributed as D
         self._shingle_provider = D.shingle_provider(g, mesh)
-        self._jaccard_fn = D.batched_jaccard_mesh(mesh)
+        if self.backend == "batched":
+            self._rank_dispatch = D.batched_intersections_mesh(mesh)
 
     # --------------------------------------------------------------- stages
     def stage_shingle(self, ctx: IterationContext):
@@ -185,7 +201,8 @@ class SummarizerEngine:
                 rng_of=lambda li, idxs=idxs: np.random.default_rng(
                     ctx.group_children[idxs[li]]),
                 top_j=self.top_j, height_bound=self.height_bound,
-                backend=self.backend, jaccard_fn=self._jaccard_fn)
+                backend=self.backend, rank_dispatch=self._rank_dispatch,
+                resident_factory=self._resident_factory)
             for li, gi in enumerate(idxs):
                 ctx.plans[int(gi)] = plans_p[li]
             ctx.thunks.extend(thunks_p)
@@ -224,11 +241,14 @@ class SummarizerEngine:
         merge-forest state and the partitioned graph. Per-stage wall
         seconds land in ``self.stats``; the partition-sweep benchmark
         reads the merge phase from there."""
+        from repro.core.transfer import GLOBAL as TRANSFER
+
         pg = as_partitioned(g, self.partitions)
         state = SluggerState(pg.to_graph())
         self._setup_dispatches(state.g)
         self.stats = {name: 0.0 for name in STAGE_ORDER}
         self.stats["merges"] = 0
+        transfer0 = TRANSFER.snapshot()
         iter_streams = np.random.SeedSequence(self.seed).spawn(max(self.T, 1))
         for t in range(1, self.T + 1):
             theta = 0.0 if t == self.T else 1.0 / (1 + t)
@@ -243,6 +263,7 @@ class SummarizerEngine:
                 "iter %3d: θ=%.3f groups=%d merges=%d roots=%d parts=%d",
                 t, theta, len(ctx.groups), ctx.merges, state.alive.size,
                 self.partitions)
+        self.stats["transfer"] = TRANSFER.delta_since(transfer0)
         return state, pg
 
     def run(self, g):

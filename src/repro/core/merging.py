@@ -6,14 +6,18 @@ Two engines share the group-local dense view (`GroupWorkspace`):
   partners by packed-bitmap Jaccard, evaluate the exact Saving for the top-J,
   merge when ``Saving(A, B) ≥ θ(t)``. Kept as the benchmark baseline.
 
-* `process_groups` — the batched group-merge engine (DESIGN.md §3): groups
-  are size-bucketed, their neighbor bitmaps packed into one ``(B, G, W)``
-  uint32 batch, and ALL pairwise Jaccard rankings computed in a single
-  vmap'd dispatch of `kernels/bitset_jaccard.pairwise_intersection_kernel`
-  (``backend="batched"``) or a chunked NumPy popcount (``backend="numpy"``).
-  Each group then runs vectorized Algorithm-2 sweeps: every alive row's
-  top-J partners are scored by the exact Saving in one array op, and a
-  conflict-free random subset of the proposed mergers is applied per round.
+* `process_groups` — the batched group-merge engine (DESIGN.md §3/§9):
+  groups are size-bucketed, their neighbor bitmaps packed into one
+  ``(B, G, W)`` uint32 batch, and every round's candidate ranking comes
+  from the CURRENT bitmaps through a pluggable rank source — a chunked
+  NumPy popcount (``backend="numpy"``), the Pallas/mesh intersection
+  dispatch (``backend="batched"``), or the device-resident fused top-J of
+  `core/resident.py` (``backend="resident"``). Ranking uses the quantized
+  integer Jaccard key (`rank_keys`) so every source orders candidates
+  bit-identically; each group then runs vectorized Algorithm-2 sweeps:
+  every dirty row's top-J partners are scored by the exact Saving in one
+  array op, and a conflict-free random subset of the proposed mergers is
+  applied per round.
 
 The Saving is the flat 2-level cost estimate SWEG uses; the hierarchy's
 benefit is realized by the optimal encoding DP at emission time, which also
@@ -33,6 +37,59 @@ def _pair_cost(cnt, poss):
     single `minimum` already lands on 0 for absent pairs — no mask needed.
     """
     return np.minimum(cnt, poss - cnt + 1)
+
+
+# ---------------------------------------------------------------------------
+# Candidate ranking: quantized integer Jaccard keys (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+_RANK_KEY_BITS = 15
+
+
+def _bit_length(v: np.ndarray) -> np.ndarray:
+    """Elementwise bit length of non-negative ints < 2^31 — the 5-step
+    binary search mirrored bit-for-bit by `kernels/bitset_fold/ref.py`."""
+    b = np.zeros_like(v)
+    for s in (16, 8, 4, 2, 1):
+        t = v >> s
+        big = t > 0
+        b += np.where(big, s, 0)
+        v = np.where(big, t, v)
+    return b + (v > 0)
+
+
+def rank_keys(inter: np.ndarray, deg_r, deg_c) -> np.ndarray:
+    """Quantized-Jaccard integer ranking keys in ``[0, 2^15]``.
+
+    Shift intersection and union down together until the union fits 15
+    bits, then take the exact integer quotient — shift and integer-divide
+    only, so NumPy here, XLA, and the Pallas kernels produce the SAME key
+    for the same bitmaps (no float division whose rounding could differ
+    across backends). Ranking is (key desc, column asc): the quantization
+    only coarsens which near-equal candidates tie; the tie-break keeps the
+    order total and deterministic, which is what the cross-backend
+    bit-identity needs (DESIGN.md §9).
+    """
+    inter = inter.astype(np.int64)
+    union = np.asarray(deg_r + deg_c - inter, dtype=np.int64)
+    sh = np.maximum(0, _bit_length(union) - _RANK_KEY_BITS)
+    return ((inter >> sh) << _RANK_KEY_BITS) // np.maximum(union >> sh, 1)
+
+
+def _row_intersections(bits: np.ndarray, rb: np.ndarray,
+                       rr: np.ndarray) -> np.ndarray:
+    """(n, G) intersection popcounts of rows (rb[i], rr[i]) against every
+    column row of their group, chunked so the (chunk, G, W) temp stays
+    within the memory budget."""
+    n = rb.size
+    _, G, W = bits.shape
+    out = np.empty((n, G), dtype=np.int64)
+    chunk = max(1, int(_MEM_BUDGET // max(1, G * W * 8)))
+    for s0 in range(0, n, chunk):
+        gb = rb[s0:s0 + chunk]
+        rows = bits[gb, rr[s0:s0 + chunk]]
+        out[s0:s0 + chunk] = popcount(
+            rows[:, None, :] & bits[gb]).sum(axis=-1, dtype=np.int64)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -314,18 +371,57 @@ def process_group(
 _MEM_BUDGET = 128 << 20  # bound on any (B, G, R)-shaped float64 temporary
 
 
-def _tensor_jaccard_numpy(bits: np.ndarray) -> np.ndarray:
-    """(B, G, W) uint64 bitmaps -> (B, G, G) float64 Jaccard, chunked over B."""
-    B, G, W = bits.shape
-    deg = popcount(bits).sum(axis=-1, dtype=np.int64)
-    inter = np.empty((B, G, G), dtype=np.int64)
-    chunk = max(1, int(_MEM_BUDGET // max(1, G * G * W * 8)))
-    for s0 in range(0, B, chunk):
-        inter[s0:s0 + chunk] = popcount(
-            bits[s0:s0 + chunk, :, None, :] & bits[s0:s0 + chunk, None, :, :]
-        ).sum(axis=-1, dtype=np.int64)
-    union = deg[:, :, None] + deg[:, None, :] - inter
-    return np.where(union > 0, inter / np.maximum(union, 1), 0.0)
+class HostRankSource:
+    """Per-round candidate ranking over the workspace's host-folded bitmaps.
+
+    ``dispatch`` (optional) computes the (B, G, G) intersection tensor on
+    device — the single-device kernel ops or the mesh shard_map dispatch
+    (`core/distributed.batched_intersections_mesh`) plug in here; without
+    it the intersections come from a chunked host popcount restricted to
+    the dirty rows. Either way the integer intersections — and therefore
+    the ranked order — are identical.
+    """
+
+    needs_host_bits = True  # `apply_merges` must keep folding ws.bits
+
+    def __init__(self, dispatch=None):
+        self.dispatch = dispatch
+
+    def ranked(self, ws, rb, rr, j_max):
+        if self.dispatch is not None:
+            inter_all = self.dispatch(ws.bits.view(np.uint32))  # (B, G, G)
+            deg = np.diagonal(inter_all, axis1=1, axis2=2)
+            inter = inter_all[rb, rr]
+        else:
+            deg = popcount(ws.bits).sum(axis=-1, dtype=np.int64)
+            inter = _row_intersections(ws.bits, rb, rr)
+        keys = rank_keys(inter, deg[rb, rr][:, None], deg[rb])
+        keys[~ws.alive[rb]] = -1                   # dead candidates last …
+        keys[np.arange(rb.size), rr] = -1          # … along with self
+        # deterministic total order: key desc, ties by asc column (stable)
+        order = np.argsort(-keys, axis=1, kind="stable")
+        return order[:, :j_max]
+
+    def on_merges(self, ws, b, a, z):
+        pass  # host bitmaps were folded by apply_merges
+
+
+class ResidentRankSource:
+    """Ranking from a device-resident arena (`core/resident.py`): top-J
+    comes back ranked from the fused kernel, and the round's merges fold
+    the RESIDENT bitmaps instead of the host copy (which goes stale — the
+    exact-Saving evaluation never reads it, see DESIGN.md §9)."""
+
+    needs_host_bits = False
+
+    def __init__(self, arena):
+        self.arena = arena
+
+    def ranked(self, ws, rb, rr, j_max):
+        return self.arena.topj_rows(rb, rr)[:, :j_max]
+
+    def on_merges(self, ws, b, a, z):
+        self.arena.fold(b, a, z, ws.memcol[b, a], ws.memcol[b, z])
 
 
 class BatchedGroupWorkspace:
@@ -462,25 +558,6 @@ class BatchedGroupWorkspace:
             out.append(ws)
         return out
 
-    # -- Jaccard ranking ---------------------------------------------------
-    def pairwise_jaccard(self, backend: str, dispatch=None) -> np.ndarray:
-        """(B, G, G) Jaccard — one vmap'd kernel dispatch for the batch.
-
-        ``dispatch`` overrides the device path with a custom callable
-        ``(B, G, W32) uint32 -> (B, G, G) float64`` — the engine's
-        mesh-sharded dispatch (`core/distributed.batched_jaccard_mesh`)
-        plugs in here."""
-        if backend == "batched":
-            if dispatch is not None:
-                return dispatch(self.bits.view(np.uint32))
-            try:
-                from repro.kernels.bitset_jaccard.ops import batched_pairwise_jaccard
-            except ImportError:  # jax unavailable: fall through to NumPy
-                pass
-            else:
-                return batched_pairwise_jaccard(self.bits.view(np.uint32))
-        return _tensor_jaccard_numpy(self.bits)
-
     # -- exact Saving (Eq. 8), every alive row's top-J in one op -----------
     def savings_rows(self, rb: np.ndarray, rr: np.ndarray, cands: np.ndarray,
                      height_bound=None) -> np.ndarray:
@@ -525,8 +602,13 @@ class BatchedGroupWorkspace:
         return out
 
     # -- batched merge application -----------------------------------------
-    def apply_merges(self, b: np.ndarray, a: np.ndarray, z: np.ndarray):
-        """Fold row z into row a of group b for a round of disjoint pairs."""
+    def apply_merges(self, b: np.ndarray, a: np.ndarray, z: np.ndarray,
+                     fold_bits: bool = True):
+        """Fold row z into row a of group b for a round of disjoint pairs.
+
+        ``fold_bits=False`` skips the host bitmap fold — the resident
+        backend folds the DEVICE copy instead (`ResidentRankSource`), and
+        nothing in the Saving evaluation reads ``self.bits``."""
         if b.size == 0:
             return
         G = self.G
@@ -562,26 +644,30 @@ class BatchedGroupWorkspace:
         self.hgt[b, a] = np.maximum(self.hgt[b, a], self.hgt[b, z]) + 1
         self.s[b, a] = s_new
         self.alive[b, z] = False
-        # bitmaps: fold column cz into ca for all rows, then OR rows.
-        # Two pairs of the SAME group can fold columns living in the same
-        # 64-bit word, so the word-level updates must be unbuffered (.at) —
-        # plain fancy `|=`/`&=` would clobber one fold with the other.
-        one = np.uint64(1)
-        wa, ba = (ca >> 6), (ca & 63).astype(np.uint64)
-        wz, bz = (cz >> 6), (cz & 63).astype(np.uint64)
-        rows = np.broadcast_to(np.arange(G), (b.size, G))
-        bcol = np.broadcast_to(b[:, None], (b.size, G))
-        zbit = (self.bits[b, :, wz] >> bz[:, None]) & one
-        np.bitwise_or.at(
-            self.bits, (bcol, rows, np.broadcast_to(wa[:, None], (b.size, G))),
-            zbit << ba[:, None])
-        np.bitwise_and.at(
-            self.bits, (bcol, rows, np.broadcast_to(wz[:, None], (b.size, G))),
-            np.broadcast_to((~(one << bz))[:, None], (b.size, G)))
-        np.bitwise_or.at(self.bits, (b, a), self.bits[b, z])
-        self.bits[b, z] = 0
-        # row a has no bit for its own column
-        self.bits[b, a, wa] &= ~(one << ba)
+        if fold_bits:
+            # bitmaps: fold column cz into ca for all rows, then OR rows.
+            # Two pairs of the SAME group can fold columns living in the
+            # same 64-bit word, so the word-level updates must be unbuffered
+            # (.at) — plain fancy `|=`/`&=` would clobber one fold with the
+            # other.
+            one = np.uint64(1)
+            wa, ba = (ca >> 6), (ca & 63).astype(np.uint64)
+            wz, bz = (cz >> 6), (cz & 63).astype(np.uint64)
+            rows = np.broadcast_to(np.arange(G), (b.size, G))
+            bcol = np.broadcast_to(b[:, None], (b.size, G))
+            zbit = (self.bits[b, :, wz] >> bz[:, None]) & one
+            np.bitwise_or.at(
+                self.bits,
+                (bcol, rows, np.broadcast_to(wa[:, None], (b.size, G))),
+                zbit << ba[:, None])
+            np.bitwise_and.at(
+                self.bits,
+                (bcol, rows, np.broadcast_to(wz[:, None], (b.size, G))),
+                np.broadcast_to((~(one << bz))[:, None], (b.size, G)))
+            np.bitwise_or.at(self.bits, (b, a), self.bits[b, z])
+            self.bits[b, z] = 0
+            # row a has no bit for its own column
+            self.bits[b, a, wa] &= ~(one << ba)
         # incremental cost update for all rows (columns ca, cz changed) …
         new_ca = _pair_cost(self.CNT[b, :, ca], self.s[b] * self.colsize[b, ca][:, None])
         np.add.at(self.cost_row, (b,), new_ca - old_ca - old_cz)
@@ -591,49 +677,32 @@ class BatchedGroupWorkspace:
         self.cost_row[b, a] = crow + self.nd[b, a]
         self.cost_row[b, z] = 0.0
 
-    def refresh_jaccard(self, jac: np.ndarray, b: np.ndarray, a: np.ndarray,
-                        z: np.ndarray):
-        """Recompute Jaccard rows of merged survivors from the folded bits."""
-        inter = popcount(self.bits[b, a][:, None, :] & self.bits[b]).sum(axis=-1, dtype=np.int64)
-        deg_a = popcount(self.bits[b, a]).sum(axis=-1, dtype=np.int64)
-        deg = popcount(self.bits[b]).sum(axis=-1, dtype=np.int64)
-        union = deg_a[:, None] + deg - inter
-        row = np.where(union > 0, inter / np.maximum(union, 1), 0.0)
-        row = np.where(self.alive[b], row, -1.0)
-        row[np.arange(b.size), a] = -1.0
-        jac[b, a, :] = row
-        jac[b, :, a] = row
-        jac[b, z, :] = -1.0
-        jac[b, :, z] = -1.0
-
     # -- the sweep ---------------------------------------------------------
-    def sweep(self, jac: np.ndarray, theta: float,
-              top_j: int = 16, height_bound=None) -> int:
+    def sweep(self, theta: float, ranker, top_j: int = 16,
+              height_bound=None) -> int:
         """Vectorized Algorithm-2 rounds over the whole batch.
 
-        Per round: every DIRTY row's top-J partners (by the batch Jaccard
-        ranking) are scored with the exact Saving in one array op; the
-        proposals are thinned to a conflict-free set by randomized-priority
-        matching (a proposal wins iff it holds the minimum priority at both
-        endpoints — the global minimum always wins, so rounds make progress)
-        and applied in one batched fold. The dirty set mirrors the
-        sequential queue: every row starts dirty, a row whose best Saving
-        falls below θ leaves it for good, a merged survivor re-enters it
-        ("merged node rejoins Q"), and a row that lost the matching retries
-        next round.
+        Per round: every DIRTY row's ranked top-J partners — by quantized
+        integer Jaccard key over the CURRENT bitmaps, via the pluggable
+        ``ranker`` (`HostRankSource` on host/dispatch bitmaps,
+        `ResidentRankSource` from the device-resident arena) — are scored
+        with the exact Saving in one array op; the proposals are thinned to
+        a conflict-free set by randomized-priority matching (a proposal
+        wins iff it holds the minimum priority at both endpoints — the
+        global minimum always wins, so rounds make progress) and applied in
+        one batched fold. The dirty set mirrors the sequential queue: every
+        row starts dirty, a row whose best Saving falls below θ leaves it
+        for good, a merged survivor re-enters it ("merged node rejoins Q"),
+        and a row that lost the matching retries next round.
 
         Every random choice is a counter-based hash of (group seed, round,
-        row) and the candidate ranking is a per-row total order, so a
-        group's outcome is a pure function of its own tensors — independent
-        of which chunk, partition, or thread swept it (DESIGN.md §8).
+        row), and the candidate ranking is a per-row total order (key desc,
+        column asc, dead/self last) recomputed from the round's bitmap
+        state, so a group's outcome is a pure function of its own tensors —
+        independent of which chunk, partition, thread, or rank source swept
+        it (DESIGN.md §8/§9).
         """
         B, G = self.B, self.G
-        jac = np.asarray(jac, dtype=np.float64)  # mutated; callers discard it
-        gi = np.arange(G)
-        jac[:, gi, gi] = -1.0
-        dead = ~self.alive
-        jac[np.broadcast_to(dead[:, None, :], jac.shape)] = -1.0
-        jac[np.broadcast_to(dead[:, :, None], jac.shape)] = -1.0
         merges = 0
         dirty = self.alive.copy()
         alive_cnt = self.alive.sum(axis=1)
@@ -646,12 +715,7 @@ class BatchedGroupWorkspace:
             if j_max < 1:
                 break
             rb, rr = np.nonzero(dirty)
-            jrows = jac[rb, rr]                                    # (n, G)
-            # deterministic total ranking: desc jaccard, ties by asc column
-            # (stable argsort) — a row's top-j prefix is then invariant to
-            # j_max and to how the bucket was chunked
-            order = np.argsort(-jrows, axis=1, kind="stable")
-            part = order[:, :j_max]
+            part = ranker.ranked(self, rb, rr, j_max)              # (n, j)
             sav = self.savings_rows(rb, rr, part, height_bound=height_bound)
             j_row = np.minimum(top_j, alive_cnt[rb] - 1)
             cand_ok = self.alive[rb[:, None], part] & (part != rr[:, None])
@@ -677,8 +741,8 @@ class BatchedGroupWorkspace:
             np.minimum.at(winner, z_key, p)
             acc = (winner[a_key] == p) & (winner[z_key] == p)
             ab, am, az = gb[acc], ar[acc], zr[acc]
-            self.apply_merges(ab, am, az)
-            self.refresh_jaccard(jac, ab, am, az)
+            self.apply_merges(ab, am, az, fold_bits=ranker.needs_host_bits)
+            ranker.on_merges(self, ab, am, az)
             # survivors rejoin the queue, absorbed rows leave it; losers of
             # the matching stayed dirty and retry next round
             dirty[ab, az] = False
@@ -692,6 +756,17 @@ class BatchedGroupWorkspace:
 _BATCH_MAX_GROUP = 128  # larger groups amortize row-level vectorization alone
 
 
+def _default_intersections_dispatch():
+    """Single-device device path: the Pallas batched intersection ops, or
+    None (→ host popcount) when jax is unavailable."""
+    try:
+        from repro.kernels.bitset_jaccard.ops import (
+            batched_pairwise_intersections)
+    except ImportError:  # jax unavailable: fall back to the NumPy ranking
+        return None
+    return batched_pairwise_intersections
+
+
 def build_merge_work(
     state,
     groups: list,
@@ -702,12 +777,13 @@ def build_merge_work(
     top_j: int = 16,
     height_bound=None,
     backend: str = "numpy",
-    jaccard_fn=None,
+    rank_dispatch=None,
+    resident_factory=None,
 ):
     """Build record-mode workspaces for one iteration's candidate groups.
 
     Returns ``(plans, thunks)``: ``plans[i]`` is group i's `MergePlan`;
-    each thunk runs one workspace chunk's (or one large group's) Jaccard +
+    each thunk runs one workspace chunk's (or one large group's) ranking +
     sweep entirely against local tensors and returns its merge count.
     Workspaces are built HERE, against the current state snapshot — builds
     stay serial because `gather_rows` compacts arena rows in place — while
@@ -716,8 +792,10 @@ def build_merge_work(
 
     ``group_seeds`` are per-group uint64 priority seeds; ``rng_of(i)``
     supplies the queue-permutation generator for groups swept sequentially
-    (``backend="loop"`` and oversized groups). ``jaccard_fn`` overrides the
-    batched Jaccard dispatch (mesh sharding).
+    (``backend="loop"`` and oversized groups). ``rank_dispatch`` overrides
+    the batched intersection dispatch (mesh sharding);
+    ``resident_factory(ws)`` overrides how ``backend="resident"`` builds
+    its per-chunk `ResidentBitmapArena` (mesh placement, kernel forcing).
     """
     groups = [np.asarray(g, dtype=np.int64) for g in groups]
     group_seeds = np.asarray(group_seeds, dtype=np.uint64)
@@ -727,14 +805,29 @@ def build_merge_work(
             return np.random.default_rng(group_seeds[i])
     thunks: list = []
 
+    def _make_ranker(ws):
+        if backend == "resident":
+            factory = resident_factory
+            if factory is None:
+                from repro.core.resident import ResidentBitmapArena
+
+                def factory(w):
+                    return ResidentBitmapArena.from_workspace(w, top_j=top_j)
+            return ResidentRankSource(factory(ws))
+        if backend == "batched":
+            dispatch = rank_dispatch or _default_intersections_dispatch()
+            return HostRankSource(dispatch)
+        return HostRankSource(None)
+
     def _seq_thunk(ws, rng):
         return lambda: _sweep_sequential(ws, theta, rng, top_j=top_j,
                                          height_bound=height_bound)
 
     def _batch_thunk(ws):
         def run():
-            jac = ws.pairwise_jaccard(backend, dispatch=jaccard_fn)
-            return ws.sweep(jac, theta, top_j=top_j,
+            # the ranker is built at RUN time: the resident arena's one-time
+            # bitmap upload belongs to the merge_round stage, not pack
+            return ws.sweep(theta, _make_ranker(ws), top_j=top_j,
                             height_bound=height_bound)
         return run
 

@@ -35,10 +35,14 @@ import numpy as np
 
 from repro.core.summary_ir import PackedSummary, segmented_indices
 
+from repro.kernels.common import LruCache
+
 BACKENDS = ("numpy", "jax", "pallas")
 
-_JAX_SWEEP_CACHE: dict = {}
-_JAX_COUNT_CACHE: dict = {}
+# bounded: padded (B, E) shapes drift with traffic and each compiled sweep
+# would otherwise live for the life of the serving process (ISSUE 5)
+_JAX_SWEEP_CACHE = LruCache(16)
+_JAX_COUNT_CACHE = LruCache(16)
 
 
 def _require_backend(backend: str):

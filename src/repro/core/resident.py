@@ -1,0 +1,197 @@
+"""Device-resident merge rounds: persistent bitmap arenas (DESIGN.md §9).
+
+`ResidentBitmapArena` is the ``backend="resident"`` engine's device half.
+One arena wraps ONE batched workspace chunk (`merging.BatchedGroupWorkspace`,
+a (B, G, W) packed-bitmap batch): the bitmaps are uploaded ONCE, stay
+resident across every merge round of the iteration, and the round loop
+becomes three on-device ops —
+
+1. **fused ranking** (`kernels/bitset_fold.topj_fn`): pairwise quantized-
+   Jaccard keys reduced to per-row ranked top-J candidate columns on
+   device; the host downloads (n_dirty, J) int8 instead of a dense
+   (B, G, G) score matrix;
+2. **bitset-OR fold** (`kernels/bitset_fold.fold_fn`): the round's accepted
+   merge pairs fold the resident bitmaps in place (donated buffers — on
+   backends with donation support the fold never copies);
+3. a host exchange of the TINY artifacts only: dirty-row ids up, ranked
+   candidates down, fold instructions up.
+
+The exact-Saving evaluation needs no bitmap sync-back — the workspace keeps
+the integer count tensors (`CNT`, sizes, self-counts) on host, and Savings
+are computed from those; bitmaps only drive the ranking. `sync_rows` exists
+for the verification contract: tests pull selected (dirty) rows back and
+assert the device fold is bit-identical to the host fold.
+
+Every upload/download reports to `core.transfer.GLOBAL`, and each ranking
+round-trip ticks the round counter — `benchmarks/scalability.py --resident`
+gates the bytes-per-round reduction on these numbers.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.transfer import GLOBAL as TRANSFER
+
+
+def _jax():
+    try:
+        import jax
+    except ImportError as e:  # pragma: no cover - jax is a hard dep of this path
+        raise RuntimeError(
+            "backend='resident' needs jax; install jax or use "
+            "backend='numpy'") from e
+    return jax
+
+
+class ResidentBitmapArena:
+    """Persistent device copy of one workspace chunk's packed bitmaps."""
+
+    def __init__(self, bits_u32: np.ndarray, alive: np.ndarray, *,
+                 top_j: int = 16, mesh=None, use_kernel=None,
+                 interpret=None, counter=TRANSFER):
+        jax = _jax()
+        from repro.kernels.common import (default_interpret,
+                                          default_use_kernel, pow2)
+
+        B, G, W = bits_u32.shape
+        self.counter = counter
+        self.G = int(G)
+        self.J = max(1, min(int(top_j), G - 1))
+        self.use_kernel = (default_use_kernel() if use_kernel is None
+                           else bool(use_kernel))
+        self.interpret = (default_interpret() if interpret is None
+                          else bool(interpret))
+        if mesh is not None:
+            from repro.launch.mesh import dp_axes_of
+            axes = dp_axes_of(mesh)
+            n_shards = int(np.prod([mesh.shape[a] for a in axes]))
+            if n_shards <= 1:  # a 1-device mesh shards nothing: skip the
+                mesh = None    # shard_map layer, compile the plain jit
+        if mesh is not None:
+            self.axes = axes
+        else:
+            self.axes = ("data",)
+            n_shards = 1
+        self.mesh = mesh
+        # pad W to a pow2 and B to a pow2 multiple of the shard count so the
+        # per-shape jit caches stay small; padded rows are dead and all-zero
+        self.B = int(B)
+        self.Bp = n_shards * pow2(-(-B // n_shards), floor=1)
+        self.Wp = pow2(int(W), floor=2)
+        bits_p = np.zeros((self.Bp, G, self.Wp), dtype=np.uint32)
+        bits_p[:B, :, :W] = bits_u32
+        alive_p = np.zeros((self.Bp, G), dtype=np.int8)  # 1 byte/row on the wire
+        alive_p[:B] = np.asarray(alive, dtype=bool)
+        self._put = self._sharder(jax)
+        self._bits = self._put(bits_p)
+        self._alive = self._put(alive_p)
+        counter.add_h2d(bits_p.nbytes + alive_p.nbytes)
+        self.rounds = 0
+
+    @classmethod
+    def from_workspace(cls, ws, *, top_j: int = 16, mesh=None,
+                       use_kernel=None, interpret=None, counter=TRANSFER):
+        """Upload a `BatchedGroupWorkspace` chunk's bitmaps (uint32 view of
+        its uint64 words — bit positions follow the uint32 layout)."""
+        bits = ws.bits.view(np.uint32)
+        return cls(bits, ws.alive, top_j=top_j, mesh=mesh,
+                   use_kernel=use_kernel, interpret=interpret,
+                   counter=counter)
+
+    # ------------------------------------------------------------- plumbing
+    def _sharder(self, jax):
+        if self.mesh is None:
+            import jax.numpy as jnp
+            return jnp.asarray
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        spec = P(self.axes if len(self.axes) > 1 else self.axes[0])
+        sh = NamedSharding(self.mesh, spec)
+        return lambda arr: jax.device_put(arr, sh)
+
+    def _replicate(self, arr):
+        if self.mesh is None:
+            import jax.numpy as jnp
+            return jnp.asarray(arr)
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        return jax.device_put(arr, NamedSharding(self.mesh, P()))
+
+    # ------------------------------------------------------------ round ops
+    def topj_rows(self, rb: np.ndarray, rr: np.ndarray) -> np.ndarray:
+        """Ranked top-J candidate columns of rows (rb[i], rr[i]) — one fused
+        device ranking over the resident bitmaps; (n, J) int64 comes back."""
+        from repro.kernels.bitset_fold.ops import topj_fn
+        from repro.kernels.common import pow2
+
+        n = rb.size
+        # floor 64 keeps the per-shape jit cache tiny: late rounds all land
+        # on one shape, and 64 padded rows cost ~J·64 wasted bytes at most
+        n_pad = pow2(n, floor=64)
+        rows = np.zeros((n_pad, 2), dtype=np.int32)
+        rows[:n, 0] = rb
+        rows[:n, 1] = rr
+        fn = topj_fn(self.Bp, self.G, self.Wp, self.J, n_pad,
+                     use_kernel=self.use_kernel, interpret=self.interpret,
+                     mesh=self.mesh, axes=self.axes)
+        self.counter.add_h2d(rows.nbytes)
+        out = np.asarray(fn(self._bits, self._alive, self._replicate(rows)))
+        self.counter.add_d2h(out.nbytes)
+        self.counter.tick_round()
+        self.rounds += 1
+        return out[:n].astype(np.int64)
+
+    def fold(self, b: np.ndarray, a: np.ndarray, z: np.ndarray,
+             ca: np.ndarray, cz: np.ndarray):
+        """Fold one round's accepted pairs (rows z into rows a of groups b,
+        member columns ca/cz) into the resident bitmaps, in place."""
+        from repro.kernels.bitset_fold.ops import fold_fn
+        from repro.kernels.common import pow2
+
+        m = b.size
+        if m == 0:
+            return
+        # slot of each pair within its group (b arrives sorted ascending)
+        head = np.concatenate([[True], b[1:] != b[:-1]])
+        starts = np.flatnonzero(head)
+        counts = np.diff(np.concatenate([starts, [m]]))
+        slot = np.arange(m) - np.repeat(starts, counts)
+        P_pairs = min(pow2(int(counts.max()), floor=2), max(self.G // 2, 1))
+        # int16 on the wire when it provably fits (rows < G ≤ 128; word
+        # indices < Wp ≤ 2^13); a wide column universe widens to int32
+        # instead of truncating — the device casts to int32 either way
+        dtype = np.int16 if self.Wp <= (1 << 13) else np.int32
+        instr = np.zeros((self.Bp, P_pairs, 8), dtype=dtype)
+        instr[b, slot, 0] = a
+        instr[b, slot, 1] = z
+        instr[b, slot, 2] = ca >> 5
+        instr[b, slot, 3] = ca & 31
+        instr[b, slot, 4] = cz >> 5
+        instr[b, slot, 5] = cz & 31
+        instr[b, slot, 6] = 1
+        fn = fold_fn(self.Bp, self.G, self.Wp, P_pairs,
+                     use_kernel=self.use_kernel, interpret=self.interpret,
+                     mesh=self.mesh, axes=self.axes)
+        self.counter.add_h2d(instr.nbytes)
+        self._bits, self._alive = fn(self._bits, self._alive,
+                                     self._put(instr))
+
+    # --------------------------------------------------- sync-back contract
+    def sync_rows(self, b: np.ndarray, g: np.ndarray) -> np.ndarray:
+        """Download selected (dirty) bitmap rows — (n, Wp) uint32. The
+        verification hook of DESIGN.md §9: callers compare these against the
+        host fold; the engine itself never needs them (Savings run on the
+        host-resident count tensors)."""
+        rows = np.asarray(self._bits)[np.asarray(b), np.asarray(g)]
+        self.counter.add_d2h(rows.nbytes)
+        return rows
+
+    def host_bits(self) -> np.ndarray:
+        """Full (B, G, Wp) download (tests/debug only — counts as d2h)."""
+        out = np.asarray(self._bits)[: self.B]
+        self.counter.add_d2h(out.nbytes)
+        return out
+
+    def host_alive(self) -> np.ndarray:
+        out = np.asarray(self._alive)[: self.B] > 0
+        self.counter.add_d2h(out.nbytes)
+        return out

@@ -13,10 +13,17 @@ Pipeline, exactly as the paper's:
 Losslessness is structural: the emission DP re-encodes the *input* edges
 exactly, so any merge forest — however heuristic — yields an exact summary.
 
-Merging runs on one of three engines selected by ``backend=`` (DESIGN.md §3):
-  * ``"numpy"``  — batched group-merge engine, NumPy popcount Jaccard (default)
-  * ``"batched"`` — batched engine dispatching the Pallas bitset-Jaccard
-    kernel over size-bucketed ``(B, G, W)`` bitmap batches
+Merging runs on one of four engines selected by ``backend=`` (DESIGN.md
+§3/§9):
+  * ``"numpy"``  — batched group-merge engine, NumPy popcount ranking
+    (default)
+  * ``"batched"`` — batched engine dispatching the Pallas bitset
+    intersection kernel over size-bucketed ``(B, G, W)`` bitmap batches
+    (per merge round; mesh-sharded when devices allow)
+  * ``"resident"`` — device-resident merge rounds: bitmaps upload once per
+    workspace chunk, ranking is the fused on-device top-J, merges fold the
+    resident bitmaps in place (`core/resident.py`); bit-identical to
+    ``"numpy"``/``"batched"``
   * ``"loop"``   — the original per-group Python loop (kept as the benchmark
     baseline and as a semantics reference)
 """

@@ -1,0 +1,57 @@
+"""Host↔device transfer accounting for the merge-round device paths.
+
+The resident merge-round work (DESIGN.md §9) is justified by a transfer
+model, so the model is *measured*, not asserted: every dispatch that moves
+bytes across the host↔device boundary in the merge hot path — the mesh
+intersection dispatch, the single-device batched ops, and the
+`ResidentBitmapArena` upload/top-J/fold cycle — reports into the module
+`GLOBAL` counter. A "round" is one device exchange cycle: one ranking
+round-trip (a full-matrix intersection dispatch on the batched path, one
+fused top-J call on the resident path). `benchmarks/scalability.py
+--resident` gates the resident backend's bytes-per-round reduction on these
+numbers (``BENCH_resident.json``).
+
+On a single-host CPU backend the "transfer" is a memcpy rather than PCIe,
+but the byte counts are exactly what a TPU deployment would ship, which is
+what the model predicts and the benchmark gates.
+"""
+from __future__ import annotations
+
+
+class TransferCounter:
+    """Byte/round tallies for one device path (monotonic; snapshot+delta)."""
+
+    __slots__ = ("bytes_h2d", "bytes_d2h", "rounds")
+
+    def __init__(self):
+        self.reset()
+
+    def reset(self):
+        self.bytes_h2d = 0
+        self.bytes_d2h = 0
+        self.rounds = 0
+
+    def add_h2d(self, nbytes: int):
+        self.bytes_h2d += int(nbytes)
+
+    def add_d2h(self, nbytes: int):
+        self.bytes_d2h += int(nbytes)
+
+    def tick_round(self):
+        """One device exchange cycle (ranking round-trip) completed."""
+        self.rounds += 1
+
+    def snapshot(self) -> dict:
+        return {"bytes_h2d": self.bytes_h2d, "bytes_d2h": self.bytes_d2h,
+                "rounds": self.rounds}
+
+    def delta_since(self, snap: dict) -> dict:
+        """Totals accumulated since ``snap``, plus the bytes/round ratio."""
+        d = {k: getattr(self, k) - snap[k] for k in snap}
+        total = d["bytes_h2d"] + d["bytes_d2h"]
+        d["bytes_total"] = total
+        d["bytes_per_round"] = total / d["rounds"] if d["rounds"] else 0.0
+        return d
+
+
+GLOBAL = TransferCounter()

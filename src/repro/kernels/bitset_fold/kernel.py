@@ -1,0 +1,157 @@
+"""Pallas TPU kernels for device-resident merge rounds (DESIGN.md §9).
+
+Two kernels over one group's packed (G, W) uint32 neighbor bitmaps:
+
+* `jaccard_topj_kernel` — the fused ranking step: streams the W axis
+  through VMEM accumulating pairwise SWAR intersection popcounts into a
+  (G, G) scratch, then — on the last W block — turns them into quantized
+  integer Jaccard keys and reduces to each row's ranked top-J candidate
+  columns ON DEVICE. The host receives (G, J) instead of a (G, G) score
+  matrix; the ranking order (key desc, column asc, dead/self last) is
+  bit-identical to the host sweep's stable argsort (see `ref.py`).
+* `bitset_fold_kernel` — the bitset-OR merge fold: applies one round's
+  accepted pairs to the resident bitmaps in place (input/output aliased, so
+  under jit donation nothing round-trips to host). Pairs are sequential in
+  a fori_loop: their rows are disjoint, but member columns of different
+  pairs may share a 32-bit word.
+
+Both kernels hold a whole group block in VMEM — the merge engine caps
+groups at G ≤ 128 members and chunks column universes by a memory budget,
+so (G, W) and (G, G) blocks are a few hundred KB at most.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.bitset_fold import ref
+
+
+def _popcount(x):
+    x = x - ((x >> np.uint32(1)) & np.uint32(0x55555555))
+    x = (x & np.uint32(0x33333333)) + ((x >> np.uint32(2)) & np.uint32(0x33333333))
+    x = (x + (x >> np.uint32(4))) & np.uint32(0x0F0F0F0F)
+    return ((x * np.uint32(0x01010101)) >> np.uint32(24)).astype(jnp.int32)
+
+
+def _topj_block(alive_ref, bits_ref, out_ref, inter_ref, *, w_total: int,
+                J: int):
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _init():
+        inter_ref[...] = jnp.zeros_like(inter_ref)
+
+    a = bits_ref[...]  # (G, BW)
+    bw = a.shape[1]
+    word = k * bw + jax.lax.broadcasted_iota(jnp.int32, a.shape, 1)
+    a = jnp.where(word < w_total, a, jnp.uint32(0))
+    inter_ref[...] += _popcount(a[:, None, :] & a[None, :, :]).sum(axis=-1)
+
+    @pl.when(k == pl.num_programs(0) - 1)
+    def _reduce():
+        inter = inter_ref[...]
+        G = inter.shape[0]
+        deg = jnp.diagonal(inter)  # popcount(x & x) = |x|
+        # the bit-identity-critical key arithmetic has ONE jnp home
+        # (ref.rank_keys / ref.combined_key, pure elementwise, traceable
+        # inside the kernel body); only top-k selection differs — unique
+        # combined keys make iterative argmax here and lax.top_k in the
+        # jnp twin rank identically with no tie rule anywhere
+        key = ref.rank_keys(inter, deg[:, None], deg[None, :])
+        col = jax.lax.broadcasted_iota(jnp.int32, (G, G), 1)
+        row = jax.lax.broadcasted_iota(jnp.int32, (G, G), 0)
+        ok = (alive_ref[...][:, 0] > 0)[None, :] & (col != row)
+        ckey = ref.combined_key(key, ok, col, G)
+        for j in range(J):
+            idx = jnp.argmax(ckey, axis=1).astype(jnp.int32)
+            out_ref[:, j] = idx
+            ckey = jnp.where(col == idx[:, None], jnp.int32(-(2**31) + 1),
+                             ckey)
+
+
+def jaccard_topj_kernel(bits: jax.Array, alive: jax.Array, J: int,
+                        block_w: int = 512, interpret: bool = True
+                        ) -> jax.Array:
+    """bits (G, W) uint32, alive (G, 1) int8/int32 -> (G, J) int32 ranked
+    candidate columns (quantized-Jaccard desc, column asc, dead/self last).
+    """
+    G, W = bits.shape
+    bw = min(block_w, W)
+    grid = (pl.cdiv(W, bw),)
+    return pl.pallas_call(
+        functools.partial(_topj_block, w_total=W, J=J),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((G, 1), lambda k: (0, 0)),
+            pl.BlockSpec((G, bw), lambda k: (0, k)),
+        ],
+        out_specs=pl.BlockSpec((G, J), lambda k: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((G, J), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((G, G), jnp.int32)],
+        interpret=interpret,
+    )(alive, bits)
+
+
+def _fold_block(instr_ref, bits_ref, alive_ref, obits_ref, oalive_ref, *,
+                P: int):
+    obits_ref[...] = bits_ref[...]
+    oalive_ref[...] = alive_ref[...]
+    one = jnp.uint32(1)
+
+    def body(p, _):
+        @pl.when(instr_ref[p, 6] > 0)
+        def _pair():
+            ar, zr = instr_ref[p, 0], instr_ref[p, 1]
+            wa, wz = instr_ref[p, 2], instr_ref[p, 4]
+            ba = instr_ref[p, 3].astype(jnp.uint32)
+            bz = instr_ref[p, 5].astype(jnp.uint32)
+            # fold member column cz into ca for every row …
+            colz = (obits_ref[:, wz] >> bz) & one
+            obits_ref[:, wa] = obits_ref[:, wa] | (colz << ba)
+            obits_ref[:, wz] = obits_ref[:, wz] & ~(one << bz)
+            # … then OR row z into row a and retire z
+            rowz = obits_ref[zr, :]
+            obits_ref[ar, :] = obits_ref[ar, :] | rowz
+            obits_ref[zr, :] = jnp.zeros_like(rowz)
+            obits_ref[ar, wa] = obits_ref[ar, wa] & ~(one << ba)
+            oalive_ref[zr, 0] = jnp.int8(0)
+        return 0
+
+    jax.lax.fori_loop(0, P, body, 0)
+
+
+def bitset_fold_kernel(bits: jax.Array, alive: jax.Array, instr: jax.Array,
+                       interpret: bool = True):
+    """Apply one round's merge pairs in place.
+
+    bits (G, W) uint32, alive (G, 1) int8, instr (P, 8) int32 rows
+    ``[a_row, z_row, wa, ba, wz, bz, valid, _]``. Returns (bits', alive'),
+    aliased onto the inputs — with jit donation the resident buffers update
+    without any host round-trip.
+    """
+    G, W = bits.shape
+    P = instr.shape[0]
+    return pl.pallas_call(
+        functools.partial(_fold_block, P=P),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((G, W), lambda: (0, 0)),
+            pl.BlockSpec((G, 1), lambda: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((G, W), lambda: (0, 0)),
+            pl.BlockSpec((G, 1), lambda: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((G, W), jnp.uint32),
+            jax.ShapeDtypeStruct((G, 1), jnp.int8),
+        ],
+        input_output_aliases={1: 0, 2: 1},
+        interpret=interpret,
+    )(instr, bits, alive)

@@ -1,0 +1,106 @@
+"""Jit-cached dispatches for the resident merge-round device ops.
+
+`ResidentBitmapArena` (core/resident.py) calls two functions per round:
+
+* `topj_fn` — the fused ranking: all groups' (B, G, J) ranked top-J
+  candidate columns from the RESIDENT bitmaps, then a device-side gather of
+  the dirty rows, downloaded as (n, J) int8 — the only per-round score
+  traffic.
+* `fold_fn` — the bitset-OR fold: applies the round's accepted pairs to the
+  resident bitmaps. Both positional buffers are donated, so the update is
+  in place (the Pallas kernel additionally aliases input→output).
+
+Dispatch picks the Pallas kernels on TPU and their integer-exact jnp twins
+(`ref.py`) elsewhere (`kernels/common.default_use_kernel`); either path is
+bit-identical (test-enforced). With a mesh, the batch axis is shard_map'd
+over the data axes exactly like the PR-4 intersection dispatch. Compiled
+executables live in small LRU caches keyed on padded shapes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels.bitset_fold import ref
+from repro.kernels.bitset_fold.kernel import (bitset_fold_kernel,
+                                              jaccard_topj_kernel)
+from repro.kernels.common import LruCache, mesh_content_key, shard_map_no_check
+
+_TOPJ_CACHE = LruCache(16)
+_FOLD_CACHE = LruCache(16)
+
+
+def _shard(fn, mesh, axes, n_in, n_out):
+    spec = P(axes if len(axes) > 1 else axes[0])
+    return shard_map_no_check(
+        fn, mesh, (spec,) * n_in,
+        (spec,) * n_out if n_out > 1 else spec)
+
+
+def topj_fn(B: int, G: int, W: int, J: int, n_pad: int, *, use_kernel: bool,
+            interpret: bool, mesh=None, axes=("data",)):
+    """Compiled ``(bits (B,G,W) u32, alive (B,G) i32, rows (n_pad,2) i32)
+    -> (n_pad, J) int8`` ranked-candidate gather, LRU-cached on shapes."""
+    key = ("topj", B, G, W, J, n_pad, use_kernel, interpret, mesh_content_key(mesh))
+    fn = _TOPJ_CACHE.get(key)
+    if fn is not None:
+        return fn
+
+    if use_kernel or mesh is not None:
+        # all-groups compute (vmap/shard-friendly), dirty rows gathered on
+        # device so only (n, J) crosses the boundary
+        if use_kernel:
+            def all_topj(bits, alive):
+                return jax.vmap(
+                    lambda bb, aa: jaccard_topj_kernel(bb, aa[:, None], J,
+                                                       interpret=interpret)
+                )(bits, alive)
+        else:
+            all_topj = functools.partial(ref.topj_all, J=J)
+        ranked = (_shard(all_topj, mesh, axes, 2, 1) if mesh is not None
+                  else all_topj)
+
+        @jax.jit
+        def fn(bits, alive, rows):
+            t = ranked(bits, alive)                # (B, G, J) int32
+            return t[rows[:, 0], rows[:, 1]].astype(jnp.int8)
+    else:
+        # single-device jnp twin: compute the selected rows only — integer-
+        # identical to the gather above, O(n·G·W) instead of O(B·G²·W)
+        @jax.jit
+        def fn(bits, alive, rows):
+            return ref.topj_rows(bits, alive, rows, J).astype(jnp.int8)
+
+    _TOPJ_CACHE[key] = fn
+    return fn
+
+
+def fold_fn(B: int, G: int, W: int, P_pairs: int, *, use_kernel: bool,
+            interpret: bool, mesh=None, axes=("data",)):
+    """Compiled ``(bits, alive, instr (B,P,8) i32) -> (bits', alive')`` with
+    bits/alive donated — the resident buffers fold in place."""
+    key = ("fold", B, G, W, P_pairs, use_kernel, interpret, mesh_content_key(mesh))
+    fn = _FOLD_CACHE.get(key)
+    if fn is not None:
+        return fn
+
+    if use_kernel:
+        def one(bits_g, alive_g, instr_g):
+            b2, a2 = bitset_fold_kernel(bits_g, alive_g[:, None], instr_g,
+                                        interpret=interpret)
+            return b2, a2[:, 0]
+    else:
+        one = ref.fold_pairs
+    v = jax.vmap(one)
+    folded = _shard(v, mesh, axes, 3, 2) if mesh is not None else v
+
+    def widened(bits, alive, instr):
+        # instr crosses the wire as int16; index arithmetic wants int32
+        return folded(bits, alive, instr.astype(jnp.int32))
+
+    fn = jax.jit(widened, donate_argnums=(0, 1))
+    _FOLD_CACHE[key] = fn
+    return fn

@@ -1,0 +1,152 @@
+"""jnp twins for the resident merge-round kernels (bitset_fold).
+
+Everything here is INTEGER-EXACT and must stay in bit-for-bit lockstep with
+three other implementations: the Pallas kernels in `kernel.py`, the NumPy
+host ranking in `core/merging.py` (`rank_keys` / the per-round argsort), and
+the host bitmap fold in `BatchedGroupWorkspace.apply_merges`. The merge
+engine's cross-backend bit-identity rests on that agreement (DESIGN.md §9),
+so these functions avoid floating point entirely:
+
+* ``rank_keys`` — the quantized-Jaccard ranking key: shift intersection and
+  union down together until the union fits 15 bits, then take the exact
+  integer quotient ``(iq << 15) // uq``. Pure int32-safe arithmetic, so the
+  key is identical on NumPy, XLA CPU, and TPU (no float division whose
+  rounding could differ across backends).
+* ``topj_all`` — per-row ranked top-J candidate columns by (key desc,
+  column asc), dead/self columns last; J iterative argmax passes over a
+  combined key that encodes the column tie-break, so there are never ties.
+* ``fold_pairs`` — the bitset-OR merge fold: per accepted pair, fold column
+  cz into ca for every row, OR row z into row a, clear z, clear a's own
+  bit. Sequential over the (disjoint) pairs of a group, exactly like the
+  kernel's fori_loop.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bitset_jaccard.ref import popcount_u32 as _swar_popcount
+
+_KEY_BITS = 15
+
+if hasattr(jnp, "bitwise_count"):  # native popcnt lowering (jax ≥ 0.4.27)
+    def popcount_u32(x):
+        return jnp.bitwise_count(x).astype(jnp.int32)
+else:  # pragma: no cover - old jax
+    popcount_u32 = _swar_popcount  # quantized keys live in [0, 2^15]; (key+1)*G fits int32
+
+
+def bit_length(v):
+    """Elementwise bit length of non-negative int32/int64 (< 2^31) values —
+    the 5-step binary search is identical in NumPy and jnp."""
+    b = jnp.zeros_like(v)
+    for s in (16, 8, 4, 2, 1):
+        t = v >> s
+        big = t > 0
+        b = b + jnp.where(big, s, 0)
+        v = jnp.where(big, t, v)
+    return b + (v > 0).astype(v.dtype)
+
+
+def rank_keys(inter, deg_r, deg_c):
+    """Quantized-Jaccard integer ranking keys (DESIGN.md §9).
+
+    ``inter`` intersection counts, ``deg_r``/``deg_c`` the two rows' set
+    sizes (broadcastable). Returns keys in ``[0, 2^15]`` that order exactly
+    like ``inter/union`` up to the 15-bit quantization, computed with shift
+    and integer-divide only.
+    """
+    inter = inter.astype(jnp.int32)
+    union = deg_r.astype(jnp.int32) + deg_c.astype(jnp.int32) - inter
+    sh = jnp.maximum(0, bit_length(union) - _KEY_BITS)
+    return ((inter >> sh) << _KEY_BITS) // jnp.maximum(union >> sh, 1)
+
+
+def combined_key(keys, ok, col, G: int):
+    """Strict total order encoding: ``(key+1)*G - 1 - col`` for eligible
+    columns, ``-1 - col`` for dead/self. Every entry is UNIQUE (the column
+    is folded into both branches), so any top-k — `lax.top_k`, the kernel's
+    iterative argmax, the host's stable argsort on ``-key`` — produces the
+    SAME ranking: key desc, column asc, dead/self last (in asc column
+    order, matching the stable sort over the host's uniform -1 keys)."""
+    return jnp.where(ok, (keys + 1) * G - 1 - col, -1 - col)
+
+
+def _topk_ranked(ckey, J: int):
+    """Ranked top-J columns of the (…, G) combined keys; keys are unique,
+    so top_k needs no tie rule."""
+    _, idx = jax.lax.top_k(ckey, J)
+    return idx.astype(jnp.int32)
+
+
+def topj_all(bits, alive, J: int):
+    """All rows' ranked top-J candidate columns, one group batch at a time.
+
+    ``bits`` (B, G, W) uint32 packed neighbor bitmaps, ``alive`` (B, G)
+    int8/int32/bool. Returns (B, G, J) int32 column indices, ranked by the
+    exact (quantized key desc, column asc) order with dead/self columns
+    last — the device analogue of the host sweep's per-row stable argsort
+    prefix.
+    """
+    B, G, W = bits.shape
+    inter = popcount_u32(bits[:, :, None, :] & bits[:, None, :, :]).sum(
+        axis=-1).astype(jnp.int32)                      # (B, G, G)
+    deg = jnp.diagonal(inter, axis1=1, axis2=2)         # popcount(x&x) = |x|
+    keys = rank_keys(inter, deg[:, :, None], deg[:, None, :])
+    col = jax.lax.broadcasted_iota(jnp.int32, (B, G, G), 2)
+    row = jax.lax.broadcasted_iota(jnp.int32, (B, G, G), 1)
+    ok = (alive[:, None, :] > 0) & (col != row)
+    return _topk_ranked(combined_key(keys, ok, col, G), J)
+
+
+def topj_rows(bits, alive, rows, J: int):
+    """Ranked top-J for SELECTED rows only — the single-device fast path.
+
+    ``rows`` (n, 2) int32 [group, row] pairs (padded rows compute garbage
+    the caller discards). Integer-identical to gathering those rows out of
+    `topj_all`; computing (n, G) instead of (B, G, G) intersections is what
+    makes late merge rounds (few dirty rows) cheap.
+    """
+    B, G, W = bits.shape
+    rb, rr = rows[:, 0], rows[:, 1]
+    rowbits = bits[rb, rr]                                   # (n, W)
+    inter = popcount_u32(rowbits[:, None, :] & bits[rb]).sum(
+        axis=-1).astype(jnp.int32)                           # (n, G)
+    deg = popcount_u32(bits).sum(axis=-1).astype(jnp.int32)  # (B, G)
+    keys = rank_keys(inter, deg[rb, rr][:, None], deg[rb])
+    col = jax.lax.broadcasted_iota(jnp.int32, inter.shape, 1)
+    ok = (alive[rb] > 0) & (col != rr[:, None])
+    return _topk_ranked(combined_key(keys, ok, col, G), J)
+
+
+def fold_pairs(bits, alive, instr):
+    """Apply one round's accepted merges to one group's resident bitmaps.
+
+    ``bits`` (G, W) uint32, ``alive`` (G,) int32, ``instr`` (P, 8) int32
+    rows ``[a_row, z_row, wa, ba, wz, bz, valid, _]`` (word/bit positions of
+    the a/z member columns in the uint32 layout; ``valid`` gates padding
+    rows). Pairs apply sequentially — their rows are disjoint, but two
+    pairs' member columns may share a 32-bit word, so the word updates must
+    be read-modify-write in order, exactly as the kernel's fori_loop and
+    the host fold's unbuffered ``.at`` ops.
+    """
+    one = jnp.uint32(1)
+
+    def body(p, carry):
+        b, a = carry
+        row = instr[p]
+        valid = row[6] > 0
+        ar, zr, wa, wz = row[0], row[1], row[2], row[4]
+        ba = row[3].astype(jnp.uint32)
+        bz = row[5].astype(jnp.uint32)
+        colz = (b[:, wz] >> bz) & one
+        nb = b.at[:, wa].set(b[:, wa] | (colz << ba))
+        nb = nb.at[:, wz].set(nb[:, wz] & ~(one << bz))
+        rowz = nb[zr]
+        nb = nb.at[ar].set(nb[ar] | rowz)
+        nb = nb.at[zr].set(jnp.zeros_like(rowz))
+        nb = nb.at[ar, wa].set(nb[ar, wa] & ~(one << ba))
+        na = a.at[zr].set(0)
+        return jnp.where(valid, nb, b), jnp.where(valid, na, a)
+
+    return jax.lax.fori_loop(0, instr.shape[0], body, (bits, alive))

@@ -15,6 +15,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _popcount(x):
@@ -59,3 +60,44 @@ def pairwise_intersection_kernel(bits: jax.Array,
         out_shape=jax.ShapeDtypeStruct((G, G), jnp.int32),
         interpret=interpret,
     )(bits, bits)
+
+
+def _masked_batch_block(valid_ref, bits_ref, out_ref, *, w_total: int):
+    b = pl.program_id(0)
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    # batch rows at/after the valid count are PADDING (the dispatch pads B
+    # to a pow2 multiple of the shard count so the jit cache stays small):
+    # they skip the O(G²·W) popcount entirely — padding costs transfer only
+    @pl.when(b < valid_ref[0])
+    def _accumulate():
+        a = bits_ref[0]  # (G, BW)
+        bw = a.shape[1]
+        col = k * bw + jax.lax.broadcasted_iota(jnp.int32, a.shape, 1)
+        a = jnp.where(col < w_total, a, jnp.uint32(0))
+        out_ref[0] += _popcount(a[:, None, :] & a[None, :, :]).sum(axis=-1)
+
+
+def batch_masked_intersection_kernel(bits: jax.Array, valid: jax.Array,
+                                     block_w: int = 128,
+                                     interpret: bool = True) -> jax.Array:
+    """bits (B, G, W) uint32, valid (1,) int32 -> (B, G, G) int32 pairwise
+    intersection popcounts; batch rows ≥ valid early-exit to zeros."""
+    B, G, W = bits.shape
+    bw = min(block_w, W)
+    grid = (B, pl.cdiv(W, bw))
+    return pl.pallas_call(
+        functools.partial(_masked_batch_block, w_total=W),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, G, bw), lambda b, k: (b, 0, k)),
+        ],
+        out_specs=pl.BlockSpec((1, G, G), lambda b, k: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, G, G), jnp.int32),
+        interpret=interpret,
+    )(valid, bits)

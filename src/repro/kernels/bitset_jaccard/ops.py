@@ -1,12 +1,17 @@
 """Jit'd public wrappers: pack neighbor sets and score candidate groups.
 
-`batched_pairwise_jaccard` is the merge engine's entry point: a size bucket
-of groups arrives as a list of (k_i, W_i) uint32 bitmaps, gets zero-padded
-into (B, G, W) tiles (G, W rounded to powers of two so the jit cache stays
-small), and all pairwise intersection popcounts come back from ONE vmap'd
-`pairwise_intersection_kernel` dispatch per tile. Padded rows are all-zero,
-so they never perturb real intersections; per-group degrees are read off the
-diagonal (popcount(x & x) = |x|).
+`batched_pairwise_intersections` is the merge engine's entry point: a size
+bucket of groups arrives as one (B, G, W) uint32 bitmap batch, gets zero-
+padded into fixed tiles (tile count and W rounded to powers of two so the
+jit cache stays small), and all pairwise intersection popcounts come back
+from ONE dispatch of `batch_masked_intersection_kernel` per tile. The tile
+padding is TRANSFER-ONLY: the kernel receives the valid batch count and
+padded rows early-exit before the O(G²·W) popcount (ISSUE 5). Per-group
+degrees are read off the diagonal (popcount(x & x) = |x|). Every
+dispatch reports its h2d/d2h bytes and ticks a ranking round on
+`core.transfer.GLOBAL`. The merge engine ranks on integer keys
+(`core/merging.rank_keys`); `group_jaccard` keeps the float similarity
+view for direct per-group scoring.
 """
 from __future__ import annotations
 
@@ -14,9 +19,11 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core.transfer import GLOBAL as TRANSFER
 from repro.kernels.bitset_jaccard import ref
-from repro.kernels.bitset_jaccard.kernel import pairwise_intersection_kernel
-from repro.kernels.common import default_interpret, pow2
+from repro.kernels.bitset_jaccard.kernel import (
+    batch_masked_intersection_kernel, pairwise_intersection_kernel)
+from repro.kernels.common import LruCache, default_interpret, pow2
 
 
 def pack_bitsets(sets: list, universe: int) -> np.ndarray:
@@ -45,42 +52,44 @@ def group_jaccard(bits, use_kernel: bool = True, interpret: bool = True):
 # ---------------------------------------------------------------------------
 # Batched dispatch for the merge engine
 # ---------------------------------------------------------------------------
-_BATCH_JIT_CACHE: dict = {}
+_BATCH_JIT_CACHE = LruCache(16)
 
 
 def _batched_intersection_fn(B: int, G: int, W: int, interpret: bool):
     key = (B, G, W, interpret)
     fn = _BATCH_JIT_CACHE.get(key)
     if fn is None:
-        fn = jax.jit(jax.vmap(
-            lambda b: pairwise_intersection_kernel(b, interpret=interpret)
-        ))
+        fn = jax.jit(
+            lambda b, v: batch_masked_intersection_kernel(
+                b, v, interpret=interpret))
         _BATCH_JIT_CACHE[key] = fn
     return fn
 
 
-def batched_pairwise_jaccard(bits: np.ndarray, tile_b: int = 64,
-                             interpret=None) -> np.ndarray:
-    """All-pairs Jaccard for a size-bucketed batch of groups.
+def batched_pairwise_intersections(bits: np.ndarray, tile_b: int = 64,
+                                   interpret=None) -> np.ndarray:
+    """All-pairs intersection popcounts for a size-bucketed group batch.
 
     ``bits``: (B, G, W) uint32 bitmaps — one padded group per batch row.
-    Returns (B, G, G) float64; padded (all-zero) rows score 0 everywhere.
-    W is rounded up to a power of two so the jit cache stays small; B is
-    processed in fixed ``tile_b`` tiles for the same reason.
+    Returns (B, G, G) int64. W is rounded up to a power of two and B is
+    processed in fixed ``tile_b`` tiles so the jit cache stays small; tile
+    rows beyond the real batch are masked out inside the kernel, so the
+    padding moves bytes but does no kernel work.
     """
     if interpret is None:
         interpret = default_interpret()
     B, G, W = bits.shape
     Wp = pow2(W)
-    out = np.empty((B, G, G), dtype=np.float64)
+    out = np.empty((B, G, G), dtype=np.int64)
     for t0 in range(0, B, tile_b):
         nb = min(tile_b, B - t0)
         batch = np.zeros((tile_b, G, Wp), dtype=np.uint32)
         batch[:nb, :, :W] = bits[t0 : t0 + nb]
         fn = _batched_intersection_fn(tile_b, G, Wp, interpret)
-        inter = np.asarray(fn(batch)).astype(np.int64)  # (tile_b, G, G)
-        deg = np.diagonal(inter, axis1=1, axis2=2)      # popcount(x & x) = |x|
-        union = deg[:, :, None] + deg[:, None, :] - inter
-        out[t0 : t0 + nb] = np.where(
-            union > 0, inter / np.maximum(union, 1), 0.0)[:nb]
+        valid = np.array([nb], dtype=np.int32)
+        TRANSFER.add_h2d(batch.nbytes + valid.nbytes)
+        inter = np.asarray(fn(batch, valid))        # (tile_b, G, G) int32
+        TRANSFER.add_d2h(inter.nbytes)
+        TRANSFER.tick_round()
+        out[t0 : t0 + nb] = inter[:nb].astype(np.int64)
     return out

@@ -5,7 +5,7 @@ level: given each active subedge's pair-state id, return the number of
 subedges per state (the DP compares these against the interval products to
 classify states full/empty/mixed). ``backend="batched"`` routes through the
 Pallas one-hot histogram kernel with a small jit cache keyed on padded
-shapes, mirroring `kernels/bitset_jaccard/ops.batched_pairwise_jaccard`;
+shapes, mirroring `kernels/bitset_jaccard/ops.batched_pairwise_intersections`;
 ``backend="numpy"`` is a plain ``np.bincount``.
 """
 from __future__ import annotations

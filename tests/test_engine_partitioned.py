@@ -21,7 +21,7 @@ from repro.core.pruning import prune
 from repro.graphs import Graph, PartitionedGraph, block_owner
 from repro.graphs import generators as GG
 
-BACKENDS = ("numpy", "batched", "loop")
+BACKENDS = ("numpy", "batched", "loop", "resident")
 
 
 def _graphs():
@@ -215,6 +215,9 @@ MESH_EQUIV = textwrap.dedent("""
     mesh = make_host_mesh(data=8)
     runs = [SummarizerEngine(partitions=k, backend="batched", T=4, seed=2,
                              mesh=mesh).run(g) for k in (1, 2, 4)]
+    # resident arenas shard over the same mesh; decisions must not move
+    runs += [SummarizerEngine(partitions=k, backend="resident", T=4, seed=2,
+                              mesh=mesh).run(g) for k in (1, 2)]
     assert runs[0].validate_lossless(g)
     for s in runs[1:]:
         assert np.array_equal(runs[0].parent, s.parent)

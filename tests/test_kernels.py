@@ -5,9 +5,14 @@ import jax.numpy as jnp
 import pytest
 
 from repro.graphs import generators as GG
+from repro.kernels.bitset_fold import ref as fref
+from repro.kernels.bitset_fold.kernel import (bitset_fold_kernel,
+                                              jaccard_topj_kernel)
 from repro.kernels.bitset_jaccard import ops as jops
 from repro.kernels.bitset_jaccard import ref as jref
-from repro.kernels.bitset_jaccard.kernel import pairwise_intersection_kernel
+from repro.kernels.bitset_jaccard.kernel import (
+    batch_masked_intersection_kernel, pairwise_intersection_kernel)
+from repro.kernels.common import LruCache
 from repro.kernels.interval_expand import ref as iref
 from repro.kernels.interval_expand.kernel import interval_count_kernel
 from repro.kernels.minhash import ops as mops
@@ -90,6 +95,174 @@ def test_interval_count_kernel_block_shapes(block_p, block_e):
                                 interpret=True)
     want = iref.interval_counts(lo, hi, sg, pos)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# -- batch-masked intersections (mesh padding early-exit) --------------------
+@pytest.mark.parametrize("B,valid,G,W", [(4, 4, 8, 4), (8, 3, 16, 10),
+                                         (2, 0, 8, 1)])
+def test_batch_masked_intersection_kernel(B, valid, G, W):
+    rng = np.random.default_rng(B * G + W)
+    bits = rng.integers(0, 1 << 32, size=(B, G, W),
+                        dtype=np.uint64).astype(np.uint32)
+    got = np.asarray(batch_masked_intersection_kernel(
+        jnp.asarray(bits), jnp.asarray(np.array([valid], np.int32)),
+        interpret=True))
+    for b in range(B):
+        if b < valid:
+            want = np.asarray(jref.pairwise_intersection(jnp.asarray(bits[b])))
+        else:  # padded rows early-exit to zeros — padding is transfer-only
+            want = np.zeros((G, G), dtype=np.int32)
+        np.testing.assert_array_equal(got[b], want)
+
+
+# -- resident merge-round kernels (bitset_fold) ------------------------------
+def _np_rank_ckey(bits_u32, alive, G):
+    """NumPy oracle for the fused ranking: quantized keys + unique combined
+    key with the column folded into both branches."""
+    from repro.core.bitops import popcount
+    from repro.core.merging import rank_keys
+
+    inter = popcount(bits_u32[:, None, :] & bits_u32[None, :, :]).sum(
+        axis=-1, dtype=np.int64)
+    deg = np.diagonal(inter)
+    keys = rank_keys(inter, deg[:, None], deg[None, :])
+    col = np.broadcast_to(np.arange(G), (G, G))
+    ok = alive[None, :] & (col != np.arange(G)[:, None])
+    return np.where(ok, (keys + 1) * G - 1 - col, -1 - col)
+
+
+@pytest.mark.parametrize("G,W,J", [(8, 2, 4), (16, 10, 7), (64, 33, 16)])
+def test_topj_kernel_and_ref_match_numpy_oracle(G, W, J):
+    rng = np.random.default_rng(G * W + J)
+    bits = rng.integers(0, 1 << 32, size=(G, W),
+                        dtype=np.uint64).astype(np.uint32)
+    # duplicate rows force equal-key ties → broken by ascending column
+    bits[G // 2] = bits[0]
+    alive = rng.random(G) < 0.8
+    alive[:2] = True
+    bits[~alive] = 0
+    ckey = _np_rank_ckey(bits, alive, G)
+    want = np.argsort(-ckey, axis=1, kind="stable")[:, :J]
+    got_k = np.asarray(jaccard_topj_kernel(
+        jnp.asarray(bits), jnp.asarray(alive.astype(np.int8)[:, None]), J,
+        interpret=True))
+    got_r = np.asarray(fref.topj_all(jnp.asarray(bits[None]),
+                                     jnp.asarray(alive.astype(np.int8)[None]),
+                                     J))[0]
+    np.testing.assert_array_equal(got_k, want)
+    np.testing.assert_array_equal(got_r, want)
+
+
+def test_topj_rows_matches_topj_all_gather():
+    rng = np.random.default_rng(5)
+    B, G, W, J = 3, 16, 4, 7
+    bits = rng.integers(0, 1 << 32, size=(B, G, W),
+                        dtype=np.uint64).astype(np.uint32)
+    alive = (rng.random((B, G)) < 0.9).astype(np.int8)
+    rows = np.stack([rng.integers(0, B, 10), rng.integers(0, G, 10)],
+                    axis=1).astype(np.int32)
+    full = np.asarray(fref.topj_all(jnp.asarray(bits), jnp.asarray(alive), J))
+    sel = np.asarray(fref.topj_rows(jnp.asarray(bits), jnp.asarray(alive),
+                                    jnp.asarray(rows), J))
+    np.testing.assert_array_equal(sel, full[rows[:, 0], rows[:, 1]])
+
+
+def test_rank_keys_numpy_jnp_identical():
+    from repro.core.merging import rank_keys as np_keys
+
+    rng = np.random.default_rng(0)
+    deg_r = rng.integers(0, 1 << 22, size=257).astype(np.int64)
+    deg_c = rng.integers(0, 1 << 22, size=257).astype(np.int64)
+    inter = (np.minimum(deg_r, deg_c) * rng.random(257)).astype(np.int64)
+    inter[:8] = [0, 1, 0, 5, 0, 0, 0, 0]
+    deg_r[:4] = [0, 1, 7, 5]
+    deg_c[:4] = [0, 1, 9, 5]  # zero-union and jaccard-1 corner cases
+    want = np_keys(inter, deg_r, deg_c)
+    got = np.asarray(fref.rank_keys(jnp.asarray(inter, dtype=jnp.int32),
+                                    jnp.asarray(deg_r, dtype=jnp.int32),
+                                    jnp.asarray(deg_c, dtype=jnp.int32)))
+    np.testing.assert_array_equal(got, want.astype(np.int64))
+    assert want.max() <= 1 << 15 and want.min() >= 0
+
+
+def _np_fold(bits_u32, pairs):
+    """Host-fold oracle on the uint32 view (mirrors the
+    `BatchedGroupWorkspace.apply_merges` bitmap block)."""
+    b = bits_u32.copy()
+    one = np.uint32(1)
+    for a, z, ca, cz in pairs:
+        wa, ba = ca >> 5, np.uint32(ca & 31)
+        wz, bz = cz >> 5, np.uint32(cz & 31)
+        zbit = (b[:, wz] >> bz) & one
+        b[:, wa] |= zbit << ba
+        b[:, wz] &= ~(one << bz)
+        b[a] |= b[z]
+        b[z] = 0
+        b[a, wa] &= ~(one << ba)
+    return b
+
+
+@pytest.mark.parametrize("use_kernel", [True, False])
+def test_bitset_fold_matches_host_fold(use_kernel):
+    rng = np.random.default_rng(7)
+    G, W = 8, 3
+    bits = rng.integers(0, 1 << 32, size=(G, W),
+                        dtype=np.uint64).astype(np.uint32)
+    # two pairs whose member columns share the SAME 32-bit word (cols 3, 7,
+    # 9, 20 → words 0, 0, 0, 0) — the order-sensitivity hot spot
+    pairs = [(0, 3, 3, 9), (1, 5, 7, 20)]
+    instr = np.zeros((4, 8), dtype=np.int32)
+    for i, (a, z, ca, cz) in enumerate(pairs):
+        instr[i] = [a, z, ca >> 5, ca & 31, cz >> 5, cz & 31, 1, 0]
+    want = _np_fold(bits, pairs)
+    alive = np.ones((G,), dtype=np.int8)
+    if use_kernel:
+        got, oalive = bitset_fold_kernel(jnp.asarray(bits),
+                                         jnp.asarray(alive[:, None]),
+                                         jnp.asarray(instr), interpret=True)
+        oalive = np.asarray(oalive)[:, 0]
+    else:
+        got, oalive = fref.fold_pairs(jnp.asarray(bits), jnp.asarray(alive),
+                                      jnp.asarray(instr))
+        oalive = np.asarray(oalive)
+    np.testing.assert_array_equal(np.asarray(got), want)
+    assert not oalive[3] and not oalive[5] and oalive[0] and oalive[1]
+
+
+def test_bit_length_matches_python():
+    vals = np.array([0, 1, 2, 3, 7, 8, 32767, 32768, (1 << 22) - 1, 1 << 22],
+                    dtype=np.int64)
+    from repro.core.merging import _bit_length
+
+    want = np.array([int(v).bit_length() for v in vals])
+    np.testing.assert_array_equal(_bit_length(vals.copy()), want)
+    got = np.asarray(fref.bit_length(jnp.asarray(vals, dtype=jnp.int32)))
+    np.testing.assert_array_equal(got, want)
+
+
+# -- bounded jit caches ------------------------------------------------------
+def test_lru_cache_evicts_oldest():
+    c = LruCache(maxsize=2)
+    c["a"] = 1
+    c["b"] = 2
+    assert c.get("a") == 1  # touch: "b" is now the LRU entry
+    c["c"] = 3
+    assert "b" not in c and "a" in c and "c" in c and len(c) == 2
+    with pytest.raises(ValueError):
+        LruCache(0)
+
+
+def test_jit_caches_are_bounded():
+    from repro.core import distributed, query_batch
+    from repro.kernels.bitset_fold import ops as fold_ops
+
+    for cache in (distributed._MESH_JACCARD_CACHE,
+                  query_batch._JAX_SWEEP_CACHE,
+                  query_batch._JAX_COUNT_CACHE,
+                  jops._BATCH_JIT_CACHE,
+                  fold_ops._TOPJ_CACHE,
+                  fold_ops._FOLD_CACHE):
+        assert isinstance(cache, LruCache)
 
 
 def test_jaccard_against_python_sets():

@@ -16,7 +16,10 @@ from repro.core.slugger import SluggerState
 from repro.graphs import generators as GG
 from repro.graphs.csr import Graph
 
-BACKENDS = ("loop", "numpy", "batched")
+BACKENDS = ("loop", "numpy", "batched", "resident")
+# the batched-family backends must agree bit for bit — same ranking keys,
+# same sweeps, only the ranking/fold substrate differs (DESIGN.md §9)
+EXACT_FAMILY = ("numpy", "batched", "resident")
 
 
 def _graphs():
@@ -42,7 +45,108 @@ def test_engine_costs_close(name, g):
     assert hi <= lo * 1.25 + 8, costs
 
 
-@pytest.mark.parametrize("backend", ("numpy", "batched"))
+# -- resident-backend bit-identity (ISSUE 5) ---------------------------------
+@pytest.mark.parametrize("seed", (0, 3, 11))
+@pytest.mark.parametrize("name,g", _graphs(), ids=lambda v: v if isinstance(v, str) else "")
+def test_exact_family_bit_identical(name, g, seed):
+    """numpy / batched / resident summaries, parent ids, and edges agree bit
+    for bit — the resident backend's device rounds change WHERE the ranking
+    and fold run, never their outcome."""
+    runs = {be: summarize(g, T=5, seed=seed, backend=be)
+            for be in EXACT_FAMILY}
+    base = runs["numpy"]
+    assert base.validate_lossless(g)
+    for be in EXACT_FAMILY[1:]:
+        assert np.array_equal(base.parent, runs[be].parent), (name, be, seed)
+        assert np.array_equal(base.edges, runs[be].edges), (name, be, seed)
+
+
+def test_resident_kernel_path_bit_identical(monkeypatch):
+    """REPRO_FORCE_PALLAS=1 swaps the jnp twins for the interpret-mode
+    Pallas kernels; results must not move."""
+    g = GG.caveman(10, 6, 0.05, seed=2)
+    want = summarize(g, T=4, seed=1, backend="numpy")
+    monkeypatch.setenv("REPRO_FORCE_PALLAS", "1")
+    got = summarize(g, T=4, seed=1, backend="resident")
+    assert np.array_equal(want.parent, got.parent)
+    assert np.array_equal(want.edges, got.edges)
+
+
+def test_resident_merge_plans_identical_multi_round():
+    """A whole-clique candidate group needs SEVERAL matching rounds (one
+    conflict-free subset per round); the recorded MergePlan rounds — not
+    just the final summary — must match the host backend pair for pair."""
+    from repro.core.merging import build_merge_work
+
+    n = 24
+    g = Graph.from_edges(
+        n, np.array([(u, v) for u in range(n) for v in range(u + 1, n)]))
+    seeds = np.arange(1, dtype=np.uint64) + 7
+    plans = {}
+    for be in EXACT_FAMILY:
+        state = SluggerState(g)
+        p, thunks = build_merge_work(state, [np.arange(n)], theta=0.0,
+                                     group_seeds=seeds, backend=be)
+        for t in thunks:
+            t()
+        plans[be] = p[0]
+    assert len(plans["numpy"].rounds) > 1  # actually multi-round
+    for be in EXACT_FAMILY[1:]:
+        assert len(plans[be].rounds) == len(plans["numpy"].rounds), be
+        for (a1, z1), (a2, z2) in zip(plans["numpy"].rounds,
+                                      plans[be].rounds):
+            assert np.array_equal(a1, a2) and np.array_equal(z1, z2), be
+
+
+def test_resident_arena_fold_matches_host_and_counts_transfers():
+    """Sweep one workspace on the host ranker and a copy on the resident
+    arena: decisions agree, the device bitmaps (sync-back contract,
+    DESIGN.md §9) equal the host-folded ones, and the transfer counter saw
+    the upload / top-J / fold traffic."""
+    from repro.core.merging import (BatchedGroupWorkspace, HostRankSource,
+                                    MergePlan, ResidentRankSource)
+    from repro.core.resident import ResidentBitmapArena
+    from repro.core.transfer import TransferCounter
+
+    g = GG.caveman(6, 8, 0.05, seed=4)
+    groups = [np.arange(8) + 8 * i for i in range(6)]
+    seeds = np.arange(6, dtype=np.uint64) * 13 + 1
+
+    def build():
+        state = SluggerState(g)
+        plans = [MergePlan(gr) for gr in groups]
+        ws = BatchedGroupWorkspace.build_bucket(
+            state, groups, 8, plans=plans, group_seeds=seeds)
+        assert len(ws) == 1
+        return ws[0], plans
+
+    ws_h, plans_h = build()
+    ws_r, plans_r = build()
+    counter = TransferCounter()
+    arena = ResidentBitmapArena.from_workspace(ws_r, top_j=16,
+                                               counter=counter)
+    m_h = ws_h.sweep(0.0, HostRankSource(None))
+    m_r = ws_r.sweep(0.0, ResidentRankSource(arena))
+    assert m_h == m_r > 0
+    for ph, pr in zip(plans_h, plans_r):
+        assert len(ph.rounds) == len(pr.rounds)
+        for (a1, z1), (a2, z2) in zip(ph.rounds, pr.rounds):
+            assert np.array_equal(a1, a2) and np.array_equal(z1, z2)
+    # device bitmaps == host-folded bitmaps (the host ws_r copy is stale by
+    # design — Savings never read it; the DEVICE copy must match ws_h)
+    W32 = ws_h.bits.view(np.uint32).shape[-1]
+    dev = arena.host_bits()[:, :, :W32]
+    np.testing.assert_array_equal(dev, ws_h.bits.view(np.uint32))
+    np.testing.assert_array_equal(arena.host_alive(), ws_h.alive)
+    rows = np.argwhere(ws_h.alive)
+    sync = arena.sync_rows(rows[:, 0], rows[:, 1])[:, :W32]
+    np.testing.assert_array_equal(
+        sync, ws_h.bits.view(np.uint32)[rows[:, 0], rows[:, 1]])
+    assert counter.bytes_h2d > 0 and counter.bytes_d2h > 0
+    assert counter.rounds == arena.rounds > 0
+
+
+@pytest.mark.parametrize("backend", ("numpy", "batched", "resident"))
 def test_batched_engine_height_bound(backend):
     g = GG.caveman(12, 6, 0.05, seed=3)
     s = summarize(g, T=5, seed=1, height_bound=2, backend=backend)
