@@ -97,32 +97,60 @@ def run_partitioned(quick: bool = True, partitions=(1, 2, 4),
     return payload
 
 
-def run_resident(quick: bool = True, smoke: bool = False):
-    """Device-resident merge rounds vs the batched mesh path (ISSUE 5).
+def _steady_bytes_per_iter(transfer_iters: list) -> float:
+    """Steady-state marginal bytes per iteration: the mean over iterations
+    2..T (iteration 1 pays one-time jit/compile-adjacent uploads and the
+    run-context init — the marginal cost is what scales with T)."""
+    tail = transfer_iters[1:] or transfer_iters
+    return float(np.mean([d["bytes_total"] for d in tail])) if tail else 0.0
 
-    Both engines run the SAME config (mesh shingles, identical candidate
-    groups — merge decisions are asserted identical) on the scalability
-    bench graph; what differs is the round loop: the batched mesh path
-    ships the (B, G, W) bitmap batch to devices and pulls a dense (B, G, G)
-    intersection matrix back EVERY round, the resident backend uploads each
-    chunk's bitmaps once and exchanges only ranked top-J candidates and
-    merge plans (DESIGN.md §9).
+
+def run_resident(quick: bool = True, smoke: bool = False):
+    """Whole-iteration device residency vs the batched mesh path (ISSUE 7).
+
+    Both engines run the SAME config (unified u32 shingles — merge
+    decisions are asserted identical) on the scalability bench graph. The
+    batched mesh baseline ships the (B, G, W) bitmap batch to devices and
+    pulls a dense (B, G, G) intersection matrix back EVERY round; the
+    resident backend keeps the whole iteration device-resident: counts and
+    bitmaps live in the arena, each round exchanges a 12-byte/pair fold
+    instruction up and (K, 2) int8 verdicts down, candidate shingles
+    compute from the device-held edges + root map (phase ``candgen``), and
+    the root map advances by replaying applied merge plans (phase
+    ``carry``) — DESIGN.md §9.
 
     Protocol: two reps per engine, gate on the faster (steady state — jit
     caches warm; rep timings both land in the artifact). Bytes are
     deterministic and come from the `core.transfer` counter; a "round" is
-    one ranking round-trip. Gates (``BENCH_resident.json``):
+    one ranking round-trip, and the artifact carries the per-iteration
+    per-phase byte breakdown (upload/rank/fold/carry/candgen) from the
+    engine's ``transfer_iters`` stats.
+
+    The byte ledger is phase-honest: moving the Saving evaluation on
+    device means the exact count tensors (CNT et al.) now SHIP in the
+    per-iteration ``upload`` phase — several times PR 5's bitmap-only
+    upload — while the per-ROUND exchange collapsed to instructions up +
+    verdicts down. Eliminating the upload phase (deriving next-iteration
+    workspaces on device from the applied plans) is the bitmap-bank-carry
+    ROADMAP item; until it lands, the upload dominates total bytes and is
+    gated only against regression. Gates (``BENCH_resident.json``):
 
     * merge decisions bit-identical (always enforced),
-    * host↔device bytes/round reduced ≥ 4x (enforced in quick/full —
-      byte counts on the smoke graph are too small to be meaningful),
-    * merge phase ≥ 1.5x (enforced at the 220k-edge ``--full`` config the
+    * round-EXCHANGE bytes/round (resident rank+fold+carry+candgen vs the
+      batched path's per-round total — batched has no amortized phase, its
+      every byte is round traffic) reduced ≥ 4x (quick/full; smoke byte
+      counts are too small to be meaningful),
+    * steady-state TOTAL bytes/iteration no worse than the batched path
+      (≥ 1.0x, quick/full — holds despite the count-tensor upload),
+    * merge phase ≥ 2.5x (enforced at the 220k-edge ``--full`` config the
       acceptance criterion names; recorded elsewhere — 2-core CI runners
       are too noisy to gate wall time on the small graphs).
 
-    ``smoke`` is the CI config: a tiny graph, and typically run with
-    ``REPRO_FORCE_PALLAS=1`` so the resident path exercises the Pallas
-    kernels in interpret mode (bit-identity still enforced).
+    ``smoke`` is the CI config: a tiny graph at T=3 (≥ 3 iterations, so
+    carry-over across iterations is exercised, not just one upload), and
+    typically run with ``REPRO_FORCE_PALLAS=1`` so the resident path
+    exercises the Pallas kernels in interpret mode (bit-identity still
+    enforced).
     """
     from repro.launch.mesh import make_data_mesh
 
@@ -135,37 +163,57 @@ def run_resident(quick: bool = True, smoke: bool = False):
     mesh = make_data_mesh()
     rows, results = [], {}
     for be in ("batched", "resident"):
+        # the resident engine runs the single-device whole-iteration path
+        # (run context + propose protocol); the baseline keeps the mesh
+        # dispatch it has always used
+        eng_mesh = mesh if be == "batched" else None
         reps = []
         for _ in range(1 if smoke else 2):
             eng = SummarizerEngine(partitions=1, backend=be, T=T, seed=0,
-                                   mesh=mesh)
+                                   mesh=eng_mesh)
             reps.append(_merge_phase_secs(eng, g)
-                        | {"transfer": eng.stats["transfer"]})
+                        | {"transfer": eng.stats["transfer"],
+                           "transfer_iters": eng.stats["transfer_iters"]})
         best = min(reps, key=lambda r: r["sec"])
         results[be] = {"reps": reps, "best_sec": best["sec"],
                        "merges": best["merges"],
-                       "transfer": best["transfer"]}
+                       "transfer": best["transfer"],
+                       "transfer_iters": best["transfer_iters"],
+                       "steady_bytes_per_iter":
+                           _steady_bytes_per_iter(best["transfer_iters"])}
         tr = best["transfer"]
         rows.append([name, g.m, be, f"{best['sec']:.2f}s", best["merges"],
                      tr["rounds"], f"{tr['bytes_total']/1e6:.2f}MB",
-                     f"{tr['bytes_per_round']/1e3:.0f}KB"])
+                     f"{tr['bytes_per_round']/1e3:.0f}KB",
+                     f"{results[be]['steady_bytes_per_iter']/1e3:.0f}KB"])
     b, r = results["batched"], results["resident"]
     speedup = b["best_sec"] / r["best_sec"]
-    bytes_ratio = (b["transfer"]["bytes_per_round"]
-                   / max(r["transfer"]["bytes_per_round"], 1e-9))
+    rph = r["transfer"]["phases"]
+    exchange = sum(rph.get(k, 0) for k in ("rank", "fold", "carry", "candgen"))
+    exch_per_round = exchange / max(r["transfer"]["rounds"], 1)
+    exch_ratio = b["transfer"]["bytes_per_round"] / max(exch_per_round, 1e-9)
+    iter_ratio = (b["steady_bytes_per_iter"]
+                  / max(r["steady_bytes_per_iter"], 1e-9))
     gates = {
         "decisions_identical": b["merges"] == r["merges"],
         "speedup_vs_batched_mesh": speedup,
-        "speedup_ok": speedup >= 1.5,
-        "bytes_per_round_ratio": bytes_ratio,
-        "bytes_ok": bytes_ratio >= 4.0,
+        "speedup_ok": speedup >= 2.5,
+        "exchange_bytes_per_round": exch_per_round,
+        "exchange_bytes_per_round_ratio": exch_ratio,
+        "exchange_ok": exch_ratio >= 4.0,
+        "bytes_per_iter_ratio": iter_ratio,
+        "bytes_per_iter_ok": iter_ratio >= 1.0,
     }
-    print(f"\n== Resident merge rounds vs batched mesh path on {name} "
-          f"(T={T}) ==")
+    print(f"\n== Resident whole-iteration residency vs batched mesh path on "
+          f"{name} (T={T}) ==")
     print(fmt_table(rows, ["graph", "m", "engine", "time", "merges",
-                           "rounds", "bytes", "bytes/round"]))
-    print(f"   speedup {speedup:.2f}x (gate ≥ 1.5x at --full) · bytes/round "
-          f"{bytes_ratio:.2f}x (gate ≥ 4x)")
+                           "rounds", "bytes", "bytes/round", "bytes/iter"]))
+    print("   resident phase bytes: " + " ".join(
+        f"{k}={v/1e3:.0f}KB" for k, v in sorted(rph.items())))
+    print(f"   speedup {speedup:.2f}x (gate ≥ 2.5x at --full) · exchange "
+          f"bytes/round {exch_per_round/1e3:.0f}KB vs "
+          f"{b['transfer']['bytes_per_round']/1e3:.0f}KB = {exch_ratio:.2f}x "
+          f"(gate ≥ 4x) · total bytes/iter {iter_ratio:.2f}x (gate ≥ 1x)")
     payload = {"graph": name, "m": g.m, "T": T, "engines": results,
                "gates": gates}
     save_result("BENCH_resident", payload)
@@ -173,11 +221,15 @@ def run_resident(quick: bool = True, smoke: bool = False):
         f"resident merge decisions diverged from batched: "
         f"{b['merges']} vs {r['merges']}")
     if not smoke:
-        assert gates["bytes_ok"], (
-            f"bytes/round reduction {bytes_ratio:.2f}x below the 4x gate")
+        assert gates["exchange_ok"], (
+            f"exchange bytes/round reduction {exch_ratio:.2f}x below the "
+            f"4x gate")
+        assert gates["bytes_per_iter_ok"], (
+            f"total bytes/iteration {iter_ratio:.2f}x regressed vs the "
+            f"batched path")
     if not (smoke or quick):
         assert gates["speedup_ok"], (
-            f"resident speedup {speedup:.2f}x below the 1.5x gate")
+            f"resident speedup {speedup:.2f}x below the 2.5x gate")
     return payload
 
 

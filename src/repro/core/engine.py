@@ -126,6 +126,7 @@ class SummarizerEngine:
         self._shingle_provider = None
         self._rank_dispatch = None
         self._resident_factory = None
+        self._run_ctx = None
 
     # ------------------------------------------------------------- plumbing
     def _mesh_active(self):
@@ -148,6 +149,7 @@ class SummarizerEngine:
         self._shingle_provider = None
         self._rank_dispatch = None
         self._resident_factory = None
+        self._run_ctx = None
         mesh = self._mesh_active()
         if self.backend == "resident":
             from repro.core.resident import ResidentBitmapArena
@@ -157,6 +159,21 @@ class SummarizerEngine:
                                                           mesh=_mesh)
             self._resident_factory = factory
         if mesh is None:
+            # Single device: every backend shingles with the unified u32
+            # family so the cross-backend bit-identity contract covers
+            # candidate generation. The resident backend computes them ON
+            # DEVICE from its run context (edges uploaded once, root map
+            # advanced by plan replay); the others use the NumPy twin.
+            if self.backend == "resident":
+                try:
+                    from repro.core.resident import ResidentRunContext
+                    self._run_ctx = ResidentRunContext(g)
+                    self._shingle_provider = self._run_ctx.for_roots
+                except Exception:  # jax unavailable: host twin, same bits
+                    self._run_ctx = None
+            if self._shingle_provider is None:
+                from repro.core.minhash import host_shingle_provider
+                self._shingle_provider = host_shingle_provider(g)
             return
         from repro.core import distributed as D
         self._shingle_provider = D.shingle_provider(g, mesh)
@@ -219,8 +236,18 @@ class SummarizerEngine:
 
     def stage_exchange(self, ctx: IterationContext):
         """Replay all recorded merge rounds against the global state in
-        canonical group order — the only cross-partition communication."""
-        ctx.merges = apply_plans(ctx.state, ctx.plans)
+        canonical group order — the only cross-partition communication.
+        Under the single-device resident backend the applied (A, Z, M)
+        batches also feed the run context, which replays them against its
+        device root map (plan-driven carry — the map never re-uploads)."""
+        if self._run_ctx is not None:
+            batches: list = []
+            ctx.merges = apply_plans(
+                ctx.state, ctx.plans,
+                on_batch=lambda A, Z, M: batches.append((A, Z, M)))
+            self._run_ctx.advance(batches)
+        else:
+            ctx.merges = apply_plans(ctx.state, ctx.plans)
 
     def _group_partitions(self, ctx: IterationContext) -> np.ndarray:
         """Partition of each group = owner of its smallest member root's
@@ -245,10 +272,12 @@ class SummarizerEngine:
 
         pg = as_partitioned(g, self.partitions)
         state = SluggerState(pg.to_graph())
+        transfer0 = TRANSFER.snapshot()  # before setup: run-context init counts
         self._setup_dispatches(state.g)
         self.stats = {name: 0.0 for name in STAGE_ORDER}
         self.stats["merges"] = 0
-        transfer0 = TRANSFER.snapshot()
+        transfer_prev = transfer0
+        self.stats["transfer_iters"] = []
         iter_streams = np.random.SeedSequence(self.seed).spawn(max(self.T, 1))
         for t in range(1, self.T + 1):
             theta = 0.0 if t == self.T else 1.0 / (1 + t)
@@ -259,6 +288,10 @@ class SummarizerEngine:
                 self.stages[name](self, ctx)
                 self.stats[name] += time.perf_counter() - t0
             self.stats["merges"] += ctx.merges
+            snap = TRANSFER.snapshot()
+            self.stats["transfer_iters"].append(
+                TRANSFER.delta_since(transfer_prev, now=snap))
+            transfer_prev = snap
             log.info(
                 "iter %3d: θ=%.3f groups=%d merges=%d roots=%d parts=%d",
                 t, theta, len(ctx.groups), ctx.merges, state.alive.size,

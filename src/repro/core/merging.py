@@ -40,6 +40,61 @@ def _pair_cost(cnt, poss):
 
 
 # ---------------------------------------------------------------------------
+# Integer-exact Saving contract (DESIGN.md §9)
+#
+# The batched sweep evaluates Savings as exact integer rationals so the host
+# and the device-resident round op (`kernels/bitset_fold`, int32/uint32 limb
+# arithmetic — x64 stays disabled on device) agree BIT-FOR-BIT:
+#   * "possible pairs" terms are clamped at C_CLAMP with expressions that
+#     equal min(product, C_CLAMP) exactly on both sides; the workspace build
+#     guards that real costs stay far below the clamp (exactness, not just
+#     agreement — see `BatchedGroupWorkspace._fill`);
+#   * the Saving-vs-best comparison is the cross-product n_j·d_b < n_b·d_j
+#     (int64 here; 32-bit limbs on device), strict so ranked ties keep the
+#     earlier candidate;
+#   * θ is quantized to θ̂ = P/2^THETA_SHIFT and accepted by the integer
+#     inequality (d − n)·2^20 ≥ P·d. θ = 0 → P = 0 accepts Saving ≥ 0, so
+#     the final iteration is exact.
+# `kernels/bitset_fold/ref.py` holds the device twins of these helpers; a
+# test pins the two constant pairs to each other.
+# ---------------------------------------------------------------------------
+C_CLAMP = 1 << 30
+THETA_SHIFT = 20
+
+
+def theta_to_p(theta: float) -> int:
+    """Quantize θ to the integer acceptance parameter P (host and device
+    apply the SAME P, so the quantization never splits backends)."""
+    import math
+
+    p = int(math.ceil(float(theta) * (1 << THETA_SHIFT)))
+    return min(max(p, 0), 1 << THETA_SHIFT)
+
+
+def theta_accept_host(numer, denom, theta_p: int):
+    """Saving ≥ θ̂ as the exact integer test (int64 twin of
+    `bitset_fold.ref.theta_accept`). numer/denom < 2^31, so the products
+    stay below 2^51."""
+    numer = np.asarray(numer, dtype=np.int64)
+    denom = np.asarray(denom, dtype=np.int64)
+    return ((denom > 0) & (numer <= denom)
+            & ((denom - numer) << THETA_SHIFT >= np.int64(theta_p) * denom))
+
+
+def poss_pair_i(s, colsize):
+    """min(s·colsize, C_CLAMP) in int64 — value-identical to the device's
+    division-guarded where-expression (`bitset_fold.ref.poss_pair_c`)."""
+    return np.minimum(np.asarray(s, dtype=np.int64)
+                      * np.asarray(colsize, dtype=np.int64), C_CLAMP)
+
+
+def poss_self_i(s):
+    """min(s·(s−1)/2, C_CLAMP) in int64 (s·(s−1) is always even)."""
+    s = np.asarray(s, dtype=np.int64)
+    return np.minimum(s * (s - 1) // 2, C_CLAMP)
+
+
+# ---------------------------------------------------------------------------
 # Candidate ranking: quantized integer Jaccard keys (DESIGN.md §9)
 # ---------------------------------------------------------------------------
 _RANK_KEY_BITS = 15
@@ -123,7 +178,7 @@ class MergePlan:
         return sum(a.size for a, _ in self.rounds)
 
 
-def apply_plans(state, plans: list) -> int:
+def apply_plans(state, plans: list, on_batch=None) -> int:
     """Exchange stage: replay recorded merge rounds in canonical order.
 
     Round r applies every group's r-th recorded round in plan-list order via
@@ -132,6 +187,11 @@ def apply_plans(state, plans: list) -> int:
     pointers and freshly minted parents flow back; the decisions themselves
     never re-read global state, so the replay is scheduling-independent.
     Returns the number of merges applied.
+
+    ``on_batch(A, Z, M)`` (optional) observes each applied round: the
+    resolved global ids merged (A absorbs Z) and the minted parent ids M —
+    the resident run context replays exactly these against its device maps
+    (`core/resident.ResidentRunContext.advance`).
     """
     cur = [p.members0.copy() for p in plans]
     merges = 0
@@ -146,7 +206,11 @@ def apply_plans(state, plans: list) -> int:
                 backrefs.append((gi, a_rows))
         if not As:
             break
-        M = state.merge_batch(np.concatenate(As), np.concatenate(Zs))
+        A = np.concatenate(As)
+        Z = np.concatenate(Zs)
+        M = state.merge_batch(A, Z)
+        if on_batch is not None:
+            on_batch(A, Z, M)
         off = 0
         for gi, a_rows in backrefs:
             cur[gi][a_rows] = M[off:off + a_rows.size]
@@ -195,12 +259,15 @@ class GroupWorkspace:
         self.colid = {int(gid): j for j, gid in enumerate(uniq)}
         self.memcol = inv[:k].astype(np.int64)
         colidx = inv[k:].astype(np.int64)
-        self.CNT = np.zeros((k, R), dtype=np.float64)
+        # exact edge counts are integers; int64 keeps the float-free storage
+        # while `savings()` still evaluates in float64 (all values < 2^53,
+        # so the sequential decisions are unchanged)
+        self.CNT = np.zeros((k, R), dtype=np.int64)
         self.CNT[seg, colidx] = cnt
-        self.s = state.size[members].astype(np.float64)
-        self.colsize = state.size[self.col_gid].astype(np.float64)
-        self.selfc = state.selfcnt[members].astype(np.float64)
-        self.nd = state.ndesc[members].astype(np.float64)
+        self.s = state.size[members].astype(np.int64)
+        self.colsize = state.size[self.col_gid].astype(np.int64)
+        self.selfc = state.selfcnt[members].astype(np.int64)
+        self.nd = state.ndesc[members].astype(np.int64)
         self.hgt = state.height[members].astype(np.int64)
         self.alive = np.ones(k, dtype=bool)
         # packed bitmaps over columns for Jaccard ranking
@@ -222,18 +289,15 @@ class GroupWorkspace:
         return c
 
     def _full_cost_rows(self):
-        k = len(self.members)
-        out = np.zeros(k, dtype=np.float64)
-        c = self._row_pair_costs(np.arange(k))
+        c = self._row_pair_costs(np.arange(len(self.members)))
         out = c.sum(axis=1)
-        poss_self = self.s * (self.s - 1) / 2
-        out += _pair_cost(self.selfc, poss_self)
+        out += _pair_cost(self.selfc, self.s * (self.s - 1) // 2)
         out += self.nd
         return out
 
     def _recompute_row(self, i: int):
         c = _pair_cost(self.CNT[i], self.s[i] * self.colsize)
-        poss_self = self.s[i] * (self.s[i] - 1) / 2
+        poss_self = self.s[i] * (self.s[i] - 1) // 2
         self.cost_row[i] = c.sum() + _pair_cost(np.array([self.selfc[i]]), np.array([poss_self]))[0] + self.nd[i]
 
     # -- partner ranking -----------------------------------------------------
@@ -255,7 +319,7 @@ class GroupWorkspace:
         total = cost_cols.sum(axis=1) - cost_cols[:, ca] - cost_cols[np.arange(len(cand)), cz]
         cab = self.CNT[a, cz]
         self_m = self.selfc[a] + self.selfc[cand] + cab
-        poss_self = s_m * (s_m - 1) / 2
+        poss_self = s_m * (s_m - 1) // 2
         total += _pair_cost(self_m, poss_self)
         numer = total + self.nd[a] + self.nd[cand] + 2.0
         pair_c = _pair_cost(cab, self.s[a] * self.s[cand])
@@ -287,15 +351,15 @@ class GroupWorkspace:
         self.col_gid[ca] = m_gid
         # local rows
         self.CNT[a] += self.CNT[z]
-        self.CNT[z] = 0.0
+        self.CNT[z] = 0
         # local columns
         self.CNT[:, ca] += self.CNT[:, cz]
-        self.CNT[:, cz] = 0.0
-        self.CNT[a, ca] = 0.0
+        self.CNT[:, cz] = 0
+        self.CNT[a, ca] = 0
         self.colsize[ca] = s_new
-        self.colsize[cz] = 0.0
+        self.colsize[cz] = 0
         self.selfc[a] = self.selfc[a] + self.selfc[z] + cab
-        self.nd[a] = self.nd[a] + self.nd[z] + 2.0
+        self.nd[a] = self.nd[a] + self.nd[z] + 2
         self.hgt[a] = max(self.hgt[a], self.hgt[z]) + 1
         self.s[a] = s_new
         self.alive[z] = False
@@ -382,7 +446,8 @@ class HostRankSource:
     the ranked order — are identical.
     """
 
-    needs_host_bits = True  # `apply_merges` must keep folding ws.bits
+    needs_host_bits = True    # `apply_merges` must keep folding ws.bits
+    needs_host_counts = True  # … and the integer count/cost tensors
 
     def __init__(self, dispatch=None):
         self.dispatch = dispatch
@@ -407,21 +472,25 @@ class HostRankSource:
 
 
 class ResidentRankSource:
-    """Ranking from a device-resident arena (`core/resident.py`): top-J
-    comes back ranked from the fused kernel, and the round's merges fold
-    the RESIDENT bitmaps instead of the host copy (which goes stale — the
-    exact-Saving evaluation never reads it, see DESIGN.md §9)."""
+    """Fused device proposals from a device-resident arena
+    (`core/resident.py`): ranking, exact integer Saving and θ̂-acceptance
+    all run in one device round op over the arena's resident bitmaps AND
+    count tensors — the host copies of both go stale (the sweep never
+    reads them again; only `alive`/plan bookkeeping stays host-side, see
+    DESIGN.md §9). Per round only (accept, partner) per dirty row crosses
+    the boundary down, and the merge instruction list crosses up."""
 
     needs_host_bits = False
+    needs_host_counts = False
 
     def __init__(self, arena):
         self.arena = arena
 
-    def ranked(self, ws, rb, rr, j_max):
-        return self.arena.topj_rows(rb, rr)[:, :j_max]
+    def propose(self, ws, rb, rr, j_max, theta_p, height_bound):
+        return self.arena.propose_rows(rb, rr, j_max, theta_p, height_bound)
 
     def on_merges(self, ws, b, a, z):
-        self.arena.fold(b, a, z, ws.memcol[b, a], ws.memcol[b, z])
+        self.arena.fold_counts(b, a, z)
 
 
 class BatchedGroupWorkspace:
@@ -443,16 +512,20 @@ class BatchedGroupWorkspace:
         self.gseed = np.zeros(B, dtype=np.uint64)  # per-group priority seeds
         self.memcol = np.zeros((B, G), dtype=np.int64)
         self.members = np.full((B, G), -1, dtype=np.int64)
-        self.CNT = np.zeros((B, G, R), dtype=np.float64)
+        # CNT holds exact subedge counts — int32 (half the old float64
+        # footprint, and the dtype the resident arena uploads verbatim);
+        # the scalar per-row stats are int64 so host cross-products in the
+        # Saving comparison stay exact without widening casts
+        self.CNT = np.zeros((B, G, R), dtype=np.int32)
         self.col_gid = np.full((B, R), -1, dtype=np.int64)
-        self.colsize = np.zeros((B, R), dtype=np.float64)
-        self.s = np.zeros((B, G), dtype=np.float64)
-        self.selfc = np.zeros((B, G), dtype=np.float64)
-        self.nd = np.zeros((B, G), dtype=np.float64)
+        self.colsize = np.zeros((B, R), dtype=np.int64)
+        self.s = np.zeros((B, G), dtype=np.int64)
+        self.selfc = np.zeros((B, G), dtype=np.int64)
+        self.nd = np.zeros((B, G), dtype=np.int64)
         self.hgt = np.zeros((B, G), dtype=np.int64)
         self.alive = np.zeros((B, G), dtype=bool)
         self.bits = np.zeros((B, G, max((R + 63) // 64, 1)), dtype=np.uint64)
-        self.cost_row = np.zeros((B, G), dtype=np.float64)
+        self.cost_row = np.zeros((B, G), dtype=np.int64)
 
     def _fill(self, mb, mr, mc, gids, eb, er, ec, ecnt, cb, cc, cgid):
         """Populate the tensors from (member, entry, column) index streams."""
@@ -464,6 +537,10 @@ class BatchedGroupWorkspace:
         self.nd[mb, mr] = st.ndesc[gids]
         self.hgt[mb, mr] = st.height[gids]
         self.alive[mb, mr] = True
+        if ecnt.size and int(ecnt.max()) >= np.iinfo(np.int32).max:
+            raise OverflowError(
+                f"subedge count {int(ecnt.max())} exceeds the int32 CNT "
+                f"tensor; the batched workspaces cannot represent this graph")
         self.CNT[eb, er, ec] = ecnt
         self.col_gid[cb, cc] = cgid
         self.colsize[cb, cc] = st.size[cgid]
@@ -472,11 +549,23 @@ class BatchedGroupWorkspace:
                 self.bits, (eb, er, ec >> 6),
                 np.uint64(1) << (ec & 63).astype(np.uint64),
             )
-        # flat 2-level cost of every row (padding rows cost 0 → Saving −inf)
-        cost = _pair_cost(self.CNT, self.s[:, :, None] * self.colsize[:, None, :]).sum(axis=-1)
-        cost += _pair_cost(self.selfc, self.s * (self.s - 1) / 2)
+        # flat 2-level cost of every row (padding rows cost 0 → proposal
+        # invalid), with the CLAMPED possible-pair terms of the integer
+        # Saving contract — identical to the device evaluation
+        cnt64 = self.CNT.astype(np.int64)
+        cost = _pair_cost(cnt64, poss_pair_i(self.s[:, :, None],
+                                             self.colsize[:, None, :])).sum(axis=-1)
+        cost += _pair_cost(self.selfc, poss_self_i(self.s))
         cost += self.nd
-        cost[~self.alive] = 0.0
+        cost[~self.alive] = 0
+        # guard the clamp: decisions stay host/device-identical even AT the
+        # clamp, but exactness of the Saving itself needs real costs well
+        # below it (and below int32 for the device tensors)
+        if cost.size and int(cost.max()) >= C_CLAMP:
+            raise OverflowError(
+                f"row cost {int(cost.max())} reached the integer-Saving "
+                f"clamp C_CLAMP=2^30; the exact-Saving contract no longer "
+                f"holds for this graph")
         self.cost_row = cost
 
     @staticmethod
@@ -559,28 +648,35 @@ class BatchedGroupWorkspace:
         return out
 
     # -- exact Saving (Eq. 8), every alive row's top-J in one op -----------
-    def savings_rows(self, rb: np.ndarray, rr: np.ndarray, cands: np.ndarray,
-                     height_bound=None) -> np.ndarray:
-        """Saving of merging row (rb[i], rr[i]) with members ``cands[i, j]``.
+    def saving_terms_rows(self, rb: np.ndarray, rr: np.ndarray,
+                          cands: np.ndarray, height_bound=None):
+        """Integer Saving terms of merging row (rb[i], rr[i]) with members
+        ``cands[i, j]``: ``(numer, denom, valid)`` int64/(bool), each (n, J),
+        where Saving = 1 − numer/denom and ``valid`` masks defined terms
+        (denom > 0, height bound respected).
 
-        Rows are flat (alive rows only, across all groups of the batch);
-        returns (n, J), chunked so the (chunk, J, R) temps stay bounded.
+        Exact-integer twin of the device round op
+        (`bitset_fold.ref.round_rows`): same clamped possible-pair terms,
+        same values. Rows are flat (alive rows only, across all groups of
+        the batch); chunked so the (chunk, J, R) temps stay bounded.
         """
         R = self.R
         n, J = cands.shape
-        out = np.empty((n, J), dtype=np.float64)
+        numer_o = np.empty((n, J), dtype=np.int64)
+        denom_o = np.empty((n, J), dtype=np.int64)
+        valid_o = np.empty((n, J), dtype=bool)
         chunk = max(1, int(_MEM_BUDGET // max(1, J * R * 8 * 4)))
         for s0 in range(0, n, chunk):
             b = rb[s0:s0 + chunk]
             r = rr[s0:s0 + chunk]
             c = cands[s0:s0 + chunk]
             bj = b[:, None]
-            cnt_r = self.CNT[b, r]                                 # (m, R)
+            cnt_r = self.CNT[b, r].astype(np.int64)                # (m, R)
             merged = cnt_r[:, None, :] + self.CNT[bj, c]           # (m, J, R)
             s_r = self.s[b, r]
             s_c = self.s[bj, c]                                    # (m, J)
             s_m = s_r[:, None] + s_c
-            poss = s_m[..., None] * self.colsize[b][:, None, :]
+            poss = poss_pair_i(s_m[..., None], self.colsize[b][:, None, :])
             cost_cols = _pair_cost(merged, poss)
             ca = self.memcol[b, r]                                 # (m,)
             cz = self.memcol[bj, c]                                # (m, J)
@@ -590,34 +686,52 @@ class BatchedGroupWorkspace:
             total -= np.take_along_axis(cost_cols, cz[..., None], axis=2)[..., 0]
             cab = np.take_along_axis(cnt_r, cz, axis=1)            # (m, J)
             self_m = self.selfc[b, r][:, None] + self.selfc[bj, c] + cab
-            total += _pair_cost(self_m, s_m * (s_m - 1) / 2)
-            numer = total + self.nd[b, r][:, None] + self.nd[bj, c] + 2.0
-            pair_c = _pair_cost(cab, s_r[:, None] * s_c)
+            total += _pair_cost(self_m, poss_self_i(s_m))
+            numer = total + self.nd[b, r][:, None] + self.nd[bj, c] + 2
+            pair_c = _pair_cost(cab, poss_pair_i(s_r[:, None], s_c))
             denom = self.cost_row[b, r][:, None] + self.cost_row[bj, c] - pair_c
-            sav = np.where(denom > 0, 1.0 - numer / np.maximum(denom, 1e-12), -np.inf)
+            valid = denom > 0
             if height_bound is not None:
                 new_h = np.maximum(self.hgt[b, r][:, None], self.hgt[bj, c]) + 1
-                sav = np.where(new_h > height_bound, -np.inf, sav)
-            out[s0:s0 + chunk] = sav
-        return out
+                valid &= new_h <= height_bound
+            numer_o[s0:s0 + chunk] = numer
+            denom_o[s0:s0 + chunk] = denom
+            valid_o[s0:s0 + chunk] = valid
+        return numer_o, denom_o, valid_o
+
+    def savings_rows(self, rb: np.ndarray, rr: np.ndarray, cands: np.ndarray,
+                     height_bound=None) -> np.ndarray:
+        """Float view of `saving_terms_rows` (benchmark/diagnostic use; the
+        sweep itself compares the integer terms exactly)."""
+        numer, denom, valid = self.saving_terms_rows(
+            rb, rr, cands, height_bound=height_bound)
+        return np.where(valid, 1.0 - numer / np.maximum(denom, 1), -np.inf)
 
     # -- batched merge application -----------------------------------------
     def apply_merges(self, b: np.ndarray, a: np.ndarray, z: np.ndarray,
-                     fold_bits: bool = True):
+                     fold_bits: bool = True, fold_counts: bool = True):
         """Fold row z into row a of group b for a round of disjoint pairs.
 
         ``fold_bits=False`` skips the host bitmap fold — the resident
         backend folds the DEVICE copy instead (`ResidentRankSource`), and
-        nothing in the Saving evaluation reads ``self.bits``."""
+        nothing in the Saving evaluation reads ``self.bits``.
+        ``fold_counts=False`` additionally skips the host count/cost-tensor
+        fold (CNT, colsize, sizes, costs): the whole-iteration resident path
+        keeps those tensors on device and folds them there
+        (`kernels/bitset_fold.fold_counts_fn`) — the host then only tracks
+        liveness, membership, and the recorded plan."""
         if b.size == 0:
             return
         G = self.G
         ca = self.memcol[b, a]
         cz = self.memcol[b, z]
-        s_new = self.s[b, a] + self.s[b, z]
-        old_ca = _pair_cost(self.CNT[b, :, ca], self.s[b] * self.colsize[b, ca][:, None])
-        old_cz = _pair_cost(self.CNT[b, :, cz], self.s[b] * self.colsize[b, cz][:, None])
-        cab = self.CNT[b, a, cz]
+        if fold_counts:
+            s_new = self.s[b, a] + self.s[b, z]
+            old_ca = _pair_cost(self.CNT[b, :, ca],
+                                poss_pair_i(self.s[b], self.colsize[b, ca][:, None]))
+            old_cz = _pair_cost(self.CNT[b, :, cz],
+                                poss_pair_i(self.s[b], self.colsize[b, cz][:, None]))
+            cab = self.CNT[b, a, cz].astype(np.int64)
         if self.plans is not None:
             # record mode: one round per group (b arrives sorted ascending)
             head = np.concatenate([[0], np.flatnonzero(b[1:] != b[:-1]) + 1,
@@ -631,18 +745,19 @@ class BatchedGroupWorkspace:
         self.members[b, z] = -1
         self.col_gid[b, ca] = Ms
         self.col_gid[b, cz] = -1
-        # rows fold, then columns fold
-        self.CNT[b, a] += self.CNT[b, z]
-        self.CNT[b, z] = 0.0
-        self.CNT[b, :, ca] += self.CNT[b, :, cz]
-        self.CNT[b, :, cz] = 0.0
-        self.CNT[b, a, ca] = 0.0
-        self.colsize[b, ca] = s_new
-        self.colsize[b, cz] = 0.0
-        self.selfc[b, a] += self.selfc[b, z] + cab
-        self.nd[b, a] += self.nd[b, z] + 2.0
-        self.hgt[b, a] = np.maximum(self.hgt[b, a], self.hgt[b, z]) + 1
-        self.s[b, a] = s_new
+        if fold_counts:
+            # rows fold, then columns fold
+            self.CNT[b, a] += self.CNT[b, z]
+            self.CNT[b, z] = 0
+            self.CNT[b, :, ca] += self.CNT[b, :, cz]
+            self.CNT[b, :, cz] = 0
+            self.CNT[b, a, ca] = 0
+            self.colsize[b, ca] = s_new
+            self.colsize[b, cz] = 0
+            self.selfc[b, a] += self.selfc[b, z] + cab
+            self.nd[b, a] += self.nd[b, z] + 2
+            self.hgt[b, a] = np.maximum(self.hgt[b, a], self.hgt[b, z]) + 1
+            self.s[b, a] = s_new
         self.alive[b, z] = False
         if fold_bits:
             # bitmaps: fold column cz into ca for all rows, then OR rows.
@@ -668,14 +783,18 @@ class BatchedGroupWorkspace:
             self.bits[b, z] = 0
             # row a has no bit for its own column
             self.bits[b, a, wa] &= ~(one << ba)
+        if not fold_counts:
+            return
         # incremental cost update for all rows (columns ca, cz changed) …
-        new_ca = _pair_cost(self.CNT[b, :, ca], self.s[b] * self.colsize[b, ca][:, None])
+        new_ca = _pair_cost(self.CNT[b, :, ca],
+                            poss_pair_i(self.s[b], self.colsize[b, ca][:, None]))
         np.add.at(self.cost_row, (b,), new_ca - old_ca - old_cz)
         # … and exact recomputation for the merged rows (absorbed rows die)
-        crow = _pair_cost(self.CNT[b, a], self.s[b, a][:, None] * self.colsize[b]).sum(axis=-1)
-        crow += _pair_cost(self.selfc[b, a], self.s[b, a] * (self.s[b, a] - 1) / 2)
+        crow = _pair_cost(self.CNT[b, a].astype(np.int64),
+                          poss_pair_i(self.s[b, a][:, None], self.colsize[b])).sum(axis=-1)
+        crow += _pair_cost(self.selfc[b, a], poss_self_i(self.s[b, a]))
         self.cost_row[b, a] = crow + self.nd[b, a]
-        self.cost_row[b, z] = 0.0
+        self.cost_row[b, z] = 0
 
     # -- the sweep ---------------------------------------------------------
     def sweep(self, theta: float, ranker, top_j: int = 16,
@@ -706,6 +825,7 @@ class BatchedGroupWorkspace:
         merges = 0
         dirty = self.alive.copy()
         alive_cnt = self.alive.sum(axis=1)
+        theta_p = theta_to_p(theta)
         round_no = 0
         while G > 1 and dirty.any():
             # J adapts to the largest alive group for array sizing; each row
@@ -715,17 +835,36 @@ class BatchedGroupWorkspace:
             if j_max < 1:
                 break
             rb, rr = np.nonzero(dirty)
-            part = ranker.ranked(self, rb, rr, j_max)              # (n, j)
-            sav = self.savings_rows(rb, rr, part, height_bound=height_bound)
-            j_row = np.minimum(top_j, alive_cnt[rb] - 1)
-            cand_ok = self.alive[rb[:, None], part] & (part != rr[:, None])
-            cand_ok &= np.arange(j_max)[None, :] < j_row[:, None]
-            sav = np.where(cand_ok, sav, -np.inf)
-            best_j = np.argmax(sav, axis=1)
-            ri = np.arange(rb.size)
-            best_sav = sav[ri, best_j]
-            best_z = part[ri, best_j]
-            prop = np.isfinite(best_sav) & (best_sav >= theta)
+            if hasattr(ranker, "propose"):
+                # fused device proposals: ranking, exact integer Saving and
+                # θ̂-acceptance all ran on device — only (accept, partner)
+                # per dirty row came back
+                prop, best_z = ranker.propose(self, rb, rr, j_max, theta_p,
+                                              height_bound)
+            else:
+                part = ranker.ranked(self, rb, rr, j_max)          # (n, j)
+                numer, denom, valid = self.saving_terms_rows(
+                    rb, rr, part, height_bound=height_bound)
+                j_row = np.minimum(top_j, alive_cnt[rb] - 1)
+                valid &= self.alive[rb[:, None], part] & (part != rr[:, None])
+                valid &= np.arange(j_max)[None, :] < j_row[:, None]
+                # exact rational argmax in ranked order: Saving_j > best ⟺
+                # numer_j·denom_best < numer_best·denom_j (strict, so ties
+                # keep the earlier-ranked candidate) — the device round op
+                # runs the identical comparison in 32-bit limbs
+                n_flat = rb.size
+                has = np.zeros(n_flat, dtype=bool)
+                n_b = np.ones(n_flat, dtype=np.int64)
+                d_b = np.ones(n_flat, dtype=np.int64)
+                best_z = np.zeros(n_flat, dtype=np.int64)
+                for j in range(j_max):
+                    take = valid[:, j] & (
+                        ~has | (numer[:, j] * d_b < n_b * denom[:, j]))
+                    n_b = np.where(take, numer[:, j], n_b)
+                    d_b = np.where(take, denom[:, j], d_b)
+                    best_z = np.where(take, part[:, j], best_z)
+                    has |= take
+                prop = has & theta_accept_host(n_b, d_b, theta_p)
             dirty[rb[~prop], rr[~prop]] = False
             if not prop.any():
                 break
@@ -741,7 +880,8 @@ class BatchedGroupWorkspace:
             np.minimum.at(winner, z_key, p)
             acc = (winner[a_key] == p) & (winner[z_key] == p)
             ab, am, az = gb[acc], ar[acc], zr[acc]
-            self.apply_merges(ab, am, az, fold_bits=ranker.needs_host_bits)
+            self.apply_merges(ab, am, az, fold_bits=ranker.needs_host_bits,
+                              fold_counts=ranker.needs_host_counts)
             ranker.on_merges(self, ab, am, az)
             # survivors rejoin the queue, absorbed rows leave it; losers of
             # the matching stayed dirty and retry next round

@@ -69,6 +69,68 @@ def root_shingles(g: Graph, root_of: np.ndarray, seed: int, n_ids=None) -> np.nd
     return rootwise_min(nm, root_of, n_ids, _P)
 
 
+# ---------------------------------------------------------------------------
+# Unified u32 shingle family (DESIGN.md §9, ISSUE 7)
+#
+# The engine's FOUR shingle paths — this host twin, the mesh shard_map
+# (`core/distributed.shingles_sharded`), the replicated device reference
+# (`node_shingles_dense`) and the resident run context's on-device root
+# shingles — all hash with the same uint32 mix, so every backend of one run
+# groups identically and the cross-backend bit-identity contract covers
+# candidate generation too. (`candidate_groups`' DEFAULT shingle, used by
+# the classic `slugger.summarize` internals and direct API callers, remains
+# the Mersenne `_hash` family above.)
+# ---------------------------------------------------------------------------
+def u32_seed_consts(sub_seed: int):
+    """The (a, b) uint32 hash constants every path derives from a seed."""
+    a = np.uint32((2654435761 * (int(sub_seed) | 1)) & 0xFFFFFFFF)
+    b = np.uint32((int(sub_seed) * 0x9E3779B9) & 0xFFFFFFFF)
+    return a, b
+
+
+def hash_u32(x: np.ndarray, a, b) -> np.ndarray:
+    """NumPy twin of `core/distributed._hash_u32` — identical bit mix."""
+    h = x.astype(np.uint32) * np.uint32(a) + np.uint32(b)
+    h = h ^ (h >> np.uint32(16))
+    h = h * np.uint32(0x7FEB352D)
+    h = h ^ (h >> np.uint32(15))
+    return h
+
+
+def node_shingles_u32(g: Graph, sub_seed: int) -> np.ndarray:
+    """Per-subnode u32 shingle: min(h(u), min over neighbors h(w))."""
+    a, b = u32_seed_consts(sub_seed)
+    h_self = hash_u32(np.arange(g.n, dtype=np.uint32), a, b)
+    seg = np.full(g.n, 0xFFFFFFFF, dtype=np.uint32)
+    if g.indices.size:
+        src = np.repeat(np.arange(g.n), np.diff(g.indptr))
+        np.minimum.at(seg, src, hash_u32(
+            np.asarray(g.indices, dtype=np.uint32), a, b))
+    return np.minimum(h_self, seg)
+
+
+def host_shingle_provider(g: Graph):
+    """Engine hook: the single-device host path of the unified u32 family.
+
+    ``for_roots(root_of) -> shingle_fn(sub_seed, n_ids)`` with the same
+    provider protocol (and the same ``2^32 + id`` leafless-root sentinel)
+    as the mesh `core/distributed.shingle_provider` — given the same
+    root_of and seeds, both return identical arrays.
+    """
+
+    def for_roots(root_of: np.ndarray):
+        root_of = np.asarray(root_of, dtype=np.int64)
+
+        def shingle_fn(sub_seed: int, n_ids: int) -> np.ndarray:
+            node_sh = node_shingles_u32(g, sub_seed)
+            return rootwise_min(node_sh.astype(np.int64), root_of, n_ids,
+                                1 << 32)
+
+        return shingle_fn
+
+    return for_roots
+
+
 def _split_groups(roots: np.ndarray, keys: np.ndarray, sub_keys=None) -> list:
     """Partition ``roots`` by key (optionally refined by ``sub_keys``),
     dropping singletons. Returns a list of int64 arrays."""

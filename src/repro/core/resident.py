@@ -1,30 +1,36 @@
-"""Device-resident merge rounds: persistent bitmap arenas (DESIGN.md §9).
+"""Device-resident merge rounds: persistent bitmap+count arenas (§9).
 
 `ResidentBitmapArena` is the ``backend="resident"`` engine's device half.
 One arena wraps ONE batched workspace chunk (`merging.BatchedGroupWorkspace`,
-a (B, G, W) packed-bitmap batch): the bitmaps are uploaded ONCE, stay
-resident across every merge round of the iteration, and the round loop
-becomes three on-device ops —
+a (B, G, W) packed-bitmap batch). Since ISSUE 7 the arena holds the WHOLE
+merge-round state — bitmaps AND the exact integer count tensors (``CNT``,
+column sizes, member columns, sizes, self-counts, descendant counts,
+heights, row costs, the dirty queue) — so a full sweep round is two
+on-device ops:
 
-1. **fused ranking** (`kernels/bitset_fold.topj_fn`): pairwise quantized-
-   Jaccard keys reduced to per-row ranked top-J candidate columns on
-   device; the host downloads (n_dirty, J) int8 instead of a dense
-   (B, G, G) score matrix;
-2. **bitset-OR fold** (`kernels/bitset_fold.fold_fn`): the round's accepted
-   merge pairs fold the resident bitmaps in place (donated buffers — on
-   backends with donation support the fold never copies);
-3. a host exchange of the TINY artifacts only: dirty-row ids up, ranked
-   candidates down, fold instructions up.
+1. **fused proposal round** (`kernels/bitset_fold.round_fn`): the device
+   derives the dirty-row list from its own ``dirty`` mirror, ranks
+   candidates by the quantized-Jaccard key, evaluates the EXACT integer
+   Saving of each (32-bit-limb rational compare) and applies the
+   quantized-θ̂ acceptance; only (K, 2) int8 ``[accept, partner]`` rows
+   come back — no dirty-row upload, no score download;
+2. **count-carrying fold** (`kernels/bitset_fold.fold_counts_fn`): the
+   round's accepted pairs fold bitmaps, counts, stats and row costs in
+   place (donated buffers), mirroring the host `apply_merges` phases
+   bit-for-bit.
 
-The exact-Saving evaluation needs no bitmap sync-back — the workspace keeps
-the integer count tensors (`CNT`, sizes, self-counts) on host, and Savings
-are computed from those; bitmaps only drive the ranking. `sync_rows` exists
-for the verification contract: tests pull selected (dirty) rows back and
-assert the device fold is bit-identical to the host fold.
+Only the conflict-free matching stays on host (it needs the group-seed
+hashes), so per round the boundary carries the accepted-pair instruction
+slab up and the per-dirty-row verdict down. The legacy v1 protocol
+(`topj_rows` ranking + bitmap-only `fold`) remains for tests and tools.
 
-Every upload/download reports to `core.transfer.GLOBAL`, and each ranking
-round-trip ticks the round counter — `benchmarks/scalability.py --resident`
-gates the bytes-per-round reduction on these numbers.
+`sync_rows` keeps the verification contract: tests pull selected rows back
+and assert the device fold is bit-identical to the host fold.
+
+Every upload/download reports to `core.transfer.GLOBAL` under a lifecycle
+phase (``upload``/``rank``/``fold``), and each proposal round-trip ticks
+the round counter — `benchmarks/scalability.py --resident` gates the
+bytes-per-iteration reduction on these numbers.
 """
 from __future__ import annotations
 
@@ -85,18 +91,57 @@ class ResidentBitmapArena:
         self._put = self._sharder(jax)
         self._bits = self._put(bits_p)
         self._alive = self._put(alive_p)
-        counter.add_h2d(bits_p.nbytes + alive_p.nbytes)
+        counter.add_h2d(bits_p.nbytes + alive_p.nbytes, phase="upload")
         self.rounds = 0
+        self.Rp = 0            # set by attach_counts
+        self._counts = None    # v2 resident count state, or None (v1 mode)
 
     @classmethod
     def from_workspace(cls, ws, *, top_j: int = 16, mesh=None,
-                       use_kernel=None, interpret=None, counter=TRANSFER):
+                       use_kernel=None, interpret=None, counter=TRANSFER,
+                       with_counts: bool = True):
         """Upload a `BatchedGroupWorkspace` chunk's bitmaps (uint32 view of
-        its uint64 words — bit positions follow the uint32 layout)."""
+        its uint64 words — bit positions follow the uint32 layout), and —
+        unless ``with_counts=False`` — its exact integer count tensors, so
+        the whole sweep runs against resident state."""
         bits = ws.bits.view(np.uint32)
-        return cls(bits, ws.alive, top_j=top_j, mesh=mesh,
-                   use_kernel=use_kernel, interpret=interpret,
-                   counter=counter)
+        arena = cls(bits, ws.alive, top_j=top_j, mesh=mesh,
+                    use_kernel=use_kernel, interpret=interpret,
+                    counter=counter)
+        if with_counts:
+            arena.attach_counts(ws.CNT, ws.colsize, ws.memcol, ws.s,
+                                ws.selfc, ws.nd, ws.hgt, ws.cost_row,
+                                ws.alive)
+        return arena
+
+    def attach_counts(self, CNT, colsize, memcol, s, selfc, nd, hgt, cost,
+                      alive):
+        """Upload the integer count state (all values int32-guarded by the
+        workspace build). The dirty queue starts as the alive mask —
+        exactly the host sweep's initial queue."""
+        from repro.kernels.common import pow2
+
+        B, G, R = CNT.shape
+        self.Rp = pow2(int(R), floor=8)
+        cnt_p = np.zeros((self.Bp, G, self.Rp), dtype=np.int32)
+        cnt_p[:B, :, :R] = CNT
+        colsize_p = np.zeros((self.Bp, self.Rp), dtype=np.int32)
+        colsize_p[:B, :R] = colsize
+        # padded groups are all-dead: their zero state is inert in every op
+        per_g = [np.zeros((self.Bp, G), dtype=np.int32) for _ in range(6)]
+        for arr, src in zip(per_g, (memcol, s, selfc, nd, hgt, cost)):
+            arr[:B] = src
+        dirty_p = np.zeros((self.Bp, G), dtype=np.int8)
+        dirty_p[:B] = np.asarray(alive, dtype=bool)
+        self._CNT = self._put(cnt_p)
+        self._colsize = self._put(colsize_p)
+        (self._memcol, self._s, self._selfc, self._nd, self._hgt,
+         self._cost) = [self._put(a) for a in per_g]
+        self._dirty = self._put(dirty_p)
+        self._counts = True
+        self.counter.add_h2d(cnt_p.nbytes + colsize_p.nbytes +
+                             sum(a.nbytes for a in per_g) + dirty_p.nbytes,
+                             phase="upload")
 
     # ------------------------------------------------------------- plumbing
     def _sharder(self, jax):
@@ -175,6 +220,79 @@ class ResidentBitmapArena:
         self._bits, self._alive = fn(self._bits, self._alive,
                                      self._put(instr))
 
+    # ----------------------------------------- v2: whole-iteration residency
+    def _state(self):
+        return (self._bits, self._alive, self._dirty, self._CNT,
+                self._colsize, self._memcol, self._s, self._selfc, self._nd,
+                self._hgt, self._cost)
+
+    def propose_rows(self, rb: np.ndarray, rr: np.ndarray, j_max: int,
+                     theta_p: int, height_bound):
+        """One fused proposal round over the resident state.
+
+        ``rb``/``rr`` are the HOST's dirty rows — the device never sees
+        them (it derives the identical list from its resident ``dirty``
+        mirror); they only size the padded row count and order the returned
+        verdicts. Returns ``(accept, partner)`` bool/(int64) arrays of
+        length ``rb.size``. ``j_max`` is ignored for compilation (the op
+        always traces J = top_j and masks per-row, so every round of an
+        iteration hits one executable).
+        """
+        import jax.numpy as jnp
+        from repro.kernels.bitset_fold.ops import round_fn
+        from repro.kernels.common import pow2
+
+        if self._counts is None:
+            raise RuntimeError("propose_rows needs attach_counts state")
+        n = rb.size
+        K = pow2(n, floor=64)
+        fn = round_fn(self.Bp, self.G, self.Rp, self.Wp, K, self.J, self.J,
+                      height_bound=height_bound,
+                      use_kernel=self.use_kernel, interpret=self.interpret,
+                      mesh=self.mesh, axes=self.axes)
+        self.counter.add_h2d(4, phase="rank")  # the θ̂ scalar
+        self._dirty, out = fn(*self._state(), jnp.uint32(theta_p))
+        out = np.asarray(out)
+        self.counter.add_d2h(out.nbytes, phase="rank")
+        self.counter.tick_round()
+        self.rounds += 1
+        if self.mesh is not None:
+            out = out[rb, rr]          # (B, G, 2) → host-side dirty gather
+        else:
+            out = out[:n]
+        return out[:, 0] > 0, out[:, 1].astype(np.int64)
+
+    def fold_counts(self, b: np.ndarray, a: np.ndarray, z: np.ndarray):
+        """Fold one round's accepted pairs (rows z into rows a of groups b)
+        into the WHOLE resident state, in place. Member columns come from
+        the resident ``memcol`` — the instruction slab is 12 bytes/pair."""
+        from repro.kernels.bitset_fold.ops import fold_counts_fn
+        from repro.kernels.common import pow2
+
+        if self._counts is None:
+            raise RuntimeError("fold_counts needs attach_counts state")
+        m = b.size
+        if m == 0:
+            return
+        # slot of each pair within its group (b arrives sorted ascending)
+        head = np.concatenate([[True], b[1:] != b[:-1]])
+        starts = np.flatnonzero(head)
+        counts = np.diff(np.concatenate([starts, [m]]))
+        slot = np.arange(m) - np.repeat(starts, counts)
+        P_pairs = min(pow2(int(counts.max()), floor=2), max(self.G // 2, 1))
+        instr = np.zeros((self.Bp, P_pairs, 3), dtype=np.int32)
+        instr[b, slot, 0] = a
+        instr[b, slot, 1] = z
+        instr[b, slot, 2] = 1
+        fn = fold_counts_fn(self.Bp, self.G, self.Rp, self.Wp, P_pairs,
+                            use_kernel=self.use_kernel,
+                            interpret=self.interpret, mesh=self.mesh,
+                            axes=self.axes)
+        self.counter.add_h2d(instr.nbytes, phase="fold")
+        (self._bits, self._alive, self._dirty, self._CNT, self._colsize,
+         self._s, self._selfc, self._nd, self._hgt,
+         self._cost) = fn(*self._state(), self._put(instr))
+
     # --------------------------------------------------- sync-back contract
     def sync_rows(self, b: np.ndarray, g: np.ndarray) -> np.ndarray:
         """Download selected (dirty) bitmap rows — (n, Wp) uint32. The
@@ -195,3 +313,101 @@ class ResidentBitmapArena:
         out = np.asarray(self._alive)[: self.B] > 0
         self.counter.add_d2h(out.nbytes)
         return out
+
+
+class ResidentRunContext:
+    """Per-run device state of the single-device resident backend.
+
+    Holds what outlives one iteration (the arenas are per-iteration,
+    per-chunk):
+
+    * the STATIC edge arrays, uploaded once per run (phase ``init``) —
+      candidate generation's O(|E|) hashing never re-ships the graph;
+    * ``res_map`` (cap,) int32 — the current root of every arena id,
+      advanced at every exchange stage by replaying the applied merge
+      plans (`merging.apply_plans`'s ``on_batch`` hook feeds the exact
+      (A, Z, M) batches): a forward map with the iteration's merges is
+      built on device and collapsed by pointer doubling (2^16 covers any
+      in-iteration merge chain), then composed into ``res_map``. Per
+      iteration only the ~12 bytes/merge instruction stream crosses up
+      (phase ``carry``) — the map itself never leaves the device.
+
+    ``for_roots`` is the engine's shingle-provider hook: root shingles
+    compute ON DEVICE from the resident edges and ``res_map`` (tentpole 3
+    of ISSUE 7 — resident candidate generation); per rehash only the
+    (n_ids,) shingle vector and the per-root leaf counts come back (phase
+    ``candgen``). The results are bit-identical to the host u32 twin
+    (`minhash.host_shingle_provider`) and the mesh shard_map path.
+    """
+
+    def __init__(self, g, *, counter=TRANSFER):
+        _jax()
+        import jax.numpy as jnp
+
+        self.counter = counter
+        self.n = int(g.n)
+        self.cap = 2 * self.n + 8      # SluggerState's id capacity
+        src = np.repeat(np.arange(g.n), np.diff(g.indptr)).astype(np.int32)
+        dst = np.asarray(g.indices, dtype=np.int32)
+        self._src = jnp.asarray(src)
+        self._dst = jnp.asarray(dst)
+        self._res_map = jnp.arange(self.cap, dtype=jnp.int32)
+        counter.add_h2d(src.nbytes + dst.nbytes, phase="init")
+
+    # ------------------------------------------------------- plan replay
+    def advance(self, batches: list):
+        """Replay one iteration's applied merge batches ((A, Z, M) global
+        id triples, in application order) against the resident root map."""
+        import jax.numpy as jnp
+        from repro.kernels.bitset_fold.carry import advance_fn
+        from repro.kernels.common import pow2
+
+        m = sum(a.size for a, _, _ in batches)
+        if m == 0:
+            return
+        mp = pow2(m, floor=64)
+        tri = np.full((3, mp), self.cap, dtype=np.int32)  # pads scatter-drop
+        tri[0, :m] = np.concatenate([a for a, _, _ in batches])
+        tri[1, :m] = np.concatenate([z for _, z, _ in batches])
+        tri[2, :m] = np.concatenate([mm for _, _, mm in batches])
+        fn = advance_fn(self.cap, mp)
+        self.counter.add_h2d(tri.nbytes, phase="carry")
+        self._res_map = fn(self._res_map, jnp.asarray(tri))
+
+    def root_of_host(self) -> np.ndarray:
+        """Download res_map[:n] (tests/debug — the verification contract
+        against `SluggerState.root_of`; the engine never calls this)."""
+        out = np.asarray(self._res_map)[: self.n].astype(np.int64)
+        self.counter.add_d2h(out.nbytes)
+        return out
+
+    # ----------------------------------------------- resident candidate gen
+    def for_roots(self, root_of: np.ndarray):
+        """Shingle-provider hook (`minhash.candidate_groups` protocol).
+
+        ``root_of`` (the host map) is intentionally unused: the resident
+        ``res_map`` IS that mapping — `advance` replayed every applied
+        plan — so the roots come from device state and only the per-root
+        results cross the boundary.
+        """
+        import jax.numpy as jnp
+        from repro.kernels.bitset_fold.carry import shingle_roots_fn
+        from repro.core.minhash import u32_seed_consts
+
+        fn = shingle_roots_fn(self.n, self.cap, self._src.shape[0])
+
+        def shingle_fn(sub_seed: int, n_ids: int) -> np.ndarray:
+            a, b = u32_seed_consts(sub_seed)
+            sh, cnt = fn(self._src, self._dst, self._res_map,
+                         jnp.uint32(a), jnp.uint32(b))
+            sh = np.asarray(sh)
+            cnt = np.asarray(cnt)
+            self.counter.add_d2h(sh.nbytes + cnt.nbytes, phase="candgen")
+            out = sh.astype(np.int64)[:n_ids]
+            # leafless ids take the unique sentinel 2^32 + id — the same
+            # rule as `minhash.rootwise_min(…, sentinel_base=1 << 32)`
+            missing = np.flatnonzero(cnt[:n_ids] == 0)
+            out[missing] = (1 << 32) + missing
+            return out
+
+        return shingle_fn

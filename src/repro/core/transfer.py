@@ -4,12 +4,21 @@ The resident merge-round work (DESIGN.md §9) is justified by a transfer
 model, so the model is *measured*, not asserted: every dispatch that moves
 bytes across the host↔device boundary in the merge hot path — the mesh
 intersection dispatch, the single-device batched ops, and the
-`ResidentBitmapArena` upload/top-J/fold cycle — reports into the module
+`ResidentBitmapArena` upload/rank/fold/carry cycle — reports into the module
 `GLOBAL` counter. A "round" is one device exchange cycle: one ranking
 round-trip (a full-matrix intersection dispatch on the batched path, one
-fused top-J call on the resident path). `benchmarks/scalability.py
---resident` gates the resident backend's bytes-per-round reduction on these
-numbers (``BENCH_resident.json``).
+fused rank+Saving call on the resident path). `benchmarks/scalability.py
+--resident` gates the resident backend's bytes-per-iteration reduction on
+these numbers (``BENCH_resident.json``).
+
+Counts are attributed to a *phase* (``upload``, ``rank``, ``fold``,
+``carry``, ``candgen``, …) so a bytes regression localizes to the lifecycle
+stage that caused it instead of a single aggregate number.
+
+Thread safety: the engine's merge_round stage runs workspace thunks on a
+``ThreadPoolExecutor``, and every thunk's arena reports into the shared
+``GLOBAL`` counter — all mutation happens under one lock so concurrent
+sweeps never lose counts (plain ``+=`` on the singleton did, pre-ISSUE 7).
 
 On a single-host CPU backend the "transfer" is a memcpy rather than PCIe,
 but the byte counts are exactly what a TPU deployment would ship, which is
@@ -17,37 +26,66 @@ what the model predicts and the benchmark gates.
 """
 from __future__ import annotations
 
+import threading
+
 
 class TransferCounter:
-    """Byte/round tallies for one device path (monotonic; snapshot+delta)."""
+    """Byte/round tallies for one device path (monotonic; snapshot+delta).
 
-    __slots__ = ("bytes_h2d", "bytes_d2h", "rounds")
+    All mutators take the instance lock — `stage_merge_round` runs resident
+    arena thunks on a thread pool and they all report here. Reads used for
+    gating go through ``snapshot()`` (also locked) so a snapshot is always
+    internally consistent.
+    """
+
+    __slots__ = ("bytes_h2d", "bytes_d2h", "rounds", "phases", "_lock")
 
     def __init__(self):
+        self._lock = threading.Lock()
         self.reset()
 
     def reset(self):
-        self.bytes_h2d = 0
-        self.bytes_d2h = 0
-        self.rounds = 0
+        with self._lock:
+            self.bytes_h2d = 0
+            self.bytes_d2h = 0
+            self.rounds = 0
+            self.phases = {}
 
-    def add_h2d(self, nbytes: int):
-        self.bytes_h2d += int(nbytes)
+    def _phase_add(self, phase: str | None, nbytes: int):
+        if phase is None:
+            return
+        self.phases[phase] = self.phases.get(phase, 0) + int(nbytes)
 
-    def add_d2h(self, nbytes: int):
-        self.bytes_d2h += int(nbytes)
+    def add_h2d(self, nbytes: int, phase: str | None = None):
+        with self._lock:
+            self.bytes_h2d += int(nbytes)
+            self._phase_add(phase, nbytes)
+
+    def add_d2h(self, nbytes: int, phase: str | None = None):
+        with self._lock:
+            self.bytes_d2h += int(nbytes)
+            self._phase_add(phase, nbytes)
 
     def tick_round(self):
         """One device exchange cycle (ranking round-trip) completed."""
-        self.rounds += 1
+        with self._lock:
+            self.rounds += 1
 
     def snapshot(self) -> dict:
-        return {"bytes_h2d": self.bytes_h2d, "bytes_d2h": self.bytes_d2h,
-                "rounds": self.rounds}
+        with self._lock:
+            return {"bytes_h2d": self.bytes_h2d, "bytes_d2h": self.bytes_d2h,
+                    "rounds": self.rounds, "phases": dict(self.phases)}
 
-    def delta_since(self, snap: dict) -> dict:
-        """Totals accumulated since ``snap``, plus the bytes/round ratio."""
-        d = {k: getattr(self, k) - snap[k] for k in snap}
+    def delta_since(self, snap: dict, now: dict | None = None) -> dict:
+        """Totals accumulated since ``snap`` (up to ``now`` if given — the
+        engine's per-iteration breakdown reuses one snapshot as both an
+        interval's end and the next one's start), plus bytes/round."""
+        cur = self.snapshot() if now is None else now
+        d = {k: cur[k] - snap.get(k, 0)
+             for k in ("bytes_h2d", "bytes_d2h", "rounds")}
+        base = snap.get("phases", {})
+        d["phases"] = {k: v - base.get(k, 0)
+                       for k, v in cur["phases"].items()}
         total = d["bytes_h2d"] + d["bytes_d2h"]
         d["bytes_total"] = total
         d["bytes_per_round"] = total / d["rounds"] if d["rounds"] else 0.0

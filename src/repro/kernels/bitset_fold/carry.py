@@ -1,0 +1,94 @@
+"""Device ops for the resident run context (DESIGN.md §9, ISSUE 7).
+
+These are the ops that make state OUTLIVE one iteration on device:
+
+* `advance_fn` — plan replay: compose one iteration's applied merges
+  ((A, Z, M) id triples) into the resident root map. The merges form a
+  forest-forward map (an id merges at most once per iteration, and minted
+  parents may merge again in LATER rounds of the same iteration), so the
+  map collapses to its fixpoint by pointer doubling — 16 squarings cover
+  chains of length 2^16, far beyond any real round count.
+* `shingle_roots_fn` — resident candidate generation: per-root u32 min-hash
+  shingles from the resident edge arrays and root map, plus per-root leaf
+  counts (the host applies the leafless-root sentinel rule from the
+  counts). Bit-identical to `core/minhash.node_shingles_u32` +
+  `rootwise_min` and to the mesh shard_map path — same hash mix, and
+  segment-min is order-independent.
+
+Both are jit-cached on their (static) shapes via small LRU caches.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import LruCache
+
+_ADVANCE_CACHE = LruCache(8)
+_SHINGLE_CACHE = LruCache(8)
+
+
+def _hash_u32(x, a, b):
+    """The unified u32 mix (twin of `core/distributed._hash_u32` and the
+    NumPy `core/minhash.hash_u32`)."""
+    h = x.astype(jnp.uint32) * a + b
+    h = h ^ (h >> jnp.uint32(16))
+    h = h * jnp.uint32(0x7FEB352D)
+    h = h ^ (h >> jnp.uint32(15))
+    return h
+
+
+def advance_fn(cap: int, mp: int):
+    """Compiled ``(res_map (cap,) i32, tri (3, mp) i32) -> res_map'``.
+
+    ``tri`` rows are the padded A / Z / M id streams (pads carry ``cap``,
+    out of range — the scatters drop them). ``res_map`` is donated: the
+    root map advances in place.
+    """
+    key = (cap, mp)
+    fn = _ADVANCE_CACHE.get(key)
+    if fn is not None:
+        return fn
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def fn(res_map, tri):
+        fwd = jnp.arange(cap, dtype=jnp.int32)
+        fwd = fwd.at[tri[0]].set(tri[2], mode="drop")
+        fwd = fwd.at[tri[1]].set(tri[2], mode="drop")
+        for _ in range(16):            # pointer doubling to the fixpoint
+            fwd = fwd[fwd]
+        return fwd[res_map]
+
+    _ADVANCE_CACHE[key] = fn
+    return fn
+
+
+def shingle_roots_fn(n: int, cap: int, m_edges: int):
+    """Compiled ``(src, dst, res_map, a, b) -> (sh (cap,) u32, cnt (cap,)
+    i32)`` — per-root shingle minima and per-root leaf counts.
+
+    Matches the host twin exactly: node shingle = min(h(u), min over
+    neighbors h(w)); root shingle = min over the root's leaves. Roots
+    owning no leaves come back as the uint32 maximum with ``cnt == 0`` —
+    the host substitutes the ``2^32 + id`` sentinel.
+    """
+    key = (n, cap, m_edges)
+    fn = _SHINGLE_CACHE.get(key)
+    if fn is not None:
+        return fn
+
+    @jax.jit
+    def fn(src, dst, res_map, a, b):
+        h_self = _hash_u32(jnp.arange(n, dtype=jnp.uint32), a, b)
+        seg = jax.ops.segment_min(_hash_u32(dst, a, b), src, num_segments=n)
+        node_sh = jnp.minimum(h_self, seg)
+        roots = res_map[:n]
+        sh = jax.ops.segment_min(node_sh, roots, num_segments=cap)
+        cnt = jax.ops.segment_sum(jnp.ones(n, dtype=jnp.int32), roots,
+                                  num_segments=cap)
+        return sh, cnt
+
+    _SHINGLE_CACHE[key] = fn
+    return fn

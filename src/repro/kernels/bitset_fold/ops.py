@@ -31,6 +31,8 @@ from repro.kernels.common import LruCache, mesh_content_key, shard_map_no_check
 
 _TOPJ_CACHE = LruCache(16)
 _FOLD_CACHE = LruCache(16)
+_ROUND_CACHE = LruCache(32)
+_FOLDC_CACHE = LruCache(16)
 
 
 def _shard(fn, mesh, axes, n_in, n_out):
@@ -103,4 +105,131 @@ def fold_fn(B: int, G: int, W: int, P_pairs: int, *, use_kernel: bool,
 
     fn = jax.jit(widened, donate_argnums=(0, 1))
     _FOLD_CACHE[key] = fn
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Whole-iteration residency round ops (DESIGN.md §9, ISSUE 7)
+# ---------------------------------------------------------------------------
+def round_fn(B: int, G: int, R: int, W: int, K: int, J: int, top_j: int, *,
+             height_bound, use_kernel: bool, interpret: bool, mesh=None,
+             axes=("data",)):
+    """Compiled fused proposal round over the RESIDENT state.
+
+    ``(bits, alive, dirty, CNT, colsize, memcol, s, selfc, nd, hgt, cost,
+    theta_p) -> (dirty', out)``. The dirty-row list never crosses the
+    boundary: the device derives it from its own ``dirty`` mirror
+    (`jnp.nonzero` in row-major order — exactly the host's
+    ``np.nonzero``), evaluates ranking + exact integer Saving + θ̂
+    acceptance, and updates ``dirty`` in place (rows whose best Saving
+    fails θ̂ leave the queue, matching the host sweep). Only ``out``
+    (K, 2) int8 ``[accept, partner]`` comes back. ``theta_p`` is a traced
+    uint32 scalar so θ stays out of the compiled shapes.
+
+    Under a mesh the batch axis is sharded and `ref.round_all` evaluates
+    every row (a sharded nonzero has no global order), so ``out`` is
+    (B, G, 2) and the host gathers its dirty rows; decisions are
+    identical. With ``use_kernel`` the Pallas `jaccard_topj` kernel owns
+    the O(G²·W) ranking and `ref.round_from_ranked` the exact-Saving
+    tail — the jnp path fuses both in `ref.round_rows`.
+    """
+    key = ("round", B, G, R, W, K, J, top_j, height_bound, use_kernel,
+           interpret, mesh_content_key(mesh))
+    fn = _ROUND_CACHE.get(key)
+    if fn is not None:
+        return fn
+
+    if mesh is not None:
+        def all_round(bits, alive, dirty, CNT, colsize, memcol, s, selfc,
+                      nd, hgt, cost):
+            return ref.round_all(bits, alive, dirty, CNT, colsize, memcol,
+                                 s, selfc, nd, hgt, cost, J, top_j,
+                                 height_bound)
+        sharded = _shard(all_round, mesh, axes, 11, 1)
+
+        @functools.partial(jax.jit, donate_argnums=(2,))
+        def fn(bits, alive, dirty, CNT, colsize, memcol, s, selfc, nd, hgt,
+               cost, theta_p):
+            res = sharded(bits, alive, dirty, CNT, colsize, memcol, s,
+                          selfc, nd, hgt, cost)                 # (B, G, 4)
+            ok = (res[..., 0] > 0) & ref.theta_accept(
+                res[..., 1], res[..., 2], theta_p)
+            out = jnp.stack([ok.astype(jnp.int8),
+                             res[..., 3].astype(jnp.int8)], axis=-1)
+            # non-dirty rows had has=0 → ok=0, so a plain overwrite IS the
+            # host rule "dirty rows stay dirty iff their proposal passed"
+            return ok.astype(dirty.dtype), out
+    else:
+        @functools.partial(jax.jit, donate_argnums=(2,))
+        def fn(bits, alive, dirty, CNT, colsize, memcol, s, selfc, nd, hgt,
+               cost, theta_p):
+            rb, rr = jnp.nonzero(dirty > 0, size=K, fill_value=(B, 0))
+            rows = jnp.stack([rb.astype(jnp.int32),
+                              rr.astype(jnp.int32)], axis=1)
+            if use_kernel:
+                cand_all = jax.vmap(
+                    lambda bb, aa: jaccard_topj_kernel(bb, aa[:, None], J,
+                                                       interpret=interpret)
+                )(bits, alive)                                  # (B, G, J)
+                cand = cand_all[jnp.minimum(rows[:, 0], B - 1), rows[:, 1]]
+                res = ref.round_from_ranked(
+                    alive, dirty, CNT, colsize, memcol, s, selfc, nd, hgt,
+                    cost, rows, cand, top_j, height_bound)
+            else:
+                res = ref.round_rows(bits, alive, dirty, CNT, colsize,
+                                     memcol, s, selfc, nd, hgt, cost, rows,
+                                     J, top_j, height_bound)    # (K, 4)
+            ok = (res[:, 0] > 0) & ref.theta_accept(res[:, 1], res[:, 2],
+                                                    theta_p)
+            out = jnp.stack([ok.astype(jnp.int8),
+                             res[:, 3].astype(jnp.int8)], axis=-1)
+            dirty = dirty.at[rows[:, 0], rows[:, 1]].set(
+                ok.astype(dirty.dtype), mode="drop")
+            return dirty, out
+
+    _ROUND_CACHE[key] = fn
+    return fn
+
+
+def fold_counts_fn(B: int, G: int, R: int, W: int, P_pairs: int, *,
+                   use_kernel: bool, interpret: bool, mesh=None,
+                   axes=("data",)):
+    """Compiled count-carrying fold: ``(bits, alive, dirty, CNT, colsize,
+    memcol, s, selfc, nd, hgt, cost, instr (B,P,3) i32) -> 10-tuple`` of
+    updated state (everything but ``memcol``, which merges never change).
+    All state buffers are donated — the resident iteration state folds in
+    place. With ``use_kernel`` the bitmap phase runs in the Pallas
+    `bitset_fold` kernel (instruction word/bit fields derived on device
+    from the resident ``memcol``) and the count phases in the jnp ref;
+    the phases share no reads, so the split is exact.
+    """
+    key = ("foldc", B, G, R, W, P_pairs, use_kernel, interpret,
+           mesh_content_key(mesh))
+    fn = _FOLDC_CACHE.get(key)
+    if fn is not None:
+        return fn
+
+    if use_kernel:
+        def one(bits, alive, dirty, CNT, colsize, memcol, s, selfc, nd,
+                hgt, cost, instr):
+            out = ref.fold_pairs_counts(bits, alive, dirty, CNT, colsize,
+                                        memcol, s, selfc, nd, hgt, cost,
+                                        instr, with_bits=False)
+            valid = instr[:, 2] > 0
+            ag = jnp.minimum(jnp.where(valid, instr[:, 0], 0), G - 1)
+            zg = jnp.minimum(jnp.where(valid, instr[:, 1], 0), G - 1)
+            ca = memcol[ag]
+            cz = memcol[zg]
+            instr8 = jnp.stack(
+                [ag, zg, ca >> 5, ca & 31, cz >> 5, cz & 31,
+                 instr[:, 2], jnp.zeros_like(ca)], axis=1).astype(jnp.int32)
+            nb, _ = bitset_fold_kernel(bits, alive[:, None], instr8,
+                                       interpret=interpret)
+            return (nb,) + tuple(out[1:])
+    else:
+        one = ref.fold_pairs_counts
+    v = jax.vmap(one)
+    folded = _shard(v, mesh, axes, 12, 10) if mesh is not None else v
+    fn = jax.jit(folded, donate_argnums=(0, 1, 2, 3, 4, 6, 7, 8, 9, 10))
+    _FOLDC_CACHE[key] = fn
     return fn

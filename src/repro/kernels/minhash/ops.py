@@ -16,17 +16,21 @@ def pack_adjacency(indptr: np.ndarray, indices: np.ndarray, width: int = 128):
     row back to its node. Includes the node itself (shingles hash N(u) ∪ {u}).
     """
     n = indptr.shape[0] - 1
-    deg = np.diff(indptr) + 1  # + self
-    rows_per = np.maximum(1, -(-deg // width))
+    deg1 = np.diff(indptr) + 1  # + self
+    rows_per = -(-deg1 // width)  # ceil; deg1 >= 1 so always >= 1
     owners = np.repeat(np.arange(n, dtype=np.int64), rows_per)
     R = int(rows_per.sum())
     out = np.full((R, width), np.uint32(0xFFFFFFFF), dtype=np.uint32)
-    row0 = np.concatenate([[0], np.cumsum(rows_per)])[:-1]
-    for u in range(n):
-        vals = np.concatenate([[u], indices[indptr[u]:indptr[u + 1]]]).astype(np.uint32)
-        for k in range(rows_per[u]):
-            chunk = vals[k * width:(k + 1) * width]
-            out[row0[u] + k, :chunk.shape[0]] = chunk
+    row0 = np.cumsum(rows_per) - rows_per
+    # flat [u | N(u)] value stream + one scatter — no per-node Python loop
+    total = int(deg1.sum())
+    node_of = np.repeat(np.arange(n, dtype=np.int64), deg1)
+    start_v = np.cumsum(deg1) - deg1
+    off = np.arange(total, dtype=np.int64) - start_v[node_of]
+    vals = np.empty(total, dtype=np.uint32)
+    vals[off == 0] = np.arange(n, dtype=np.uint32)
+    vals[off > 0] = np.asarray(indices, dtype=np.uint32)
+    out[row0[node_of] + off // width, off % width] = vals
     return out, owners
 
 

@@ -218,6 +218,10 @@ MESH_EQUIV = textwrap.dedent("""
     # resident arenas shard over the same mesh; decisions must not move
     runs += [SummarizerEngine(partitions=k, backend="resident", T=4, seed=2,
                               mesh=mesh).run(g) for k in (1, 2)]
+    # the unified u32 shingle family makes the single-device engines agree
+    # with the 8-device mesh runs bit for bit (ISSUE 7)
+    runs += [SummarizerEngine(partitions=1, backend=be, T=4,
+                              seed=2).run(g) for be in ("numpy", "resident")]
     assert runs[0].validate_lossless(g)
     for s in runs[1:]:
         assert np.array_equal(runs[0].parent, s.parent)

@@ -1,0 +1,328 @@
+"""Whole-iteration device residency (ISSUE 7 / DESIGN.md §9).
+
+The resident backend's contract is that state which OUTLIVES one iteration
+— the run context's edge arrays and root map, and the per-iteration arenas'
+bitmaps + integer count tensors — evolves on device in exact lockstep with
+the host's authoritative copies. These tests pin that contract at its seams:
+plan-replay carry across iterations, the unified u32 shingle family's four
+bit-identical paths, the zero-merge and all-dead degenerate iterations, the
+integer-Saving clamp constants shared by host and device, transfer-counter
+thread safety under the engine's thread pool, and the int32 count dtypes at
+their clamp boundary.
+"""
+import numpy as np
+import pytest
+
+from repro.core.engine import SummarizerEngine
+from repro.core.minhash import (host_shingle_provider, hash_u32,
+                                node_shingles_u32, rootwise_min,
+                                u32_seed_consts)
+from repro.core.slugger import SluggerState
+from repro.graphs import generators as GG
+
+
+# -- plan-driven carry: res_map replay vs host root_of ------------------------
+def test_run_context_carry_matches_host_every_iteration():
+    """After EVERY exchange stage (≥3 iterations with merges), the device
+    root map — advanced only by replaying applied MergePlans, never
+    re-uploaded — equals the host ``root_of`` bit for bit."""
+    g = GG.caveman(10, 6, 0.05, seed=3)
+    checked = {"iters": 0, "merge_iters": 0}
+
+    def stage_exchange(engine, ctx):
+        SummarizerEngine.stage_exchange(engine, ctx)
+        assert engine._run_ctx is not None
+        rm = engine._run_ctx.root_of_host()
+        host = ctx.state.root_of
+        assert np.array_equal(rm[: host.size], host), f"iter {ctx.t}"
+        checked["iters"] += 1
+        checked["merge_iters"] += ctx.merges > 0
+
+    e = SummarizerEngine(backend="resident", T=6, seed=2,
+                         stages={"exchange": stage_exchange})
+    state, _ = e.merge_forest(g)
+    assert checked["iters"] == 6
+    assert checked["merge_iters"] >= 3  # the carry was exercised, not idle
+    assert e.stats["merges"] > 0
+
+
+def test_run_context_zero_merge_iteration_is_noop():
+    """An iteration that accepts no merges advances nothing: empty batch
+    list → res_map unchanged, no carry bytes counted."""
+    from repro.core.resident import ResidentRunContext
+    from repro.core.transfer import TransferCounter
+
+    g = GG.caveman(4, 5, 0.0, seed=1)
+    counter = TransferCounter()
+    ctx = ResidentRunContext(g, counter=counter)
+    before = ctx.root_of_host()
+    carry0 = counter.snapshot()["phases"].get("carry", 0)
+    ctx.advance([])
+    ctx.advance([(np.zeros(0, np.int64), np.zeros(0, np.int64),
+                  np.zeros(0, np.int64))])
+    assert counter.snapshot()["phases"].get("carry", 0) == carry0
+    assert np.array_equal(ctx.root_of_host(), before)
+
+
+def test_run_context_multi_round_chain_collapses():
+    """Chained merges WITHIN one iteration (a merges into a parent that
+    itself merges in a later round) must collapse to the final root —
+    the pointer-doubling fixpoint, replayed against a real state."""
+    from repro.core.resident import ResidentRunContext
+
+    g = GG.caveman(2, 6, 0.0, seed=0)
+    st = SluggerState(g)
+    ctx = ResidentRunContext(g)
+    m1 = st.merge_batch(np.array([0]), np.array([1]))
+    m2 = st.merge_batch(np.array([int(m1[0])]), np.array([2]))
+    m3 = st.merge_batch(np.array([int(m2[0])]), np.array([3]))
+    ctx.advance([(np.array([0]), np.array([1]), m1),
+                 (m1.astype(np.int64), np.array([2]), m2),
+                 (m2.astype(np.int64), np.array([3]), m3)])
+    rm = ctx.root_of_host()
+    assert np.array_equal(rm[: g.n], st.root_of)
+    assert rm[0] == rm[1] == rm[2] == rm[3] == int(m3[0])
+
+
+# -- unified u32 shingle family: four bit-identical paths --------------------
+def test_u32_shingle_paths_bit_identical():
+    """Host NumPy twin, replicated jnp reference, and the resident
+    on-device path agree bit for bit, per node and per root (the mesh
+    shard_map path is pinned to the jnp reference in
+    test_distributed_core.test_shingles_sharded_equivalence_8dev)."""
+    import jax.numpy as jnp
+    from repro.core import distributed as D
+    from repro.core.resident import ResidentRunContext
+
+    g = GG.barabasi_albert(120, 3, seed=9)
+    src = np.repeat(np.arange(g.n), np.diff(g.indptr))
+    st = SluggerState(g)
+    for a, z in ((0, 1), (2, 3), (10, 50)):
+        st.merge(a, z)
+    root_of = st.root_of
+    n_ids = int(root_of.max()) + 1
+
+    ctx = ResidentRunContext(g)
+    batches = [(np.array([0]), np.array([1]), np.array([g.n])),
+               (np.array([2]), np.array([3]), np.array([g.n + 1])),
+               (np.array([10]), np.array([50]), np.array([g.n + 2]))]
+    ctx.advance(batches)
+    host_fn = host_shingle_provider(g)(root_of)
+    dev_fn = ctx.for_roots(root_of)
+
+    for sub_seed in (0, 1, 42, 2**63 - 5):
+        a, b = u32_seed_consts(sub_seed)
+        node_host = node_shingles_u32(g, sub_seed)
+        node_ref = np.asarray(D.node_shingles_dense(
+            jnp.asarray(src.astype(np.int32)),
+            jnp.asarray(g.indices.astype(np.int32)), g.n, int(a), int(b)))
+        assert np.array_equal(node_host, node_ref.astype(np.uint32))
+        want = rootwise_min(node_host.astype(np.int64), root_of, n_ids,
+                            1 << 32)
+        assert np.array_equal(host_fn(sub_seed, n_ids), want)
+        assert np.array_equal(dev_fn(sub_seed, n_ids), want)
+
+
+def test_u32_leafless_root_sentinel():
+    """Ids owning no leaves take the unique 2^32+id sentinel on every path
+    — a leafless root must never spuriously group under a real shingle."""
+    from repro.core.resident import ResidentRunContext
+
+    g = GG.caveman(3, 4, 0.0, seed=2)
+    root_of = np.zeros(g.n, dtype=np.int64)  # every leaf under root 0
+    n_ids = 5
+    ctx = ResidentRunContext(g)
+    A = np.arange(1, g.n, dtype=np.int64)
+    ctx.advance([(np.zeros(g.n - 1, np.int64), A,
+                  np.zeros(g.n - 1, np.int64))])
+    for fn in (host_shingle_provider(g)(root_of), ctx.for_roots(root_of)):
+        sh = fn(7, n_ids)
+        assert sh[0] < (1 << 32)
+        assert np.array_equal(sh[1:], (1 << 32) + np.arange(1, n_ids))
+
+
+def test_u32_engine_backends_group_identically():
+    """With the family unified, numpy / batched / resident runs of the SAME
+    seed group (and therefore merge) identically — the engine-level face
+    of the provider contract."""
+    from repro.core import summarize
+
+    g = GG.erdos_renyi(150, 0.04, seed=11)
+    runs = {be: summarize(g, T=5, seed=4, backend=be)
+            for be in ("numpy", "batched", "resident")}
+    assert runs["numpy"].validate_lossless(g)
+    for be in ("batched", "resident"):
+        assert np.array_equal(runs["numpy"].parent, runs[be].parent), be
+        assert np.array_equal(runs["numpy"].edges, runs[be].edges), be
+
+
+# -- arena degenerate iterations ---------------------------------------------
+def test_arena_all_dead_group_sweeps_to_nothing():
+    """Degenerate sweeps terminate with BOTH dirty mirrors drained: a
+    workspace of 2-cliques (no proposal ever passes — merging an isolated
+    edge saves nothing) ends round 1 with zero merges, and a dense-clique
+    workspace whose rows progressively die still drains to no dirty rows."""
+    from repro.core.merging import (BatchedGroupWorkspace, MergePlan,
+                                    ResidentRankSource)
+    from repro.core.resident import ResidentBitmapArena
+
+    def sweep(g, groups, size):
+        st = SluggerState(g)
+        plans = [MergePlan(gr) for gr in groups]
+        ws = BatchedGroupWorkspace.build_bucket(
+            st, groups, size, plans=plans,
+            group_seeds=np.arange(len(groups), dtype=np.uint64) + 1)[0]
+        arena = ResidentBitmapArena.from_workspace(ws, top_j=4)
+        merges = ws.sweep(0.0, ResidentRankSource(arena))
+        # the sweep only terminates when the HOST queue drains; the device
+        # dirty mirror must have drained in lockstep
+        assert not np.asarray(arena._dirty).any()
+        return plans, merges
+
+    # all proposals rejected: every row dies undirty in round 1
+    g = GG.caveman(4, 2, 0.0, seed=5)  # 4 disjoint 2-cliques
+    plans, merges = sweep(g, [np.array([2 * i, 2 * i + 1])
+                              for i in range(4)], 2)
+    assert merges == 0
+    assert all(len(p.rounds) == 0 for p in plans)
+
+    # dense cliques merge down over several rounds, then drain
+    g2 = GG.caveman(2, 8, 0.0, seed=6)
+    plans2, merges2 = sweep(g2, [np.arange(8), np.arange(8) + 8], 8)
+    assert merges2 > 0
+    assert any(len(p.rounds) >= 1 for p in plans2)
+
+
+def test_engine_zero_merge_run_keeps_resident_state_consistent():
+    """An edgeless graph yields zero groups, zero merges, zero carry — but
+    the run context and per-iteration transfer stats stay well-formed."""
+    from repro.graphs.csr import Graph
+
+    g = Graph.from_edges(6, np.zeros((0, 2), dtype=np.int64))
+    e = SummarizerEngine(backend="resident", T=3, seed=0)
+    state, _ = e.merge_forest(g)
+    assert e.stats["merges"] == 0
+    assert len(e.stats["transfer_iters"]) == 3
+    assert np.array_equal(e._run_ctx.root_of_host(), state.root_of)
+
+
+# -- per-iteration transfer accounting ---------------------------------------
+def test_engine_transfer_iters_sum_to_total():
+    g = GG.caveman(8, 6, 0.05, seed=7)
+    e = SummarizerEngine(backend="resident", T=4, seed=1)
+    e.merge_forest(g)
+    iters = e.stats["transfer_iters"]
+    assert len(iters) == 4
+    total = e.stats["transfer"]
+    assert sum(d["bytes_h2d"] for d in iters) == total["bytes_h2d"]
+    assert sum(d["bytes_d2h"] for d in iters) == total["bytes_d2h"]
+    assert sum(d["rounds"] for d in iters) == total["rounds"]
+    for ph, v in total["phases"].items():
+        assert sum(d["phases"].get(ph, 0) for d in iters) == v, ph
+    # the whole iteration is device-resident: candgen bytes are per-root
+    # results only, and rank traffic is the (K,2) verdicts + θ̂ scalars
+    assert any(d["phases"].get("candgen", 0) > 0 for d in iters)
+
+
+def test_transfer_counter_thread_safe():
+    """64 threads × 1000 increments each — the lock must not lose counts
+    (the engine's merge_round pool reports concurrently)."""
+    import threading
+
+    from repro.core.transfer import TransferCounter
+
+    c = TransferCounter()
+    N, T = 1000, 64
+
+    def hammer():
+        for _ in range(N):
+            c.add_h2d(3, phase="rank")
+            c.add_d2h(5, phase="fold")
+            c.tick_round()
+
+    threads = [threading.Thread(target=hammer) for _ in range(T)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    snap = c.snapshot()
+    assert snap["bytes_h2d"] == 3 * N * T
+    assert snap["bytes_d2h"] == 5 * N * T
+    assert snap["rounds"] == N * T
+    assert snap["phases"] == {"rank": 3 * N * T, "fold": 5 * N * T}
+
+
+# -- integer-Saving constants and clamp boundary -----------------------------
+def test_saving_constants_pinned_host_device():
+    """merging.py (host int64 path) and kernels/bitset_fold/ref.py (device
+    32-bit-limb path) must clamp and quantize with the SAME constants."""
+    from repro.core import merging
+    from repro.kernels.bitset_fold import ref
+
+    assert merging.C_CLAMP == ref.C_CLAMP == 1 << 30
+    assert merging.THETA_SHIFT == ref.THETA_SHIFT == 20
+
+
+def test_theta_accept_agrees_at_clamp_boundary():
+    """Host int64 and device 32-bit-limb θ̂ acceptance agree across the
+    clamp boundary and the full θ̂ range — including denominators at
+    C_CLAMP, where naive 32-bit arithmetic would overflow."""
+    import jax.numpy as jnp
+
+    from repro.core.merging import C_CLAMP, theta_accept_host, theta_to_p
+    from repro.kernels.bitset_fold import ref
+
+    rng = np.random.default_rng(0)
+    edge = np.array([0, 1, 2, C_CLAMP - 2, C_CLAMP - 1, C_CLAMP],
+                    dtype=np.int64)
+    denom = np.concatenate([edge, rng.integers(1, C_CLAMP, 64)])
+    numer = np.minimum(
+        np.concatenate([edge, rng.integers(0, C_CLAMP, 64)]), denom)
+    for theta in (0.0, 1e-9, 1.0 / 3.0, 0.5, 1.0 - 1e-9, 1.0):
+        p = theta_to_p(theta)
+        want = theta_accept_host(numer, denom, p)
+        got = np.asarray(ref.theta_accept(
+            jnp.asarray(numer.astype(np.int32)),
+            jnp.asarray(denom.astype(np.int32)), jnp.uint32(p)))
+        assert np.array_equal(got, want), theta
+
+
+def test_workspace_counts_are_int32_and_clamped():
+    """CNT/selfc live as exact integers (ISSUE 7 satellite): int32 dtype,
+    and the possible-pairs terms never exceed C_CLAMP even for counts at
+    the clamp boundary."""
+    from repro.core.merging import (BatchedGroupWorkspace, C_CLAMP,
+                                    MergePlan, poss_pair_i, poss_self_i)
+
+    g = GG.caveman(2, 6, 0.0, seed=0)
+    st = SluggerState(g)
+    ws = BatchedGroupWorkspace.build_bucket(
+        st, [np.arange(6)], 6, plans=[MergePlan(np.arange(6))],
+        group_seeds=np.ones(1, dtype=np.uint64))[0]
+    assert ws.CNT.dtype == np.int32
+    assert np.issubdtype(ws.selfc.dtype, np.integer)  # exact, never float
+    big = np.array([1, 1 << 16, C_CLAMP - 1, C_CLAMP], dtype=np.int64)
+    assert (poss_pair_i(big, big) <= C_CLAMP).all()
+    assert (poss_self_i(big) <= C_CLAMP).all()
+    assert poss_pair_i(np.array([C_CLAMP]), np.array([C_CLAMP]))[0] == C_CLAMP
+
+
+# -- u32 hash twins -----------------------------------------------------------
+def test_hash_u32_twins_bit_identical():
+    """The NumPy mix, the distributed jnp mix, and the carry-op jnp mix are
+    one function in three dialects."""
+    import jax.numpy as jnp
+
+    from repro.core import distributed as D
+    from repro.kernels.bitset_fold import carry
+
+    x = np.arange(4096, dtype=np.uint32)
+    for seed in (0, 1, 7, 123456789):
+        a, b = u32_seed_consts(seed)
+        want = hash_u32(x, a, b)
+        d1 = np.asarray(D._hash_u32(jnp.asarray(x), jnp.uint32(a),
+                                    jnp.uint32(b)))
+        d2 = np.asarray(carry._hash_u32(jnp.asarray(x), jnp.uint32(a),
+                                        jnp.uint32(b)))
+        assert np.array_equal(d1.astype(np.uint32), want)
+        assert np.array_equal(d2.astype(np.uint32), want)
