@@ -38,12 +38,12 @@ def main(argv=None):
     ap.add_argument("--only", default=None, help="comma-separated suite names")
     args = ap.parse_args(argv)
     only = args.only.split(",") if args.only else list(SUITES)
-    t0 = time.time()
+    t0 = time.perf_counter()
     for name in only:
-        t1 = time.time()
+        t1 = time.perf_counter()
         SUITES[name](quick=not args.full)
-        print(f"   [{name} done in {time.time()-t1:.1f}s]")
-    print(f"\nAll benchmarks done in {time.time()-t0:.1f}s")
+        print(f"   [{name} done in {time.perf_counter()-t1:.1f}s]")
+    print(f"\nAll benchmarks done in {time.perf_counter()-t0:.1f}s")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,28 @@
+"""`repro.analysis` — the repo's own static-analysis layer (DESIGN.md §10).
+
+Every guarantee the engines ship — bit-identical summaries across the
+numpy/batched/resident/mesh backends, plan-replay determinism, the resident
+path's transfer accounting — rests on a handful of coding contracts that
+used to live only in reviewers' heads and slow end-to-end bit-identity
+tests. This package makes them cheap, static and NAMED:
+
+* `repro.analysis.core`     — the rule engine: `Finding`, `Rule`,
+  inline ``# lint: disable=RULE -- reason`` suppressions, module walking.
+* `repro.analysis.rules`    — the rule catalog (SEED-DISCIPLINE,
+  JIT-CACHE-BOUND, INT-RANK-ONLY, …), each documenting the contract it
+  encodes and the PR/bug that motivated it.
+* `repro.analysis.baseline` — the checked-in grandfather list
+  (``baseline.json``): intentional exemptions, each with a written
+  justification; stale entries are themselves an error.
+* `repro.analysis.lint`     — the CLI:
+  ``python -m repro.analysis.lint src tests benchmarks`` exits nonzero on
+  any NEW violation (<10s cold, stdlib-only — it is the first CI gate).
+
+No dependencies beyond the stdlib: the linter must run before (and
+regardless of) jax/numpy being importable.
+"""
+from repro.analysis.core import Finding, Rule, TreeRule, lint_paths, lint_source
+from repro.analysis.rules import RULES, rules_by_name
+
+__all__ = ["Finding", "Rule", "TreeRule", "RULES", "rules_by_name",
+           "lint_paths", "lint_source"]

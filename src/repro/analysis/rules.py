@@ -1,0 +1,484 @@
+"""The invariant catalog: one `Rule` per contract the repo's bug history
+taught us to enforce (DESIGN.md §10 documents each with its motivating PR).
+
+Every rule names the contract, the incident that motivated it, and its
+scope. Suppress a deliberate exception inline with
+
+    # lint: disable=RULE -- why this site is exempt
+
+or grandfather it in ``baseline.json`` with a written justification.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+
+from repro.analysis.core import Finding, Rule, TreeRule
+
+
+def dotted(node) -> str:
+    """Dotted name of an expression ('np.random.default_rng'), or ''."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _walk_calls(tree):
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            yield node
+
+
+# ---------------------------------------------------------------------------
+# SEED-DISCIPLINE
+# ---------------------------------------------------------------------------
+class SEED_DISCIPLINE(Rule):
+    name = "SEED-DISCIPLINE"
+    summary = ("RNG must flow through SeedSequence.spawn / "
+               "shingle_seed_streams — no global-state RNG, no hand-rolled "
+               "seed arithmetic")
+    contract = (
+        "Determinism across partitions/backends/thread schedules rests on "
+        "every RNG stream being a SeedSequence child. Arithmetic on raw "
+        "seeds aliases: the pre-PR-4 `seed * 7919 + t` collided (seed=0, "
+        "t=7919 ≡ seed=1, t=0) and silently correlated iterations. "
+        "Global-state RNG (`np.random.rand`, stdlib `random.*`) is "
+        "order-dependent and thread-hostile. Flags: legacy "
+        "`np.random.<fn>()` module-level draws, stdlib `random.<fn>()` "
+        "draws, and `default_rng`/`SeedSequence` whose seed argument is an "
+        "arithmetic expression. Derive streams with "
+        "`SeedSequence(seed).spawn(n)` or entropy tuples "
+        "`SeedSequence((seed, tag))` instead (PR 4; core/engine.py).")
+    scope = ("src/repro/",)
+    exclude = ("src/repro/analysis/",)
+
+    _LEGACY_NP = {
+        "seed", "rand", "randn", "randint", "random", "random_sample",
+        "choice", "shuffle", "permutation", "normal", "uniform", "zipf",
+        "poisson", "binomial", "exponential", "bytes",
+    }
+    _STDLIB = {
+        "seed", "random", "randint", "randrange", "choice", "choices",
+        "shuffle", "sample", "uniform", "gauss", "getrandbits",
+    }
+    _SEEDED = ("default_rng", "SeedSequence")
+
+    def check(self, ctx):
+        has_stdlib_random = any(
+            isinstance(n, ast.Import)
+            and any(a.name == "random" for a in n.names)
+            for n in ast.walk(ctx.tree))
+        for call in _walk_calls(ctx.tree):
+            fn = dotted(call.func)
+            if not fn:
+                continue
+            parts = fn.split(".")
+            if (len(parts) == 3 and parts[0] in ("np", "numpy")
+                    and parts[1] == "random"
+                    and parts[2] in self._LEGACY_NP):
+                yield ctx.finding(self, call,
+                                  f"legacy global-state RNG `{fn}()`; draw "
+                                  f"from a `SeedSequence`-derived Generator")
+            elif (has_stdlib_random and len(parts) == 2
+                  and parts[0] == "random" and parts[1] in self._STDLIB):
+                yield ctx.finding(self, call,
+                                  f"stdlib `{fn}()` is global-state RNG; "
+                                  f"use a `SeedSequence`-derived Generator")
+            elif parts[-1] in self._SEEDED and call.args:
+                seed = call.args[0]
+                if isinstance(seed, (ast.BinOp, ast.UnaryOp)):
+                    yield ctx.finding(
+                        self, call,
+                        f"hand-rolled seed arithmetic in `{parts[-1]}(...)`"
+                        f" can alias streams; spawn a child stream or pass "
+                        f"an entropy tuple `SeedSequence((seed, tag))`")
+
+
+# ---------------------------------------------------------------------------
+# JIT-CACHE-BOUND
+# ---------------------------------------------------------------------------
+class JIT_CACHE_BOUND(Rule):
+    name = "JIT-CACHE-BOUND"
+    summary = ("module-level executable caches must be "
+               "`kernels.common.LruCache`, never a bare dict")
+    contract = (
+        "Compiled jit/shard_map/pallas executables hold device buffers; a "
+        "module-level dict keyed on padded shapes grows for the life of "
+        "the process as batch shapes drift (the pre-PR-5 leak: one "
+        "executable per shape, forever). Any module-level assignment of a "
+        "`{}`/`dict()`/`OrderedDict()` to a name containing 'CACHE' must "
+        "be `kernels.common.LruCache` instead (ISSUE 5; "
+        "kernels/common.py).")
+    scope = ("src/repro/",)
+    exclude = ("src/repro/analysis/",)
+
+    def check(self, ctx):
+        for node in ctx.tree.body:  # module level only
+            targets = []
+            value = None
+            if isinstance(node, ast.Assign):
+                targets, value = node.targets, node.value
+            elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                targets, value = [node.target], node.value
+            for t in targets:
+                if not (isinstance(t, ast.Name) and "CACHE" in t.id.upper()):
+                    continue
+                bare = isinstance(value, ast.Dict) or (
+                    isinstance(value, ast.Call)
+                    and dotted(value.func).split(".")[-1] in ("dict",
+                                                              "OrderedDict"))
+                if bare:
+                    yield ctx.finding(
+                        self, node,
+                        f"module-level cache `{t.id}` is an unbounded dict; "
+                        f"executables leak per shape — use "
+                        f"`kernels.common.LruCache`")
+
+
+# ---------------------------------------------------------------------------
+# INT-RANK-ONLY
+# ---------------------------------------------------------------------------
+class INT_RANK_ONLY(Rule):
+    name = "INT-RANK-ONLY"
+    summary = ("no float division or float-literal comparison in the "
+               "merge decision paths (rank/Saving/θ)")
+    contract = (
+        "PR 5/6 rebuilt ranking and Saving acceptance on integer-only "
+        "keys (`rank_keys`, cross-product rational compares, quantized "
+        "θ̂) so numpy/XLA/Pallas order candidates bit-identically — float "
+        "division rounds differently across substrates and silently "
+        "splits backends. In the decision-path modules "
+        "(core/merging.py, core/distributed.py, kernels/bitset_fold/) "
+        "true division `/` and float-literal comparisons are banned; "
+        "float similarity VIEWS for diagnostics are fine but must be "
+        "baselined or suppressed with a justification saying no decision "
+        "reads them (ISSUE 5/7; DESIGN.md §9).")
+    scope = ("src/repro/core/merging.py", "src/repro/core/distributed.py",
+             "src/repro/kernels/bitset_fold/")
+
+    def check(self, ctx):
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Div):
+                yield ctx.finding(
+                    self, node,
+                    "float (true) division in a decision-path module; use "
+                    "integer keys (`rank_keys`) / exact rational compares, "
+                    "or justify the float view")
+            elif isinstance(node, ast.Compare):
+                operands = [node.left] + list(node.comparators)
+                if any(isinstance(o, ast.Constant)
+                       and isinstance(o.value, float) for o in operands):
+                    yield ctx.finding(
+                        self, node,
+                        "comparison against a float literal in a "
+                        "decision-path module; quantize to the integer "
+                        "contract (theta_to_p / rank_keys)")
+
+
+# ---------------------------------------------------------------------------
+# NONDET-ITER
+# ---------------------------------------------------------------------------
+class NONDET_ITER(Rule):
+    name = "NONDET-ITER"
+    summary = ("no iteration over sets (or .keys()) in canonical-order "
+               "paths without an explicit sorted(...)")
+    contract = (
+        "Merge replay, emission and pruning promise canonical order: "
+        "summaries are bit-identical for any partition count, backend or "
+        "thread schedule, which every equivalence test leans on. "
+        "Iterating a set (or materializing one via list()/np.asarray()) "
+        "exposes hash-table order — stable only by accident of insertion "
+        "history. In the canonical-order modules, wrap set iteration in "
+        "`sorted(...)` (insertion-ordered dict iteration is allowed; the "
+        "determinism argument covers it). Motivated by the PR-4 exchange "
+        "replay contract (DESIGN.md §8).")
+    scope = ("src/repro/core/slugger.py", "src/repro/core/engine.py",
+             "src/repro/core/merging.py", "src/repro/core/encode_batched.py",
+             "src/repro/core/encode_dp.py", "src/repro/core/pruning.py",
+             "src/repro/core/summary.py", "src/repro/core/summary_ir.py",
+             "src/repro/core/minhash.py", "src/repro/graphs/partitioned.py",
+             "src/repro/graphs/csr.py")
+
+    _MATERIALIZERS = ("list", "tuple", "np.asarray", "np.array",
+                      "numpy.asarray", "numpy.array", "np.fromiter",
+                      "enumerate")
+
+    def _set_names(self, func_node):
+        """Local names bound to an obvious set expression in this scope."""
+        names = set()
+        for node in ast.walk(func_node):
+            if isinstance(node, ast.Assign) and self._is_set_expr(node.value):
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        names.add(t.id)
+        return names
+
+    @staticmethod
+    def _is_set_expr(node) -> bool:
+        return (isinstance(node, (ast.Set, ast.SetComp))
+                or (isinstance(node, ast.Call)
+                    and dotted(node.func) in ("set", "frozenset")))
+
+    def _is_set_valued(self, node, set_names) -> bool:
+        if self._is_set_expr(node):
+            return True
+        if isinstance(node, ast.Name) and node.id in set_names:
+            return True
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "keys"):
+            return True
+        return False
+
+    def check(self, ctx):
+        funcs = [n for n in ast.walk(ctx.tree)
+                 if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+        scopes = [(f, self._set_names(f)) for f in funcs] or [(ctx.tree,
+                                                               set())]
+        seen = set()
+        for func, set_names in scopes:
+            for node in ast.walk(func):
+                iters = []
+                if isinstance(node, ast.For):
+                    iters.append(node.iter)
+                elif isinstance(node, (ast.ListComp, ast.SetComp,
+                                       ast.GeneratorExp, ast.DictComp)):
+                    iters.extend(g.iter for g in node.generators)
+                elif (isinstance(node, ast.Call)
+                      and dotted(node.func) in self._MATERIALIZERS
+                      and node.args):
+                    iters.append(node.args[0])
+                for it in iters:
+                    if (self._is_set_valued(it, set_names)
+                            and id(it) not in seen):
+                        seen.add(id(it))
+                        yield ctx.finding(
+                            self, it,
+                            "iteration over a set exposes hash order in a "
+                            "canonical-order path; wrap in `sorted(...)`")
+
+
+# ---------------------------------------------------------------------------
+# NO-RECURSION-LIMIT
+# ---------------------------------------------------------------------------
+class NO_RECURSION_LIMIT(Rule):
+    name = "NO-RECURSION-LIMIT"
+    summary = "`sys.setrecursionlimit` is banned"
+    contract = (
+        "Raising the interpreter recursion limit is how the seed emitter "
+        "masked an O(height) recursive DP until deep forests overflowed "
+        "the C stack anyway; PR 2 replaced the production emitter with "
+        "level-synchronous array passes and deleted the module-level "
+        "bump. New code must be iterative. The one sanctioned exception "
+        "(the reference emitter kept for cross-checking, scoped and "
+        "restored in a finally) carries an inline suppression "
+        "(ISSUE 2/3; core/slugger.py).")
+    scope = ("src/repro/", "benchmarks/")
+
+    def check(self, ctx):
+        for call in _walk_calls(ctx.tree):
+            if dotted(call.func).split(".")[-1] == "setrecursionlimit":
+                yield ctx.finding(
+                    self, call,
+                    "`sys.setrecursionlimit` call; restructure to "
+                    "iteration (flat IR / explicit stack)")
+
+
+# ---------------------------------------------------------------------------
+# DTYPE-WIDTH
+# ---------------------------------------------------------------------------
+class DTYPE_WIDTH(Rule):
+    name = "DTYPE-WIDTH"
+    summary = ("no int64/uint64 dtypes on device-bound tensors "
+               "(x64 is disabled; jax truncates silently)")
+    contract = (
+        "Device arrays run with x64 disabled: `jnp.int64` resolves to "
+        "int32 with only a warning, and shipping an int64 host array "
+        "through `jnp.asarray`/`device_put` truncates the same way — the "
+        "PR-3 conftest guard catches this at RUNTIME via the "
+        "'Explicitly requested dtype' warning; this rule catches the "
+        "pattern statically. Flags any `jnp.int64`/`jnp.uint64` "
+        "reference, and 64-bit integer dtype arguments handed directly "
+        "to a device-upload call. Stage device-bound tensors as "
+        "int32/uint32 explicitly (ISSUE 3; tests/conftest.py).")
+    scope = ("src/repro/",)
+    exclude = ("src/repro/analysis/",)
+
+    _UPLOADERS = {"jnp.asarray", "jnp.array", "jnp.arange", "jnp.zeros",
+                  "jnp.ones", "jnp.full", "jax.device_put"}
+    _WIDE = {"jnp.int64", "jnp.uint64", "np.int64", "np.uint64",
+             "numpy.int64", "numpy.uint64", "int64", "uint64"}
+
+    def check(self, ctx):
+        for node in ast.walk(ctx.tree):
+            if (isinstance(node, ast.Attribute)
+                    and dotted(node) in ("jnp.int64", "jnp.uint64")):
+                yield ctx.finding(
+                    self, node,
+                    f"`{dotted(node)}` on a device tensor silently "
+                    f"truncates to 32 bits under disabled x64; use an "
+                    f"explicit 32-bit dtype")
+            elif (isinstance(node, ast.Call)
+                  and dotted(node.func) in self._UPLOADERS):
+                wide = [a for a in list(node.args) + [k.value for k in
+                                                      node.keywords]
+                        if dotted(a) in self._WIDE
+                        or (isinstance(a, ast.Call)
+                            and isinstance(a.func, ast.Attribute)
+                            and a.func.attr == "astype"
+                            and any(dotted(x) in self._WIDE
+                                    for x in a.args))]
+                for a in wide:
+                    yield ctx.finding(
+                        self, node,
+                        "64-bit integer dtype handed to a device upload; "
+                        "it truncates to 32 bits under disabled x64 — "
+                        "stage as int32/uint32 explicitly")
+
+
+# ---------------------------------------------------------------------------
+# HOST-SYNC-IN-LOOP
+# ---------------------------------------------------------------------------
+class HOST_SYNC_IN_LOOP(Rule):
+    name = "HOST-SYNC-IN-LOOP"
+    summary = ("device→host syncs inside round/carry loops must be "
+               "transfer-accounted (TransferCounter)")
+    contract = (
+        "The resident backend's whole benchmark story (`BENCH_resident` "
+        "gates bytes/round and bytes/iteration) assumes EVERY host↔device "
+        "crossing reports to `core.transfer`. A stray `np.asarray(...)`/"
+        "`.item()`/`device_get` inside a merge-round or carry loop is an "
+        "unaccounted blocking sync: it corrupts the byte ledger and "
+        "serializes the device pipeline. In the residency modules, any "
+        "materializing sync lexically inside a for/while whose enclosing "
+        "function never touches a `add_d2h`/`add_h2d` counter is flagged "
+        "(ISSUE 6/7; core/transfer.py, DESIGN.md §9).")
+    scope = ("src/repro/core/resident.py", "src/repro/core/merging.py",
+             "src/repro/core/engine.py", "src/repro/kernels/bitset_fold/")
+
+    _SYNC_FNS = {"jax.device_get", "np.asarray", "numpy.asarray"}
+    _SYNC_METHODS = {"item", "block_until_ready"}
+
+    def _is_sync(self, call) -> bool:
+        fn = dotted(call.func)
+        if fn in self._SYNC_FNS:
+            # only flag materialization of a call result or device-state
+            # attribute (`self._bits`-style) — host-array reshuffles with a
+            # plain name argument are not syncs
+            arg = call.args[0] if call.args else None
+            return isinstance(arg, ast.Call) or (
+                isinstance(arg, ast.Attribute) and arg.attr.startswith("_"))
+        return (isinstance(call.func, ast.Attribute)
+                and call.func.attr in self._SYNC_METHODS
+                and not call.args)
+
+    def check(self, ctx):
+        funcs = [n for n in ast.walk(ctx.tree)
+                 if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+        for func in funcs:
+            accounted = any(
+                isinstance(c.func, ast.Attribute)
+                and c.func.attr in ("add_d2h", "add_h2d")
+                for c in _walk_calls(func))
+            if accounted:
+                continue
+            for loop in ast.walk(func):
+                if not isinstance(loop, (ast.For, ast.While)):
+                    continue
+                for call in _walk_calls(loop):
+                    if self._is_sync(call):
+                        yield ctx.finding(
+                            self, call,
+                            "device sync inside a loop with no transfer "
+                            "accounting in scope; route it through "
+                            "`TransferCounter.add_d2h/add_h2d`")
+
+
+# ---------------------------------------------------------------------------
+# KERNEL-TRIPLE
+# ---------------------------------------------------------------------------
+class KERNEL_TRIPLE(TreeRule):
+    name = "KERNEL-TRIPLE"
+    summary = ("every kernels/<name>/ ships kernel.py + ops.py + ref.py "
+               "and is referenced by a test")
+    contract = (
+        "The kernel contract since PR 1: `kernel.py` (Pallas), `ops.py` "
+        "(dispatch + jit cache), `ref.py` (jnp twin the parity tests pin "
+        "the kernel to). A kernel directory missing a leg — or not "
+        "referenced by any test under tests/ — has no enforced parity "
+        "and WILL drift from its backends (DESIGN.md §3/§9).")
+
+    _REQUIRED = ("kernel.py", "ops.py", "ref.py")
+
+    def check_tree(self, root, relpaths):
+        kdir = os.path.join(root, "src", "repro", "kernels")
+        if not os.path.isdir(kdir):
+            return
+        test_blob = ""
+        tdir = os.path.join(root, "tests")
+        if os.path.isdir(tdir):
+            for fn in sorted(os.listdir(tdir)):
+                if fn.endswith(".py"):
+                    with open(os.path.join(tdir, fn),
+                              encoding="utf-8") as fh:
+                        test_blob += fh.read()
+        for name in sorted(os.listdir(kdir)):
+            sub = os.path.join(kdir, name)
+            if not os.path.isdir(sub) or name == "__pycache__":
+                continue
+            relsub = f"src/repro/kernels/{name}"
+            for req in self._REQUIRED:
+                if not os.path.isfile(os.path.join(sub, req)):
+                    yield Finding(
+                        rule=self.name, path=relsub, line=1, col=0,
+                        symbol="<package>", snippet=name,
+                        message=(f"kernel package `{name}` is missing "
+                                 f"`{req}` (kernel/ops/ref triple)"))
+            if not re.search(rf"kernels[./]{re.escape(name)}", test_blob):
+                yield Finding(
+                    rule=self.name, path=relsub, line=1, col=0,
+                    symbol="<package>", snippet=name,
+                    message=(f"kernel package `{name}` is not referenced "
+                             f"by any test under tests/ — no parity "
+                             f"enforcement"))
+
+
+# ---------------------------------------------------------------------------
+# TIME-MONOTONIC
+# ---------------------------------------------------------------------------
+class TIME_MONOTONIC(Rule):
+    name = "TIME-MONOTONIC"
+    summary = ("duration measurement uses time.perf_counter(), never "
+               "time.time()")
+    contract = (
+        "`time.time()` is wall-clock: NTP steps/slews move it mid-"
+        "measurement, which corrupts the speedup ratios the BENCH_*.json "
+        "gates compare against (a one-second step during a 3-second "
+        "phase flips a 1.6x gate). All duration measurement in "
+        "benchmarks/ and launch/ uses the monotonic "
+        "`time.perf_counter()`; a genuine wall-clock timestamp (artifact "
+        "metadata) takes an inline suppression (ISSUE 8 satellite).")
+    scope = ("benchmarks/", "src/repro/launch/")
+
+    def check(self, ctx):
+        for call in _walk_calls(ctx.tree):
+            if dotted(call.func) == "time.time":
+                yield ctx.finding(
+                    self, call,
+                    "`time.time()` is not monotonic; use "
+                    "`time.perf_counter()` for durations")
+
+
+RULES = (SEED_DISCIPLINE(), JIT_CACHE_BOUND(), INT_RANK_ONLY(),
+         NONDET_ITER(), NO_RECURSION_LIMIT(), DTYPE_WIDTH(),
+         HOST_SYNC_IN_LOOP(), KERNEL_TRIPLE(), TIME_MONOTONIC())
+
+
+def rules_by_name():
+    return {r.name: r for r in RULES}

@@ -301,15 +301,22 @@ class GroupWorkspace:
         self.cost_row[i] = c.sum() + _pair_cost(np.array([self.selfc[i]]), np.array([poss_self]))[0] + self.nd[i]
 
     # -- partner ranking -----------------------------------------------------
-    def jaccard_to(self, a: int, cand: np.ndarray) -> np.ndarray:
-        inter = popcount(self.bits[a][None, :] & self.bits[cand]).sum(axis=1, dtype=np.int64).astype(np.float64)
+    def rank_to(self, a: int, cand: np.ndarray) -> np.ndarray:
+        """Quantized integer Jaccard ranking keys of `cand` against row `a`
+        (same `rank_keys` contract the batched/resident rankers use — no
+        float division anywhere in the decision path)."""
+        inter = popcount(self.bits[a][None, :] & self.bits[cand]).sum(axis=1, dtype=np.int64)
         da = popcount(self.bits[a]).sum(dtype=np.int64)
         dz = popcount(self.bits[cand]).sum(axis=1, dtype=np.int64)
-        union = (da + dz - inter).astype(np.float64)
-        return np.where(union > 0, inter / np.maximum(union, 1), 0.0)
+        return rank_keys(inter, da, dz)
 
     # -- exact Saving (Eq. 8) -------------------------------------------------
-    def savings(self, a: int, cand: np.ndarray, height_bound=None) -> np.ndarray:
+    def saving_terms(self, a: int, cand: np.ndarray, height_bound=None):
+        """Integer Saving terms ``(numer, denom, valid)`` with
+        ``Saving = 1 − numer/denom``: the sequential twin of
+        `BatchedGroupWorkspace.saving_terms_rows`. Everything stays int64
+        (no C_CLAMP here — the dense view never squares group sizes past
+        the arena bound), so sweeps can compare Savings as exact rationals."""
         merged = self.CNT[a][None, :] + self.CNT[cand]
         s_m = self.s[a] + self.s[cand]
         poss = s_m[:, None] * self.colsize[None, :]
@@ -321,13 +328,21 @@ class GroupWorkspace:
         self_m = self.selfc[a] + self.selfc[cand] + cab
         poss_self = s_m * (s_m - 1) // 2
         total += _pair_cost(self_m, poss_self)
-        numer = total + self.nd[a] + self.nd[cand] + 2.0
+        numer = total + self.nd[a] + self.nd[cand] + 2
         pair_c = _pair_cost(cab, self.s[a] * self.s[cand])
         denom = self.cost_row[a] + self.cost_row[cand] - pair_c
-        sav = np.where(denom > 0, 1.0 - numer / np.maximum(denom, 1e-12), -np.inf)
+        valid = denom > 0
         if height_bound is not None:
             new_h = np.maximum(self.hgt[a], self.hgt[cand]) + 1
-            sav = np.where(new_h > height_bound, -np.inf, sav)
+            valid &= new_h <= height_bound
+        return numer.astype(np.int64), denom.astype(np.int64), valid
+
+    def savings(self, a: int, cand: np.ndarray, height_bound=None) -> np.ndarray:
+        """Float VIEW of `saving_terms` (diagnostics and the approximate
+        `distributed.summarize_jax` engine); no exact decision reads it."""
+        numer, denom, valid = self.saving_terms(a, cand, height_bound)
+        sav = np.where(  # lint: disable=INT-RANK-ONLY -- float view of the integer terms; exact sweeps compare saving_terms rationals instead
+            valid, 1.0 - numer / np.maximum(denom, 1), -np.inf)
         return sav
 
     # -- merge ---------------------------------------------------------------
@@ -385,9 +400,19 @@ class GroupWorkspace:
 def _sweep_sequential(ws: GroupWorkspace, theta: float,
                       rng: np.random.Generator, top_j: int = 16,
                       height_bound=None) -> int:
-    """Algorithm 2 over one built workspace. Returns the number of merges."""
+    """Algorithm 2 over one built workspace. Returns the number of merges.
+
+    Decisions are integer-exact end to end: candidates are ranked by the
+    quantized `rank_keys`, the best partner is the exact-rational argmax of
+    the `saving_terms` fractions (cross-product compare, strict `<` so ties
+    keep the earlier-ranked candidate), and acceptance is the quantized
+    θ̂ = P/2^THETA_SHIFT integer inequality — the same contract the batched
+    sweep applies, so oversized groups that fall back to this path merge
+    identically under every backend.
+    """
     k = len(ws.members)
     queue = list(rng.permutation(k))
+    theta_p = theta_to_p(theta)
     merges = 0
     while len(queue) > 1:
         a = queue.pop()
@@ -397,12 +422,23 @@ def _sweep_sequential(ws: GroupWorkspace, theta: float,
         if cand.size == 0:
             break
         if cand.size > top_j:
-            jac = ws.jaccard_to(a, cand)
-            cand = cand[np.argsort(-jac, kind="stable")[:top_j]]
-        sav = ws.savings(a, cand, height_bound=height_bound)
-        j = int(np.argmax(sav))
-        if sav[j] >= theta and np.isfinite(sav[j]):
-            z = int(cand[j])
+            keys = ws.rank_to(a, cand)
+            cand = cand[np.argsort(-keys, kind="stable")[:top_j]]
+        numer, denom, valid = ws.saving_terms(a, cand,
+                                              height_bound=height_bound)
+        # exact rational argmax of 1 − n/d over the valid candidates:
+        # Python ints, so the cross products can't overflow int64
+        best = -1
+        n_b = d_b = 0
+        for j in range(cand.size):
+            if not valid[j]:
+                continue
+            n_j, d_j = int(numer[j]), int(denom[j])
+            if best < 0 or n_j * d_b < n_b * d_j:
+                best, n_b, d_b = j, n_j, d_j
+        if best >= 0 and n_b <= d_b and (
+                (d_b - n_b) << THETA_SHIFT) >= theta_p * d_b:
+            z = int(cand[best])
             ws.merge(a, z)
             queue = [q for q in queue if q != z]
             queue.insert(0, a)  # merged node rejoins Q (Alg. 2 line 8)
@@ -705,7 +741,8 @@ class BatchedGroupWorkspace:
         sweep itself compares the integer terms exactly)."""
         numer, denom, valid = self.saving_terms_rows(
             rb, rr, cands, height_bound=height_bound)
-        return np.where(valid, 1.0 - numer / np.maximum(denom, 1), -np.inf)
+        return np.where(  # lint: disable=INT-RANK-ONLY -- float view of the integer terms; the sweep compares saving_terms_rows rationals instead
+            valid, 1.0 - numer / np.maximum(denom, 1), -np.inf)
 
     # -- batched merge application -----------------------------------------
     def apply_merges(self, b: np.ndarray, a: np.ndarray, z: np.ndarray,

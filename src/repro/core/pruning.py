@@ -422,7 +422,7 @@ class _IRWork:
                 kids_mut[p] = pk
                 dirty[p] = True
             parent[a] = -2
-            for w in touched:
+            for w in sorted(touched):
                 dirty[w] = True
                 if parent[w] >= 0:
                     dirty[parent[w]] = True

@@ -278,6 +278,7 @@ def _emit_encoding_reference(state: SluggerState) -> Summary:
     # locally instead of mutating it for the whole process.
     limit = int(4 * state.height[: state.n_ids].max() + 2000)
     old_limit = sys.getrecursionlimit()
+    # lint: disable=NO-RECURSION-LIMIT -- reference emitter only: scoped to this call, restored in the finally, and the recursive-DP cross-check is the point
     sys.setrecursionlimit(max(old_limit, limit))
     try:
         for r in np.unique(root_of):
@@ -315,6 +316,7 @@ def _emit_encoding_reference(state: SluggerState) -> Summary:
                     _, ee = encode_dp.encode_pair(tvs[A], tvs[B], pa, pb)
                 edges_out.extend(ee)
     finally:
+        # lint: disable=NO-RECURSION-LIMIT -- restores the caller's limit after the reference emitter's scoped bump above
         sys.setrecursionlimit(old_limit)
 
     parent = state.parent[: state.n_ids].copy()

@@ -19,7 +19,9 @@ class TokenStream:
         self.vocab, self.batch, self.seq, self.seed, self.zipf_a = vocab, batch, seq, seed, zipf_a
 
     def batch_np(self, step: int) -> np.ndarray:
-        rng = np.random.default_rng((self.seed << 20) ^ step)
+        # entropy tuple, not seed arithmetic: (seed << 20) ^ step aliased
+        # streams whenever step spilled past 20 bits
+        rng = np.random.default_rng(np.random.SeedSequence((self.seed, step)))
         # zipf over a permuted vocab + short repeated motifs (compressible)
         raw = rng.zipf(self.zipf_a, size=(self.batch, self.seq + 1)).astype(np.int64)
         toks = (raw - 1) % self.vocab
@@ -48,11 +50,13 @@ def make_batch(cfg, stream: TokenStream, step: int, mesh=None, dp_axes=("data",)
     toks = stream.batch_np(step) if mesh is None else stream.batch_sharded(step, mesh, dp_axes)
     batch = {"tokens": jnp.asarray(toks) if mesh is None else toks}
     if cfg.encoder_layers:
-        rng = np.random.default_rng(step * 7 + 1)
+        rng = np.random.default_rng(
+            np.random.SeedSequence((stream.seed, step, 1)))
         batch["frames"] = jnp.asarray(
             rng.normal(size=(stream.batch, stream.seq, cfg.d_model)), jnp.dtype(cfg.dtype))
     elif cfg.n_patches:
-        rng = np.random.default_rng(step * 7 + 2)
+        rng = np.random.default_rng(
+            np.random.SeedSequence((stream.seed, step, 2)))
         batch["embeds"] = jnp.asarray(
             rng.normal(size=(stream.batch, cfg.n_patches, cfg.d_model)), jnp.dtype(cfg.dtype))
     return batch

@@ -12,10 +12,10 @@ from __future__ import annotations
 import numpy as np
 import jax
 
-from repro.kernels.common import default_interpret, pow2
+from repro.kernels.common import LruCache, default_interpret, pow2
 from repro.kernels.interval_expand.kernel import interval_count_kernel
 
-_JIT_CACHE: dict = {}
+_JIT_CACHE = LruCache(16)
 
 
 def batch_interval_counts(lo: np.ndarray, hi: np.ndarray, sign: np.ndarray,

@@ -13,10 +13,10 @@ from __future__ import annotations
 import numpy as np
 import jax
 
-from repro.kernels.common import default_interpret, pow2
+from repro.kernels.common import LruCache, default_interpret, pow2
 from repro.kernels.seghist.kernel import segment_histogram_kernel
 
-_JIT_CACHE: dict = {}
+_JIT_CACHE = LruCache(16)
 
 
 def membership_counts(state_of_edge: np.ndarray, num_states: int,

@@ -78,10 +78,10 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, out_dir: str,
     chips = mesh.devices.size
     if microbatch is None and shape.kind == "train" and cfg.train_microbatch:
         microbatch = cfg.train_microbatch  # per-arch default (fits 16 GiB)
-    t0 = time.time()
+    t0 = time.perf_counter()
     try:
         compiled = _lower_compiled(cfg, shape, mesh, dp, microbatch, absorbed_mla, moment_dtype)
-        compile_s = time.time() - t0
+        compile_s = time.perf_counter() - t0
         hlo = compiled.as_text()
         # RL.from_compiled runs the trip-count-aware HLO analyzer (XLA's own
         # cost_analysis counts while bodies once — wrong for scanned layers).
@@ -154,7 +154,7 @@ def run_summarize_cell(mesh_name: str, out_dir: str, force: bool = False,
     espec = NamedSharding(mesh, dspec)
     rspec = NamedSharding(mesh, P(None))
     out_sh = (NamedSharding(mesh, dspec), NamedSharding(mesh, dspec)) if sharded_out else None
-    t0 = time.time()
+    t0 = time.perf_counter()
     lowered = jax.jit(step, in_shardings=(espec, espec, rspec, None),
                       out_shardings=out_sh).lower(
         jax.ShapeDtypeStruct((n_edges,), jnp.int32),
@@ -172,7 +172,7 @@ def run_summarize_cell(mesh_name: str, out_dir: str, force: bool = False,
         "variant": variant, "chips": chips,
         "hlo_flops": float(res["flops"]) * chips, "hlo_bytes": float(res["bytes"]) * chips,
         "coll_bytes": float(res["coll_bytes"]) * chips,
-        "coll_breakdown": coll, "compile_s": time.time() - t0,
+        "coll_breakdown": coll, "compile_s": time.perf_counter() - t0,
         "t_compute": float(res["flops"]) / RL.PEAK_FLOPS,
         "t_memory": float(res["bytes"]) / RL.HBM_BW,
         "t_collective": float(res["coll_bytes"]) / (RL.ICI_BW * RL.ICI_LINKS),

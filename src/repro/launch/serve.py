@@ -85,9 +85,9 @@ def main(argv=None):
     server = BatchServer(cfg, params)
     rng = np.random.default_rng(1)
     prompts = [rng.integers(0, cfg.vocab, size=args.prompt_len) for _ in range(args.requests)]
-    t0 = time.time()
+    t0 = time.perf_counter()
     outs = server.run(prompts, gen_tokens=args.gen)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     total = args.requests * args.gen
     print(f"[serve] {args.requests} requests × {args.gen} tokens in {dt:.2f}s "
           f"({total/dt:.1f} tok/s)")

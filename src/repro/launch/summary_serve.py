@@ -98,10 +98,10 @@ def main(argv=None):
     name = "smoke" if args.smoke else args.edges
     g = SERVING_GRAPHS[name]()
     print(f"[summary-serve] graph {name}: {g.n} nodes, {g.m} edges")
-    t0 = time.time()
+    t0 = time.perf_counter()
     s = summarize(g, T=args.iters, seed=0)
     packed = s.pack_for_serving()
-    print(f"[summary-serve] summarized+packed in {time.time()-t0:.2f}s "
+    print(f"[summary-serve] summarized+packed in {time.perf_counter()-t0:.2f}s "
           f"(cost {s.cost()}, artifact {packed.nbytes()/1e6:.2f} MB)")
 
     path = args.artifact
@@ -118,9 +118,9 @@ def main(argv=None):
     server = SummaryQueryServer(packed, batch_slots=args.batch_slots,
                                 backend=args.backend)
     server.run(queries[: args.batch_slots])  # warm jit/kernel caches
-    t0 = time.time()
+    t0 = time.perf_counter()
     answers = server.run(queries)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     print(f"[summary-serve] {len(queries)} queries in {dt:.3f}s "
           f"({len(queries)/dt:.0f} q/s, backend={args.backend}, "
           f"slots={args.batch_slots})")

@@ -87,10 +87,10 @@ def main(argv=None):
         ft=FaultToleranceConfig(ckpt_every=args.ckpt_every),
         restore_fn=restore_fn,
     )
-    t0 = time.time()
+    t0 = time.perf_counter()
     state, end_step = loop.run(start_step, args.steps - start_step, metrics_cb)
     ckpt.close()
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     print(f"[train] finished at step {end_step} in {dt:.1f}s "
           f"({(end_step-start_step)/max(dt,1e-9):.2f} steps/s); "
           f"loss {losses[0]:.3f} -> {losses[-1]:.3f}" if losses else "")

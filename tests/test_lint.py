@@ -1,0 +1,380 @@
+"""Tests for the invariant linter (`repro.analysis`).
+
+Three layers: per-rule fixtures (each rule firing, staying quiet on
+conforming code, and honoring a justified suppression), the baseline
+machinery (matching, staleness, mandatory justifications), and the
+meta-test that holds the WHOLE tree to the gate — the same invocation CI
+runs, so tier-1 and the CI lint step can never disagree.
+"""
+from __future__ import annotations
+
+import json
+import os
+import textwrap
+
+from repro.analysis.baseline import apply_baseline, load_baseline
+from repro.analysis.core import lint_source, lint_paths
+from repro.analysis.rules import (DTYPE_WIDTH, HOST_SYNC_IN_LOOP,
+                                  INT_RANK_ONLY, JIT_CACHE_BOUND,
+                                  KERNEL_TRIPLE, NO_RECURSION_LIMIT,
+                                  NONDET_ITER, RULES, SEED_DISCIPLINE,
+                                  TIME_MONOTONIC, rules_by_name)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run(src: str, relpath: str, rule):
+    return lint_source(textwrap.dedent(src), relpath, [rule])
+
+
+def rules_hit(src: str, relpath: str, rule):
+    return [f.rule for f in run(src, relpath, rule).findings]
+
+
+# ---------------------------------------------------------------- registry
+def test_registry_has_at_least_eight_rules_with_docs():
+    assert len(RULES) >= 8
+    names = rules_by_name()
+    assert len(names) == len(RULES)  # unique names
+    for r in RULES:
+        assert r.name and r.summary and r.contract
+
+
+# ---------------------------------------------------------------- SEED
+def test_seed_discipline_fires_on_legacy_np_random():
+    src = """
+        import numpy as np
+        def f():
+            return np.random.rand(3)
+    """
+    assert rules_hit(src, "src/repro/x.py", SEED_DISCIPLINE()) == [
+        "SEED-DISCIPLINE"]
+
+
+def test_seed_discipline_fires_on_seed_arithmetic():
+    src = """
+        import numpy as np
+        def f(seed, t):
+            return np.random.default_rng(seed * 7919 + t)
+    """
+    assert rules_hit(src, "src/repro/x.py", SEED_DISCIPLINE()) == [
+        "SEED-DISCIPLINE"]
+
+
+def test_seed_discipline_fires_on_stdlib_random():
+    src = """
+        import random
+        def f():
+            return random.randint(0, 10)
+    """
+    assert rules_hit(src, "src/repro/x.py", SEED_DISCIPLINE()) == [
+        "SEED-DISCIPLINE"]
+
+
+def test_seed_discipline_quiet_on_seedsequence_flow():
+    src = """
+        import numpy as np
+        def f(seed, t):
+            rng = np.random.default_rng(np.random.SeedSequence((seed, t)))
+            kids = np.random.SeedSequence(seed).spawn(4)
+            return rng, kids
+    """
+    assert rules_hit(src, "src/repro/x.py", SEED_DISCIPLINE()) == []
+
+
+def test_seed_discipline_out_of_scope_and_suppressed():
+    src = "import numpy as np\nx = np.random.rand(3)\n"
+    assert rules_hit(src, "benchmarks/x.py", SEED_DISCIPLINE()) == []
+    sup = ("import numpy as np\n"
+           "x = np.random.rand(3)  # lint: disable=SEED-DISCIPLINE -- "
+           "fixture noise, not a determinism surface\n")
+    res = lint_source(sup, "src/repro/x.py", [SEED_DISCIPLINE()])
+    assert res.findings == [] and len(res.suppressed) == 1
+
+
+def test_suppression_without_reason_does_not_suppress():
+    src = ("import numpy as np\n"
+           "x = np.random.rand(3)  # lint: disable=SEED-DISCIPLINE\n")
+    res = lint_source(src, "src/repro/x.py", [SEED_DISCIPLINE()])
+    assert len(res.findings) == 1
+    assert "justification is mandatory" in res.findings[0].message
+
+
+# ---------------------------------------------------------------- JIT CACHE
+def test_jit_cache_bound_fires_on_bare_dicts():
+    src = """
+        _JIT_CACHE: dict = {}
+        _MESH_CACHE = dict()
+    """
+    assert rules_hit(src, "src/repro/kernels/x/ops.py",
+                     JIT_CACHE_BOUND()) == ["JIT-CACHE-BOUND"] * 2
+
+
+def test_jit_cache_bound_quiet_on_lru_and_locals():
+    src = """
+        from repro.kernels.common import LruCache
+        _JIT_CACHE = LruCache(16)
+        def f():
+            local_cache = {}  # function-local: bounded by the call
+            return local_cache
+    """
+    assert rules_hit(src, "src/repro/kernels/x/ops.py",
+                     JIT_CACHE_BOUND()) == []
+
+
+# ---------------------------------------------------------------- INT RANK
+def test_int_rank_only_fires_on_division_and_float_compare():
+    src = """
+        def f(inter, union, s):
+            j = inter / union
+            return j if s >= 0.5 else None
+    """
+    assert rules_hit(src, "src/repro/core/merging.py",
+                     INT_RANK_ONLY()) == ["INT-RANK-ONLY"] * 2
+
+
+def test_int_rank_only_quiet_on_integer_ops_and_other_modules():
+    src = """
+        def f(inter, union):
+            return (inter << 15) // max(union, 1)
+    """
+    assert rules_hit(src, "src/repro/core/merging.py", INT_RANK_ONLY()) == []
+    # out of scope: float math in the IR/query modules is fine
+    assert rules_hit("x = 1 / 3\n", "src/repro/core/summary_ir.py",
+                     INT_RANK_ONLY()) == []
+
+
+# ---------------------------------------------------------------- NONDET
+def test_nondet_iter_fires_on_set_iteration():
+    src = """
+        def f(xs, d):
+            touched = set(xs)
+            for w in touched:
+                d[w] = True
+            return [k for k in d.keys()]
+    """
+    assert rules_hit(src, "src/repro/core/pruning.py",
+                     NONDET_ITER()) == ["NONDET-ITER"] * 2
+
+
+def test_nondet_iter_fires_on_materialized_set():
+    src = """
+        def f(xs):
+            return list({x + 1 for x in xs})
+    """
+    assert rules_hit(src, "src/repro/core/pruning.py",
+                     NONDET_ITER()) == ["NONDET-ITER"]
+
+
+def test_nondet_iter_quiet_on_sorted_and_dict_items():
+    src = """
+        def f(xs, d):
+            for w in sorted(set(xs)):
+                d[w] = True
+            for k, v in d.items():  # dicts iterate in insertion order
+                pass
+    """
+    assert rules_hit(src, "src/repro/core/pruning.py", NONDET_ITER()) == []
+
+
+# ---------------------------------------------------------------- RECURSION
+def test_no_recursion_limit_fires_and_suppresses():
+    src = "import sys\nsys.setrecursionlimit(100000)\n"
+    assert rules_hit(src, "src/repro/core/x.py", NO_RECURSION_LIMIT()) == [
+        "NO-RECURSION-LIMIT"]
+    sup = ("import sys\n"
+           "# lint: disable=NO-RECURSION-LIMIT -- scoped reference-emitter "
+           "bump, restored in finally\n"
+           "sys.setrecursionlimit(100000)\n")
+    res = lint_source(sup, "src/repro/core/x.py", [NO_RECURSION_LIMIT()])
+    assert res.findings == [] and len(res.suppressed) == 1
+
+
+# ---------------------------------------------------------------- DTYPE
+def test_dtype_width_fires_on_wide_device_dtypes():
+    src = """
+        import jax.numpy as jnp
+        import numpy as np
+        def f(x):
+            a = jnp.asarray(x, dtype=jnp.int64)
+            b = jnp.arange(4, dtype=np.int64)
+            return a, b
+    """
+    found = rules_hit(src, "src/repro/kernels/x/ops.py", DTYPE_WIDTH())
+    # jnp.int64 attribute + both uploader calls
+    assert found.count("DTYPE-WIDTH") >= 3
+
+
+def test_dtype_width_quiet_on_32bit_and_host_math():
+    src = """
+        import jax.numpy as jnp
+        import numpy as np
+        def f(x, idx):
+            a = jnp.asarray(x, dtype=jnp.int32)
+            hosts = idx.astype(np.int64)  # host-side index math is fine
+            return a, hosts
+    """
+    assert rules_hit(src, "src/repro/kernels/x/ops.py", DTYPE_WIDTH()) == []
+
+
+# ---------------------------------------------------------------- HOST SYNC
+def test_host_sync_in_loop_fires_without_accounting():
+    src = """
+        import numpy as np
+        class A:
+            def run(self, rounds):
+                for _ in range(rounds):
+                    v = np.asarray(self._verdicts)
+                    n = v.sum().item()
+                return n
+    """
+    found = rules_hit(src, "src/repro/core/resident.py", HOST_SYNC_IN_LOOP())
+    assert found == ["HOST-SYNC-IN-LOOP"] * 2
+
+
+def test_host_sync_in_loop_quiet_when_accounted():
+    src = """
+        import numpy as np
+        class A:
+            def run(self, rounds, counter):
+                for _ in range(rounds):
+                    v = np.asarray(self._verdicts)
+                    counter.add_d2h(v.nbytes)
+                return v
+    """
+    assert rules_hit(src, "src/repro/core/resident.py",
+                     HOST_SYNC_IN_LOOP()) == []
+
+
+def test_host_sync_in_loop_quiet_on_host_array_reshuffle():
+    src = """
+        import numpy as np
+        def pack(groups):
+            out = []
+            for grp in groups:
+                out.append(np.asarray(grp, dtype=np.int64))
+            return out
+    """
+    assert rules_hit(src, "src/repro/core/merging.py",
+                     HOST_SYNC_IN_LOOP()) == []
+
+
+# ---------------------------------------------------------------- TRIPLE
+def test_kernel_triple_fires_on_missing_leg_and_missing_test(tmp_path):
+    kdir = tmp_path / "src" / "repro" / "kernels"
+    good = kdir / "goodk"
+    bad = kdir / "badk"
+    good.mkdir(parents=True)
+    bad.mkdir(parents=True)
+    for leg in ("kernel.py", "ops.py", "ref.py"):
+        (good / leg).write_text("x = 1\n")
+    (bad / "kernel.py").write_text("x = 1\n")
+    (bad / "ops.py").write_text("x = 1\n")  # ref.py missing
+    tdir = tmp_path / "tests"
+    tdir.mkdir()
+    (tdir / "test_k.py").write_text(
+        "from repro.kernels.goodk import ops\n")
+    res = lint_paths(str(tmp_path), ["src"], [KERNEL_TRIPLE()])
+    msgs = sorted((f.snippet, f.message) for f in res.findings)
+    assert len(msgs) == 2  # badk: missing ref.py + unreferenced
+    assert all(s == "badk" for s, _ in msgs)
+    assert any("ref.py" in m for _, m in msgs)
+    assert any("not referenced" in m for _, m in msgs)
+
+
+# ---------------------------------------------------------------- TIME
+def test_time_monotonic_fires_in_scope_only():
+    src = "import time\nt0 = time.time()\n"
+    assert rules_hit(src, "benchmarks/run.py", TIME_MONOTONIC()) == [
+        "TIME-MONOTONIC"]
+    assert rules_hit(src, "src/repro/launch/x.py", TIME_MONOTONIC()) == [
+        "TIME-MONOTONIC"]
+    assert rules_hit(src, "src/repro/core/x.py", TIME_MONOTONIC()) == []
+    ok = "import time\nt0 = time.perf_counter()\n"
+    assert rules_hit(ok, "benchmarks/run.py", TIME_MONOTONIC()) == []
+
+
+# ---------------------------------------------------------------- baseline
+def _finding(src: str, relpath: str, rule):
+    res = lint_source(textwrap.dedent(src), relpath, [rule])
+    assert len(res.findings) == 1
+    return res.findings[0]
+
+
+def test_baseline_matches_on_symbol_and_snippet_not_line():
+    f = _finding("""
+        import time
+        def main():
+            t0 = time.time()
+    """, "benchmarks/run.py", TIME_MONOTONIC())
+    entry = {"rule": f.rule, "path": f.path, "symbol": f.symbol,
+             "snippet": f.snippet, "justification": "fixture"}
+    m = apply_baseline([f], [entry])
+    assert m.new == [] and len(m.matched) == 1 and m.stale == []
+
+
+def test_baseline_entry_without_justification_rejected():
+    f = _finding("""
+        import time
+        def main():
+            t0 = time.time()
+    """, "benchmarks/run.py", TIME_MONOTONIC())
+    entry = {"rule": f.rule, "path": f.path, "symbol": f.symbol,
+             "snippet": f.snippet, "justification": "  "}
+    m = apply_baseline([f], [entry])
+    assert len(m.unjustified) == 1 and len(m.new) == 1  # no silent pass
+
+
+def test_baseline_stale_entry_detected():
+    entry = {"rule": "TIME-MONOTONIC", "path": "benchmarks/gone.py",
+             "symbol": "main", "snippet": "t0 = time.time()",
+             "justification": "code this excused was deleted"}
+    m = apply_baseline([], [entry])
+    assert len(m.stale) == 1
+
+
+def test_baseline_is_a_multiset():
+    f = _finding("""
+        import time
+        def main():
+            t0 = time.time()
+    """, "benchmarks/run.py", TIME_MONOTONIC())
+    entry = {"rule": f.rule, "path": f.path, "symbol": f.symbol,
+             "snippet": f.snippet, "justification": "fixture"}
+    m = apply_baseline([f, f], [entry])  # one entry cannot cover two hits
+    assert len(m.matched) == 1 and len(m.new) == 1
+
+
+# ---------------------------------------------------------------- meta
+def test_full_tree_is_lint_clean():
+    """The CI gate, as a tier-1 test: no new findings, no stale or
+    unjustified baseline entries, anywhere under src/tests/benchmarks."""
+    result = lint_paths(REPO, ["src", "tests", "benchmarks"], RULES)
+    assert result.errors == []
+    match = apply_baseline(result.findings, load_baseline())
+    assert [f.render() for f in match.new] == []
+    assert match.stale == []
+    assert match.unjustified == []
+    # every suppression carried a reason (core enforces it; double-check)
+    assert all(reason.strip() for _, reason in result.suppressed)
+
+
+def test_checked_in_baseline_entries_are_justified():
+    entries = load_baseline()
+    assert entries, "baseline exists and documents the intentional exemptions"
+    for e in entries:
+        assert len(e.get("justification", "").strip()) > 20
+
+
+def test_cli_stats_report(tmp_path):
+    from repro.analysis.lint import main
+
+    out = tmp_path / "report.json"
+    code = main(["src", "tests", "benchmarks", "--root", REPO,
+                 "--stats", "--stats-out", str(out)])
+    assert code == 0
+    stats = json.loads(out.read_text())
+    assert stats["rules_active"] >= 8
+    assert stats["new_findings"] == 0
+    assert stats["files_scanned"] > 100
+    assert set(stats["per_rule"]) == {r.name for r in RULES}

@@ -76,3 +76,29 @@ def test_batch_server_empty_prompt_list():
     cfg = get_config("qwen2.5-3b", smoke=True)
     server = BatchServer(cfg, params=None)  # params untouched for 0 requests
     assert server.run([]) == []
+
+
+# ------------------------------------------------- ISSUE 8 linter-found
+def test_token_stream_seed_step_streams_do_not_alias():
+    """The old `(seed << 20) ^ step` derivation collided whenever step
+    spilled past 20 bits: (seed=0, step=1<<20) aliased (seed=1, step=0).
+    SeedSequence entropy tuples keep every (seed, step) stream distinct."""
+    from repro.data.pipeline import TokenStream
+
+    a = TokenStream(vocab=97, batch=2, seq=32, seed=0).batch_np(1 << 20)
+    b = TokenStream(vocab=97, batch=2, seq=32, seed=1).batch_np(0)
+    assert not np.array_equal(a, b)
+    # still pure in (seed, step)
+    a2 = TokenStream(vocab=97, batch=2, seq=32, seed=0).batch_np(1 << 20)
+    assert np.array_equal(a, a2)
+
+
+def test_kernel_jit_caches_are_bounded():
+    """seghist/interval_expand shipped unbounded module-level dict caches;
+    every shape-keyed executable cache must be an LruCache."""
+    from repro.kernels.common import LruCache
+    from repro.kernels.interval_expand import ops as ie_ops
+    from repro.kernels.seghist import ops as sh_ops
+
+    assert isinstance(sh_ops._JIT_CACHE, LruCache)
+    assert isinstance(ie_ops._JIT_CACHE, LruCache)
