@@ -401,6 +401,88 @@ class HOST_SYNC_IN_LOOP(Rule):
 
 
 # ---------------------------------------------------------------------------
+# ITER-REUPLOAD
+# ---------------------------------------------------------------------------
+class ITER_REUPLOAD(Rule):
+    name = "ITER-REUPLOAD"
+    summary = ("no host→device upload of a loop-invariant tensor inside "
+               "an iteration loop")
+    contract = (
+        "The ISSUE-9 adjacency bank exists because re-shipping unchanged "
+        "state every iteration was the dominant cost (79MB/iteration of "
+        "`phase=upload` at 220k edges). The bug class: a `jnp.asarray`/"
+        "`jax.device_put` (or an arena `_put`/`_replicate`) inside a "
+        "for/while whose first argument is a bare name NEVER assigned in "
+        "that loop's body — i.e. an iteration-invariant tensor uploaded "
+        "once per iteration instead of once per run. Hoist the upload out "
+        "of the loop, or carry the state on device across iterations "
+        "(the `ResidentAdjacencyBank` pattern, DESIGN.md §9). Slabs built "
+        "inside the loop (assigned in its body) are per-iteration payloads "
+        "and stay legal.")
+    scope = ("src/repro/core/resident.py", "src/repro/core/engine.py",
+             "src/repro/kernels/")
+
+    _UPLOADERS = {"jnp.asarray", "jnp.array", "jax.device_put",
+                  "jnp.device_put"}
+    _METHODS = {"device_put", "_put", "_replicate"}
+
+    @staticmethod
+    def _assigned_names(loop) -> set:
+        names = set()
+        for node in ast.walk(loop):
+            if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign,
+                                 ast.NamedExpr)):
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                for t in targets:
+                    for leaf in ast.walk(t):
+                        if isinstance(leaf, ast.Name):
+                            names.add(leaf.id)
+            elif isinstance(node, ast.For):
+                for leaf in ast.walk(node.target):
+                    if isinstance(leaf, ast.Name):
+                        names.add(leaf.id)
+        return names
+
+    def _is_uploader(self, call) -> bool:
+        fn = dotted(call.func)
+        if fn in self._UPLOADERS:
+            return True
+        return (isinstance(call.func, ast.Attribute)
+                and call.func.attr in self._METHODS)
+
+    def check(self, ctx):
+        calls: list = []
+
+        def visit(node, loop):
+            if isinstance(node, (ast.For, ast.While)):
+                loop = node
+            elif isinstance(node, ast.Call) and loop is not None:
+                calls.append((node, loop))
+            for child in ast.iter_child_nodes(node):
+                visit(child, loop)
+
+        visit(ctx.tree, None)
+        assigned: dict = {}
+        for call, loop in calls:
+            if not self._is_uploader(call):
+                continue
+            if not call.args or not isinstance(call.args[0], ast.Name):
+                continue
+            key = id(loop)
+            if key not in assigned:
+                assigned[key] = self._assigned_names(loop)
+            name = call.args[0].id
+            if name in assigned[key]:
+                continue
+            yield ctx.finding(
+                self, call,
+                f"host→device upload of loop-invariant `{name}` inside an "
+                f"iteration loop; hoist it out of the loop or carry it on "
+                f"device across iterations")
+
+
+# ---------------------------------------------------------------------------
 # KERNEL-TRIPLE
 # ---------------------------------------------------------------------------
 class KERNEL_TRIPLE(TreeRule):
@@ -477,7 +559,8 @@ class TIME_MONOTONIC(Rule):
 
 RULES = (SEED_DISCIPLINE(), JIT_CACHE_BOUND(), INT_RANK_ONLY(),
          NONDET_ITER(), NO_RECURSION_LIMIT(), DTYPE_WIDTH(),
-         HOST_SYNC_IN_LOOP(), KERNEL_TRIPLE(), TIME_MONOTONIC())
+         HOST_SYNC_IN_LOOP(), ITER_REUPLOAD(), KERNEL_TRIPLE(),
+         TIME_MONOTONIC())
 
 
 def rules_by_name():

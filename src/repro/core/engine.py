@@ -155,6 +155,12 @@ class SummarizerEngine:
             from repro.core.resident import ResidentBitmapArena
 
             def factory(ws, _mesh=mesh, _j=self.top_j):
+                rc = self._run_ctx
+                if _mesh is None and rc is not None and rc.bank is not None:
+                    # bank path: the chunk state EXTRACTS on device from the
+                    # resident adjacency bank — ws is a shape-only shell
+                    return ResidentBitmapArena.from_bank(
+                        rc.bank, ws, rc._res_map, top_j=_j)
                 return ResidentBitmapArena.from_workspace(ws, top_j=_j,
                                                           mesh=_mesh)
             self._resident_factory = factory
@@ -167,7 +173,7 @@ class SummarizerEngine:
             if self.backend == "resident":
                 try:
                     from repro.core.resident import ResidentRunContext
-                    self._run_ctx = ResidentRunContext(g)
+                    self._run_ctx = ResidentRunContext(g, bank=True)
                     self._shingle_provider = self._run_ctx.for_roots
                 except Exception:  # jax unavailable: host twin, same bits
                     self._run_ctx = None
@@ -210,6 +216,8 @@ class SummarizerEngine:
         if not groups:
             return
         part_of_group = self._group_partitions(ctx)
+        shell = (self.backend == "resident" and self._run_ctx is not None
+                 and getattr(self._run_ctx, "bank", None) is not None)
         for p in np.unique(part_of_group):
             idxs = np.flatnonzero(part_of_group == p)
             plans_p, thunks_p = build_merge_work(
@@ -219,7 +227,8 @@ class SummarizerEngine:
                     ctx.group_children[idxs[li]]),
                 top_j=self.top_j, height_bound=self.height_bound,
                 backend=self.backend, rank_dispatch=self._rank_dispatch,
-                resident_factory=self._resident_factory)
+                resident_factory=self._resident_factory,
+                shell_workspaces=shell)
             for li, gi in enumerate(idxs):
                 ctx.plans[int(gi)] = plans_p[li]
             ctx.thunks.extend(thunks_p)
@@ -242,9 +251,13 @@ class SummarizerEngine:
         device root map (plan-driven carry — the map never re-uploads)."""
         if self._run_ctx is not None:
             batches: list = []
+            st = ctx.state
+            # row_len[M] is pristine exactly at the on_batch hook — the bank
+            # carry needs the minted rows' unique-external counts
             ctx.merges = apply_plans(
                 ctx.state, ctx.plans,
-                on_batch=lambda A, Z, M: batches.append((A, Z, M)))
+                on_batch=lambda A, Z, M: batches.append(
+                    (A, Z, M, st.row_len[M].copy())))
             self._run_ctx.advance(batches)
         else:
             ctx.merges = apply_plans(ctx.state, ctx.plans)

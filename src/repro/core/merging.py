@@ -541,9 +541,10 @@ class BatchedGroupWorkspace:
     array ops and the global state applies `merge_batch` (DESIGN.md §3).
     """
 
-    def __init__(self, state, B: int, G: int, R: int):
+    def __init__(self, state, B: int, G: int, R: int, shell: bool = False):
         self.state = state
         self.B, self.G, self.R = B, G, R
+        self.shell = shell  # shape-only shell: device bank owns the tensors
         self.plans = None  # record mode: per-local-group MergePlan targets
         self.gseed = np.zeros(B, dtype=np.uint64)  # per-group priority seeds
         self.memcol = np.zeros((B, G), dtype=np.int64)
@@ -551,16 +552,21 @@ class BatchedGroupWorkspace:
         # CNT holds exact subedge counts — int32 (half the old float64
         # footprint, and the dtype the resident arena uploads verbatim);
         # the scalar per-row stats are int64 so host cross-products in the
-        # Saving comparison stay exact without widening casts
-        self.CNT = np.zeros((B, G, R), dtype=np.int32)
-        self.col_gid = np.full((B, R), -1, dtype=np.int64)
-        self.colsize = np.zeros((B, R), dtype=np.int64)
+        # Saving comparison stay exact without widening casts. A SHELL
+        # workspace (ISSUE 9 bank path) keeps self.R as the LOGICAL column
+        # width but allocates the big per-column tensors zero-width — the
+        # resident extraction builds them on device from the adjacency bank.
+        Rw = 0 if shell else R
+        self.CNT = np.zeros((B, G, Rw), dtype=np.int32)
+        self.col_gid = np.full((B, Rw), -1, dtype=np.int64)
+        self.colsize = np.zeros((B, Rw), dtype=np.int64)
         self.s = np.zeros((B, G), dtype=np.int64)
         self.selfc = np.zeros((B, G), dtype=np.int64)
         self.nd = np.zeros((B, G), dtype=np.int64)
         self.hgt = np.zeros((B, G), dtype=np.int64)
         self.alive = np.zeros((B, G), dtype=bool)
-        self.bits = np.zeros((B, G, max((R + 63) // 64, 1)), dtype=np.uint64)
+        self.bits = np.zeros((B, G, max((Rw + 63) // 64, 1)),
+                             dtype=np.uint64)
         self.cost_row = np.zeros((B, G), dtype=np.int64)
 
     def _fill(self, mb, mr, mc, gids, eb, er, ec, ecnt, cb, cc, cgid):
@@ -573,6 +579,11 @@ class BatchedGroupWorkspace:
         self.nd[mb, mr] = st.ndesc[gids]
         self.hgt[mb, mr] = st.height[gids]
         self.alive[mb, mr] = True
+        if self.shell:
+            # the bank extraction rebuilds CNT/bits/colsize/cost on device;
+            # the bank's init-time conservation bound subsumes the int32 /
+            # C_CLAMP runtime guards below
+            return
         if ecnt.size and int(ecnt.max()) >= np.iinfo(np.int32).max:
             raise OverflowError(
                 f"subedge count {int(ecnt.max())} exceeds the int32 CNT "
@@ -606,7 +617,7 @@ class BatchedGroupWorkspace:
 
     @staticmethod
     def build_bucket(state, groups: list, G: int, plans=None,
-                     group_seeds=None) -> list:
+                     group_seeds=None, shell: bool = False) -> list:
         """One gather + keyed unique for ALL groups of a size bucket, then
         workspaces chunked so column universes within a chunk are within 2×
         of each other and the (B, G, R) tensors respect the memory budget —
@@ -660,7 +671,8 @@ class BatchedGroupWorkspace:
         col_pos = np.arange(uniq.size) - col_bounds[col_grp]
         out: list = []
         for ci, (bc, rc) in enumerate(chunks):
-            ws = BatchedGroupWorkspace(state, bc, G, max(int(rc), 1))
+            ws = BatchedGroupWorkspace(state, bc, G, max(int(rc), 1),
+                                       shell=shell)
             msel = mem_chunk == ci
             esel = ent_chunk == ci
             csel = col_chunk == ci
@@ -780,8 +792,9 @@ class BatchedGroupWorkspace:
             Ms = self.state.merge_batch(self.members[b, a], self.members[b, z])
         self.members[b, a] = Ms
         self.members[b, z] = -1
-        self.col_gid[b, ca] = Ms
-        self.col_gid[b, cz] = -1
+        if not self.shell:
+            self.col_gid[b, ca] = Ms
+            self.col_gid[b, cz] = -1
         if fold_counts:
             # rows fold, then columns fold
             self.CNT[b, a] += self.CNT[b, z]
@@ -956,6 +969,7 @@ def build_merge_work(
     backend: str = "numpy",
     rank_dispatch=None,
     resident_factory=None,
+    shell_workspaces: bool = False,
 ):
     """Build record-mode workspaces for one iteration's candidate groups.
 
@@ -973,6 +987,11 @@ def build_merge_work(
     the batched intersection dispatch (mesh sharding);
     ``resident_factory(ws)`` overrides how ``backend="resident"`` builds
     its per-chunk `ResidentBitmapArena` (mesh placement, kernel forcing).
+    ``shell_workspaces`` (bank path, ISSUE 9) builds the batched chunks as
+    shape-only shells — identical chunking and member layout, but the big
+    CNT/bits/colsize tensors never materialize on host because the
+    resident factory extracts them on device from the adjacency bank.
+    Oversized groups keep their host `GroupWorkspace` sweep either way.
     """
     groups = [np.asarray(g, dtype=np.int64) for g in groups]
     group_seeds = np.asarray(group_seeds, dtype=np.uint64)
@@ -1021,7 +1040,8 @@ def build_merge_work(
         for ws in BatchedGroupWorkspace.build_bucket(
                 state, [groups[i] for i in idxs], G,
                 plans=[plans[i] for i in idxs],
-                group_seeds=group_seeds[idxs]):
+                group_seeds=group_seeds[idxs],
+                shell=shell_workspaces):
             thunks.append(_batch_thunk(ws))
     return plans, thunks
 

@@ -24,12 +24,22 @@ hashes), so per round the boundary carries the accepted-pair instruction
 slab up and the per-dirty-row verdict down. The legacy v1 protocol
 (`topj_rows` ranking + bitmap-only `fold`) remains for tests and tools.
 
+Since ISSUE 9 the per-iteration workspace upload is gone too:
+`ResidentAdjacencyBank` carries every root's coalesced adjacency row on
+device ACROSS iterations (append-only ``gid``/``cnt`` streams advanced
+straight from the applied `MergePlan` batches), and
+`ResidentBitmapArena.from_bank` EXTRACTS each chunk's (B, G, W) bitmaps and
+count tensors on device — the host workspaces become shape-only shells and
+the device bank is authoritative within a run. The host materializes bank
+rows only for verification (`host_rows`, the `sync_rows`-style contract).
+
 `sync_rows` keeps the verification contract: tests pull selected rows back
 and assert the device fold is bit-identical to the host fold.
 
 Every upload/download reports to `core.transfer.GLOBAL` under a lifecycle
-phase (``upload``/``rank``/``fold``), and each proposal round-trip ticks
-the round counter — `benchmarks/scalability.py --resident` gates the
+phase (``init``/``upload``/``rank``/``fold``/``carry``/``candgen``/
+``bank``/``extract``/``sync``), and each proposal round-trip ticks the
+round counter — `benchmarks/scalability.py --resident` gates the
 bytes-per-iteration reduction on these numbers.
 """
 from __future__ import annotations
@@ -143,6 +153,66 @@ class ResidentBitmapArena:
                              sum(a.nbytes for a in per_g) + dirty_p.nbytes,
                              phase="upload")
 
+    @classmethod
+    def from_bank(cls, bank, ws, res_map, *, top_j: int = 16,
+                  use_kernel=None, interpret=None, counter=TRANSFER):
+        """Build a chunk arena by on-device EXTRACTION from the resident
+        adjacency bank (ISSUE 9) — no bitmap/count upload at all.
+
+        ``ws`` is a shape-only shell workspace (`BatchedGroupWorkspace`
+        built with ``shell=True``): only its member layout (``members``,
+        ``B``, ``G``, ``R``) is read; the big tensors never exist on host.
+        The only h2d traffic is the (Bp, G) member/ptr/len index slab
+        (phase ``extract``). Bank arrays are read without donation, so
+        concurrent chunk thunks may extract from one bank. The extracted
+        state is bit-identical to `from_workspace` of a fully host-packed
+        chunk (test-enforced).
+        """
+        jax = _jax()
+        import jax.numpy as jnp
+        from repro.kernels.bitset_fold.ops import extract_fn
+        from repro.kernels.common import (default_interpret,
+                                          default_use_kernel, pow2)
+
+        arena = cls.__new__(cls)
+        B, G, R = int(ws.B), int(ws.G), int(ws.R)
+        arena.counter = counter
+        arena.G = G
+        arena.J = max(1, min(int(top_j), G - 1))
+        arena.use_kernel = (default_use_kernel() if use_kernel is None
+                            else bool(use_kernel))
+        arena.interpret = (default_interpret() if interpret is None
+                           else bool(interpret))
+        arena.mesh = None
+        arena.axes = ("data",)
+        arena.B = B
+        arena.Bp = pow2(B, floor=1)
+        arena.Wp = pow2(2 * max((R + 63) // 64, 1), floor=2)
+        arena.Rp = pow2(R, floor=8)
+        arena._put = arena._sharder(jax)
+        members = np.full((arena.Bp, G), -1, dtype=np.int32)
+        members[:B] = ws.members
+        live = ws.members >= 0
+        mem_c = np.where(live, ws.members, 0)
+        ptr = np.zeros((arena.Bp, G), dtype=np.int32)
+        lens = np.zeros((arena.Bp, G), dtype=np.int32)
+        ptr[:B] = np.where(live, bank.ptr_host[mem_c], 0)
+        lens[:B] = np.where(live, bank.len_host[mem_c], 0)
+        Lp = pow2(int(lens.sum(axis=1).max()), floor=64)
+        fn = extract_fn(arena.Bp, G, arena.Rp, arena.Wp, Lp, bank.cap,
+                        int(bank._gids.shape[0]))
+        counter.add_h2d(members.nbytes + ptr.nbytes + lens.nbytes,
+                        phase="extract")
+        (arena._bits, arena._alive, arena._dirty, arena._CNT,
+         arena._colsize, arena._memcol, arena._s, arena._selfc, arena._nd,
+         arena._hgt, arena._cost) = fn(
+            bank._gids, bank._cnts, bank._size, bank._selfc, bank._nd,
+            bank._hgt, res_map, jnp.asarray(members), jnp.asarray(ptr),
+            jnp.asarray(lens))
+        arena.rounds = 0
+        arena._counts = True
+        return arena
+
     # ------------------------------------------------------------- plumbing
     def _sharder(self, jax):
         if self.mesh is None:
@@ -178,9 +248,9 @@ class ResidentBitmapArena:
         fn = topj_fn(self.Bp, self.G, self.Wp, self.J, n_pad,
                      use_kernel=self.use_kernel, interpret=self.interpret,
                      mesh=self.mesh, axes=self.axes)
-        self.counter.add_h2d(rows.nbytes)
+        self.counter.add_h2d(rows.nbytes, phase="rank")
         out = np.asarray(fn(self._bits, self._alive, self._replicate(rows)))
-        self.counter.add_d2h(out.nbytes)
+        self.counter.add_d2h(out.nbytes, phase="rank")
         self.counter.tick_round()
         self.rounds += 1
         return out[:n].astype(np.int64)
@@ -216,7 +286,7 @@ class ResidentBitmapArena:
         fn = fold_fn(self.Bp, self.G, self.Wp, P_pairs,
                      use_kernel=self.use_kernel, interpret=self.interpret,
                      mesh=self.mesh, axes=self.axes)
-        self.counter.add_h2d(instr.nbytes)
+        self.counter.add_h2d(instr.nbytes, phase="fold")
         self._bits, self._alive = fn(self._bits, self._alive,
                                      self._put(instr))
 
@@ -300,18 +370,187 @@ class ResidentBitmapArena:
         host fold; the engine itself never needs them (Savings run on the
         host-resident count tensors)."""
         rows = np.asarray(self._bits)[np.asarray(b), np.asarray(g)]
-        self.counter.add_d2h(rows.nbytes)
+        self.counter.add_d2h(rows.nbytes, phase="sync")
         return rows
 
     def host_bits(self) -> np.ndarray:
         """Full (B, G, Wp) download (tests/debug only — counts as d2h)."""
         out = np.asarray(self._bits)[: self.B]
-        self.counter.add_d2h(out.nbytes)
+        self.counter.add_d2h(out.nbytes, phase="sync")
         return out
 
     def host_alive(self) -> np.ndarray:
         out = np.asarray(self._alive)[: self.B] > 0
-        self.counter.add_d2h(out.nbytes)
+        self.counter.add_d2h(out.nbytes, phase="sync")
+        return out
+
+    def host_counts(self):
+        """Download the resident count state — ``(CNT, colsize, memcol, s,
+        selfc, nd, hgt, cost)`` host copies trimmed to the live batch rows.
+        Verification contract only (phase ``sync``): tests compare these
+        against a host `_fill` of the same chunk."""
+        if self._counts is None:
+            raise RuntimeError("host_counts needs attach_counts state")
+        arrs = [np.asarray(a) for a in
+                (self._CNT, self._colsize, self._memcol, self._s,
+                 self._selfc, self._nd, self._hgt, self._cost)]
+        self.counter.add_d2h(sum(a.nbytes for a in arrs), phase="sync")
+        return tuple(a[: self.B] for a in arrs)
+
+
+class ResidentAdjacencyBank:
+    """Per-root adjacency rows carried ON DEVICE across iterations (§9).
+
+    Append-only ``gid``/``cnt`` int32 streams (pow2-grown, donated across
+    advances) hold every root's coalesced external adjacency row exactly as
+    `SluggerState` would materialize it at the root's mint time: entries are
+    ``(gid, cnt)`` with gids resolved to roots AS OF that mint (stored ids
+    go stale as neighbours merge — extraction re-resolves them through the
+    current ``res_map`` and re-coalesces, which is precisely the host's
+    `gather_rows` resolve+coalesce). Four (cap,) stat arrays mirror
+    ``size``/``selfcnt``/``ndesc``/``height``. The HOST keeps only the
+    integer row directory (``ptr_host``/``len_host``/``top``) — row
+    lengths are known host-side because `merge_batch` computes the same
+    ``row_len`` and the engine forwards it with each applied batch.
+
+    Exactness guard: merges only coalesce counts (sum-preserving) or drop
+    internal pairs, so Σcnt never exceeds the seed edge count ``m``; every
+    extracted CNT value is ≤ m and every clamped integer row cost is
+    ≤ 3m/2 + 2n + 16. The constructor refuses (OverflowError) any graph
+    where that bound reaches C_CLAMP — callers fall back to the
+    host-rebuilt path, whose `_fill` re-checks per chunk at runtime — so
+    ON the bank path all device int32 cost arithmetic is provably exact
+    and extraction needs no overflow checks (and no downloads at all).
+    """
+
+    def __init__(self, g, *, counter=TRANSFER, min_capacity: int = 0):
+        _jax()
+        import jax.numpy as jnp
+        from repro.core.merging import C_CLAMP
+        from repro.kernels.common import pow2
+
+        self.counter = counter
+        self.n = int(g.n)
+        self.cap = 2 * self.n + 8
+        indices = np.asarray(g.indices)
+        m = int(indices.size)
+        if (3 * m) // 2 + 2 * self.n + 16 >= C_CLAMP:
+            raise OverflowError(
+                "graph too heavy for the int32 adjacency bank: the "
+                "conservation bound 3m/2 + 2n + 16 reaches C_CLAMP")
+        E0 = pow2(max(2 * m, int(min_capacity), 64))
+        gids = np.zeros(E0, dtype=np.int32)
+        gids[:m] = indices
+        cnts = np.zeros(E0, dtype=np.int32)
+        cnts[:m] = 1
+        self.ptr_host = np.zeros(self.cap, dtype=np.int64)
+        self.len_host = np.zeros(self.cap, dtype=np.int64)
+        self.ptr_host[: self.n] = g.indptr[:-1]
+        self.len_host[: self.n] = np.diff(g.indptr)
+        self.top = m
+        self._gids = jnp.asarray(gids)
+        self._cnts = jnp.asarray(cnts)
+        # stats live on device from the start — zero h2d for them
+        self._size = jnp.ones(self.cap, dtype=jnp.int32)
+        self._selfc = jnp.zeros(self.cap, dtype=jnp.int32)
+        self._nd = jnp.zeros(self.cap, dtype=jnp.int32)
+        self._hgt = jnp.zeros(self.cap, dtype=jnp.int32)
+        counter.add_h2d(gids.nbytes + cnts.nbytes, phase="init")
+
+    @property
+    def capacity(self) -> int:
+        return int(self._gids.shape[0])
+
+    def advance_batches(self, res_map, batches: list):
+        """Advance the bank by one iteration's applied merge batches.
+
+        ``batches`` is a list of ``(A, Z, M, lens)`` — the exact arrays the
+        engine captured at `apply_plans`'s ``on_batch`` hook, with ``lens ==
+        state.row_len[M]`` read at that instant (the freshly minted rows'
+        unique-external counts). Batches are replayed SEQUENTIALLY so each
+        device batch resolves gids through the same pre-batch root map the
+        host `merge_batch` used; ``res_map`` is threaded through and
+        returned. Per batch the only upload is the (8, Pp) i32 instruction
+        slab (32 B/pair, phase ``bank``); regrows are device-to-device.
+        """
+        import jax.numpy as jnp
+        from repro.kernels.bitset_fold.carry import (bank_advance_fn,
+                                                     bank_grow_fn)
+        from repro.kernels.common import pow2
+
+        for A, Z, M, lens in batches:
+            m = int(A.size)
+            if m == 0:
+                continue
+            ub = self.len_host[A] + self.len_host[Z]
+            tot = int(ub.sum())
+            need = self.top + tot
+            E = self.capacity
+            if need > E:
+                newE = pow2(max(need, 2 * E))
+                if newE >= (1 << 31):
+                    raise OverflowError(
+                        "adjacency bank outgrew int32 addressing")
+                self._gids, self._cnts = bank_grow_fn(E, newE)(
+                    self._gids, self._cnts)
+                E = newE
+            Pp = pow2(m, floor=64)
+            Tp = pow2(max(tot, 1), floor=256)
+            outp = self.top + np.cumsum(ub) - ub
+            slab = np.zeros((8, Pp), dtype=np.int32)
+            slab[0] = self.cap          # pads: ids scatter-drop at cap,
+            slab[1] = self.cap          # out_ptr drops at E, lengths 0
+            slab[2] = self.cap
+            slab[3] = E
+            slab[0, :m] = A
+            slab[1, :m] = Z
+            slab[2, :m] = M
+            slab[3, :m] = outp
+            slab[4, :m] = self.ptr_host[A]
+            slab[5, :m] = self.len_host[A]
+            slab[6, :m] = self.ptr_host[Z]
+            slab[7, :m] = self.len_host[Z]
+            fn = bank_advance_fn(self.cap, E, Pp, Tp)
+            self.counter.add_h2d(slab.nbytes, phase="bank")
+            (self._gids, self._cnts, self._size, self._selfc, self._nd,
+             self._hgt, res_map) = fn(self._gids, self._cnts, self._size,
+                                      self._selfc, self._nd, self._hgt,
+                                      res_map, jnp.asarray(slab))
+            self.ptr_host[M] = outp
+            self.len_host[M] = lens
+            self.len_host[A] = 0       # consumed roots own no row anymore
+            self.len_host[Z] = 0
+            self.top = need
+        return res_map
+
+    # --------------------------------------------------- sync-back contract
+    def host_rows(self, roots, res_map):
+        """Materialize the CURRENT coalesced adjacency rows of ``roots`` on
+        host — the bank's verification contract (phase ``sync``): resolve
+        each stored gid through ``res_map`` and re-coalesce, exactly like
+        `SluggerState.gather_rows`. Returns a list of ``(nbr, cnt)`` int64
+        pairs sorted ascending by nbr. Tests/debug only."""
+        gids = np.asarray(self._gids)
+        cnts = np.asarray(self._cnts)
+        rm = np.asarray(res_map)
+        self.counter.add_d2h(gids.nbytes + cnts.nbytes + rm.nbytes,
+                             phase="sync")
+        out = []
+        for r in np.asarray(roots, dtype=np.int64):
+            p = int(self.ptr_host[r])
+            l = int(self.len_host[r])
+            rg = rm[gids[p:p + l]]
+            c = cnts[p:p + l]
+            order = np.argsort(rg, kind="stable")
+            rg = rg[order]
+            c = c[order]
+            if l:
+                head = np.concatenate([[True], rg[1:] != rg[:-1]])
+                idx = np.flatnonzero(head)
+                out.append((rg[idx].astype(np.int64),
+                            np.add.reduceat(c, idx).astype(np.int64)))
+            else:
+                out.append((np.zeros(0, np.int64), np.zeros(0, np.int64)))
         return out
 
 
@@ -338,9 +577,21 @@ class ResidentRunContext:
     (n_ids,) shingle vector and the per-root leaf counts come back (phase
     ``candgen``). The results are bit-identical to the host u32 twin
     (`minhash.host_shingle_provider`) and the mesh shard_map path.
+
+    With ``bank=True`` the context additionally carries a
+    `ResidentAdjacencyBank` (ISSUE 9) — the device-resident row arena
+    that `ResidentBitmapArena.from_bank` extracts next-iteration
+    workspaces from, making host workspaces shape-only shells. In bank
+    mode `advance` expects the engine's 4-tuple ``(A, Z, M, lens)``
+    batches and the plan-replay ``carry`` upload is superseded: the
+    bank-advance slab already names (A, Z, M), so ``res_map`` composes
+    inside the same donated device call. If the bank's exactness guard
+    declines the graph (`OverflowError` at seed time), ``bank`` stays
+    ``None`` and the engine falls back to the host-rebuilt upload path.
     """
 
-    def __init__(self, g, *, counter=TRANSFER):
+    def __init__(self, g, *, counter=TRANSFER, bank: bool = False,
+                 bank_min_capacity: int = 0):
         _jax()
         import jax.numpy as jnp
 
@@ -353,23 +604,49 @@ class ResidentRunContext:
         self._dst = jnp.asarray(dst)
         self._res_map = jnp.arange(self.cap, dtype=jnp.int32)
         counter.add_h2d(src.nbytes + dst.nbytes, phase="init")
+        self.bank = None
+        if bank:
+            try:
+                self.bank = ResidentAdjacencyBank(
+                    g, counter=counter, min_capacity=bank_min_capacity)
+            except OverflowError:
+                # exactness guard tripped — stay on the host-rebuilt path
+                # (its per-chunk `_fill` guards re-check at runtime)
+                self.bank = None
 
     # ------------------------------------------------------- plan replay
     def advance(self, batches: list):
-        """Replay one iteration's applied merge batches ((A, Z, M) global
-        id triples, in application order) against the resident root map."""
+        """Replay one iteration's applied merge batches against the
+        resident root map — and, when the adjacency bank is live, against
+        the bank itself.
+
+        Legacy (bank-less) mode takes ``(A, Z, M)`` global id triples in
+        application order and composes them in ONE device call. Bank mode
+        requires ``(A, Z, M, lens)`` 4-tuples (``lens = state.row_len[M]``
+        captured at the ``on_batch`` hook) and replays them sequentially —
+        each bank batch must see the pre-batch root map, exactly like the
+        host `merge_batch`.
+        """
         import jax.numpy as jnp
         from repro.kernels.bitset_fold.carry import advance_fn
         from repro.kernels.common import pow2
 
-        m = sum(a.size for a, _, _ in batches)
+        if self.bank is not None:
+            if any(len(b) < 4 for b in batches):
+                raise ValueError(
+                    "bank carry needs (A, Z, M, lens) batches — pass "
+                    "state.row_len[M] captured at the on_batch hook")
+            self._res_map = self.bank.advance_batches(self._res_map,
+                                                      batches)
+            return
+        m = sum(b[0].size for b in batches)
         if m == 0:
             return
         mp = pow2(m, floor=64)
         tri = np.full((3, mp), self.cap, dtype=np.int32)  # pads scatter-drop
-        tri[0, :m] = np.concatenate([a for a, _, _ in batches])
-        tri[1, :m] = np.concatenate([z for _, z, _ in batches])
-        tri[2, :m] = np.concatenate([mm for _, _, mm in batches])
+        tri[0, :m] = np.concatenate([b[0] for b in batches])
+        tri[1, :m] = np.concatenate([b[1] for b in batches])
+        tri[2, :m] = np.concatenate([b[2] for b in batches])
         fn = advance_fn(self.cap, mp)
         self.counter.add_h2d(tri.nbytes, phase="carry")
         self._res_map = fn(self._res_map, jnp.asarray(tri))
@@ -378,7 +655,7 @@ class ResidentRunContext:
         """Download res_map[:n] (tests/debug — the verification contract
         against `SluggerState.root_of`; the engine never calls this)."""
         out = np.asarray(self._res_map)[: self.n].astype(np.int64)
-        self.counter.add_d2h(out.nbytes)
+        self.counter.add_d2h(out.nbytes, phase="sync")
         return out
 
     # ----------------------------------------------- resident candidate gen

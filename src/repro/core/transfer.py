@@ -11,9 +11,14 @@ fused rank+Saving call on the resident path). `benchmarks/scalability.py
 --resident` gates the resident backend's bytes-per-iteration reduction on
 these numbers (``BENCH_resident.json``).
 
-Counts are attributed to a *phase* (``upload``, ``rank``, ``fold``,
-``carry``, ``candgen``, …) so a bytes regression localizes to the lifecycle
-stage that caused it instead of a single aggregate number.
+Counts are attributed to a *phase* — ``init`` (one-time edge/bank seeding),
+``upload`` (host-rebuilt workspace state), ``rank``, ``fold``, ``carry``
+(legacy root-map replay), ``candgen``, ``bank`` (adjacency-bank advance
+slabs), ``extract`` (bank→arena index slabs), and ``sync`` (verification
+downloads) — so a bytes regression localizes to the lifecycle stage that
+caused it instead of a single aggregate number. On the ISSUE-9 bank path
+the steady-state recurring uploads are ONLY ``rank``/``fold``/``bank``/
+``extract`` instruction slabs; ``upload`` stays zero after seeding.
 
 Thread safety: the engine's merge_round stage runs workspace thunks on a
 ``ThreadPoolExecutor``, and every thunk's arena reports into the shared

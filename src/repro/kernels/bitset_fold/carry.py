@@ -26,8 +26,12 @@ import jax.numpy as jnp
 
 from repro.kernels.common import LruCache
 
+from . import ref as _ref
+
 _ADVANCE_CACHE = LruCache(8)
 _SHINGLE_CACHE = LruCache(8)
+_BANK_ADVANCE_CACHE = LruCache(16)
+_BANK_GROW_CACHE = LruCache(8)
 
 
 def _hash_u32(x, a, b):
@@ -62,6 +66,52 @@ def advance_fn(cap: int, mp: int):
         return fwd[res_map]
 
     _ADVANCE_CACHE[key] = fn
+    return fn
+
+
+def bank_advance_fn(cap: int, E: int, Pp: int, Tp: int):
+    """Compiled one-batch adjacency-bank advance (ISSUE 9, DESIGN.md §9).
+
+    ``(gids (E,), cnts (E,), size (cap,), selfc, nd, hgt, res_map (cap,),
+    slab (8, Pp)) -> same seven carried arrays`` — all seven device arrays
+    are donated so the bank truly advances in place; the (8, Pp) i32 slab is
+    the only recurring upload (32 B per applied pair). The body is the pure
+    `ref.bank_advance` twin; ``Tp`` pads the flattened entry workspace.
+    """
+    key = (cap, E, Pp, Tp)
+    fn = _BANK_ADVANCE_CACHE.get(key)
+    if fn is not None:
+        return fn
+
+    @functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3, 4, 5, 6))
+    def fn(gids, cnts, size, selfc, nd, hgt, res_map, slab):
+        return _ref.bank_advance(gids, cnts, size, selfc, nd, hgt, res_map,
+                                 slab, Tp)
+
+    _BANK_ADVANCE_CACHE[key] = fn
+    return fn
+
+
+def bank_grow_fn(E: int, newE: int):
+    """Compiled pow2 regrow ``(gids (E,), cnts (E,)) -> ((newE,), (newE,))``.
+
+    Device-to-device only — no host round trip, no transfer-counter bytes.
+    No donation: the output shape differs from the input's, so XLA could
+    never alias the buffers anyway (it would only warn). Tails are zero
+    (cnt 0 entries are inert).
+    """
+    key = (E, newE)
+    fn = _BANK_GROW_CACHE.get(key)
+    if fn is not None:
+        return fn
+
+    @jax.jit
+    def fn(gids, cnts):
+        g = jnp.zeros(newE, dtype=jnp.int32).at[:E].set(gids)
+        c = jnp.zeros(newE, dtype=jnp.int32).at[:E].set(cnts)
+        return g, c
+
+    _BANK_GROW_CACHE[key] = fn
     return fn
 
 

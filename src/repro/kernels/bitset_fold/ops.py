@@ -33,6 +33,7 @@ _TOPJ_CACHE = LruCache(16)
 _FOLD_CACHE = LruCache(16)
 _ROUND_CACHE = LruCache(32)
 _FOLDC_CACHE = LruCache(16)
+_EXTRACT_CACHE = LruCache(32)
 
 
 def _shard(fn, mesh, axes, n_in, n_out):
@@ -188,6 +189,36 @@ def round_fn(B: int, G: int, R: int, W: int, K: int, J: int, top_j: int, *,
             return dirty, out
 
     _ROUND_CACHE[key] = fn
+    return fn
+
+
+def extract_fn(Bp: int, G: int, Rp: int, Wp: int, Lp: int, cap: int,
+               E: int):
+    """Compiled bank→arena extraction (ISSUE 9, DESIGN.md §9).
+
+    ``(gids (E,), cnts (E,), size (cap,), selfc, nd, hgt, res_map (cap,),
+    members (Bp,G) i32, ptr (Bp,G) i32, lens (Bp,G) i32) -> 11-tuple`` of
+    a fresh chunk's resident state: bits (Bp,G,Wp) u32, alive/dirty i8,
+    CNT (Bp,G,Rp) i32, colsize (Bp,Rp) i32, memcol/s/selfc/nd/hgt/cost
+    (Bp,G) i32 — the exact shapes/dtypes `ResidentBitmapArena` uploads on
+    the host-rebuilt path. The bank arrays are read WITHOUT donation, so
+    concurrent chunk thunks may extract from the same bank.
+    """
+    key = ("extract", Bp, G, Rp, Wp, Lp, cap, E)
+    fn = _EXTRACT_CACHE.get(key)
+    if fn is not None:
+        return fn
+
+    per_b = functools.partial(ref.bank_extract_group, Rp=Rp, Wp=Wp, Lp=Lp)
+
+    @jax.jit
+    def fn(gids, cnts, size, selfc, nd, hgt, res_map, members, ptr, lens):
+        return jax.vmap(per_b,
+                        in_axes=(None, None, None, None, None, None, None,
+                                 0, 0, 0))(gids, cnts, size, selfc, nd,
+                                           hgt, res_map, members, ptr, lens)
+
+    _EXTRACT_CACHE[key] = fn
     return fn
 
 

@@ -433,6 +433,154 @@ def round_from_ranked(alive, dirty, CNT, colsize, memcol, s, selfc, nd, hgt,
 
 
 # ---------------------------------------------------------------------------
+# Adjacency-bank carry (ISSUE 9): advance + extract twins
+# ---------------------------------------------------------------------------
+_INT32_INF = (1 << 31) - 1
+
+
+def bank_advance(gids, cnts, size, selfc, nd, hgt, res_map, slab, Tp: int):
+    """Advance the resident adjacency bank by ONE applied merge batch.
+
+    ``gids``/``cnts`` are the (E,) append-only id/count streams, the four
+    (cap,) stat arrays mirror `SluggerState`'s size/selfcnt/ndesc/height,
+    ``res_map`` is the pre-batch root map, and ``slab`` is the (8, Pp) i32
+    instruction ``[A, Z, M, out_ptr, a_ptr, a_len, z_ptr, z_len]`` (pads
+    carry ``A = Z = M = cap``, ``out_ptr = E``, zero lengths — every pad
+    write scatter-drops). ``Tp`` is the padded flattened entry count.
+
+    The batch is the device twin of `SluggerState.merge_batch`'s row build:
+    gather both parents' bank rows, resolve every gid through the PRE-batch
+    ``res_map`` (exactly the host's `resolve` at gather time), drop entries
+    internal to the pair (their count sum, halved, is ``cab``), coalesce
+    duplicate roots (stable two-key sort + segment heads — the host's keyed
+    `argsort` + `reduceat`), and append each pair's unique external
+    ``(root, count)`` entries at ``out_ptr`` in ascending-root order. The
+    head count per pair equals the host's ``row_len[M]`` at creation, which
+    the caller mirrors into its host length table.
+    """
+    i32 = jnp.int32
+    E = gids.shape[0]
+    cap = res_map.shape[0]
+    Pp = slab.shape[1]
+    A, Z, M, outp = slab[0], slab[1], slab[2], slab[3]
+    aptr, alen, zptr, zlen = slab[4], slab[5], slab[6], slab[7]
+    ub = alen + zlen
+    cum = jnp.cumsum(ub)
+    total = cum[Pp - 1]
+    j = jnp.arange(Tp, dtype=i32)
+    p = jnp.searchsorted(cum, j, side="right").astype(i32)
+    pc = jnp.minimum(p, Pp - 1)
+    w = j - (cum[pc] - ub[pc])
+    from_z = w >= alen[pc]
+    idx = jnp.where(from_z, zptr[pc] + (w - alen[pc]), aptr[pc] + w)
+    ev = j < total
+    idxc = jnp.clip(idx, 0, E - 1)
+    e_cnt = jnp.where(ev, cnts[idxc], 0)
+    rg = res_map[jnp.clip(gids[idxc], 0, cap - 1)]
+    internal = ev & ((rg == A[pc]) | (rg == Z[pc]))
+    # A→B and B→A each counted once — the exact host `cab` halving
+    cab = jax.ops.segment_sum(jnp.where(internal, e_cnt, 0), pc,
+                              num_segments=Pp) // 2
+    keep = ev & ~internal
+    # stable sort by (pair, root): one composite i32 key would overflow, so
+    # sort by root first, then stably by pair — kept entries of one pair end
+    # up contiguous and ascending by root, dropped entries sink to the end
+    o1 = jnp.argsort(jnp.where(keep, rg, _INT32_INF), stable=True)
+    o2 = jnp.argsort(jnp.where(keep, pc, Pp)[o1], stable=True)
+    o = o1[o2]
+    sp, srg, skeep, sc = pc[o], rg[o], keep[o], e_cnt[o]
+    prev_p = jnp.concatenate([jnp.full((1,), -1, i32), sp[:-1]])
+    prev_r = jnp.concatenate([jnp.full((1,), -1, i32), srg[:-1]])
+    head = skeep & ((sp != prev_p) | (srg != prev_r))
+    rank = jnp.cumsum(head.astype(i32)) - 1          # unique-entry index
+    rankc = jnp.clip(rank, 0, Tp - 1)
+    csum = jax.ops.segment_sum(jnp.where(skeep, sc, 0), rankc,
+                               num_segments=Tp)      # coalesced counts
+    base = jax.ops.segment_min(jnp.where(skeep, rank, Tp),
+                               jnp.where(skeep, sp, Pp),
+                               num_segments=Pp + 1)[:Pp]
+    tgt = jnp.where(head, outp[sp] + (rank - base[sp]), E)
+    gids = gids.at[tgt].set(srg, mode="drop")
+    cnts = cnts.at[tgt].set(csum[rankc], mode="drop")
+    # per-id stats of the minted parents (pads gather id 0, scatter-drop)
+    Ac = jnp.clip(A, 0, cap - 1)
+    Zc = jnp.clip(Z, 0, cap - 1)
+    size = size.at[M].set(size[Ac] + size[Zc], mode="drop")
+    selfc = selfc.at[M].set(selfc[Ac] + selfc[Zc] + cab, mode="drop")
+    nd = nd.at[M].set(nd[Ac] + nd[Zc] + 2, mode="drop")
+    hgt = hgt.at[M].set(jnp.maximum(hgt[Ac], hgt[Zc]) + 1, mode="drop")
+    # ids rooted at A or Z now root at M (single composition step — A and Z
+    # were roots before this batch, so no pointer chasing is needed)
+    upd = jnp.arange(cap, dtype=i32)
+    upd = upd.at[A].set(M, mode="drop").at[Z].set(M, mode="drop")
+    return gids, cnts, size, selfc, nd, hgt, upd[res_map]
+
+
+def bank_extract_group(gids, cnts, size, selfc, nd, hgt, res_map, members,
+                       ptr, lens, Rp: int, Wp: int, Lp: int):
+    """Build ONE group's resident-arena tensors straight from the bank.
+
+    ``members``/``ptr``/``lens`` are the group's (G,) member roots (pad −1)
+    and their bank row extents. The column universe is the sorted union of
+    the members and their entries' CURRENT roots (``res_map`` resolution =
+    the host's `resolve` at gather time); duplicate-root entries coalesce by
+    scatter-add, exactly like the host's keyed unique — so CNT/colsize/
+    memcol/bits come out bit-identical to a host `_fill` of the same chunk.
+    Cost rows evaluate the clamped integer-Saving terms in int32; the bank
+    init guard (Σcnt conservation) keeps every count and cost below C_CLAMP,
+    so no device-side overflow check is needed.
+    """
+    i32 = jnp.int32
+    INF = jnp.int32(_INT32_INF)
+    G = members.shape[0]
+    E = gids.shape[0]
+    cap = res_map.shape[0]
+    valid_mem = members >= 0
+    mem_c = jnp.clip(members, 0, cap - 1)
+    cum = jnp.cumsum(lens)
+    total = cum[G - 1]
+    j = jnp.arange(Lp, dtype=i32)
+    r = jnp.searchsorted(cum, j, side="right").astype(i32)
+    rc = jnp.minimum(r, G - 1)
+    idx = ptr[rc] + (j - (cum[rc] - lens[rc]))
+    ev = j < total
+    idxc = jnp.clip(idx, 0, E - 1)
+    e_cnt = jnp.where(ev, cnts[idxc], 0)
+    e_root = res_map[jnp.clip(gids[idxc], 0, cap - 1)]
+    # sorted column universe (members always own a column; INF pads last)
+    U = jnp.sort(jnp.concatenate([jnp.where(valid_mem, members, INF),
+                                  jnp.where(ev, e_root, INF)]))
+    prev = jnp.concatenate([jnp.full((1,), -1, i32), U[:-1]])
+    head = (U != prev) & (U != INF)
+    rankU = jnp.cumsum(head.astype(i32)) - 1
+    colgid = jnp.full((Rp,), INF, i32).at[
+        jnp.where(head, rankU, Rp)].set(U, mode="drop")
+    memcol = jnp.where(valid_mem,
+                       jnp.searchsorted(colgid, mem_c).astype(i32), 0)
+    ec = jnp.minimum(jnp.searchsorted(colgid, e_root).astype(i32), Rp - 1)
+    CNT = jnp.zeros((G, Rp), i32).at[rc, ec].add(e_cnt)
+    colsize = jnp.where(colgid != INF, size[jnp.clip(colgid, 0, cap - 1)], 0)
+    s_g = jnp.where(valid_mem, size[mem_c], 0)
+    selfc_g = jnp.where(valid_mem, selfc[mem_c], 0)
+    nd_g = jnp.where(valid_mem, nd[mem_c], 0)
+    hgt_g = jnp.where(valid_mem, hgt[mem_c], 0)
+    # packed bitmaps: presence of column c lands in u32 word c>>5 bit c&31 —
+    # the uint32 view of the host's little-endian uint64 layout
+    pres = jnp.zeros((G, Wp * 32), dtype=jnp.uint32).at[:, :Rp].set(
+        (CNT > 0).astype(jnp.uint32))
+    bits = (pres.reshape(G, Wp, 32)
+            << jnp.arange(32, dtype=jnp.uint32)).sum(
+                axis=-1, dtype=jnp.uint32)
+    terms = pair_cost_c(CNT, poss_pair_c(s_g[:, None], colsize[None, :]))
+    cost = terms.sum(axis=-1, dtype=i32)
+    cost = cost + pair_cost_c(selfc_g, poss_self_c(s_g)) + nd_g
+    cost = jnp.where(valid_mem, cost, 0)
+    alive = valid_mem.astype(jnp.int8)
+    return (bits, alive, alive, CNT, colsize, memcol, s_g, selfc_g, nd_g,
+            hgt_g, cost)
+
+
+# ---------------------------------------------------------------------------
 # Fold with resident counts (the whole-iteration residency fold)
 # ---------------------------------------------------------------------------
 def fold_pairs_counts(bits, alive, dirty, CNT, colsize, memcol, s, selfc,

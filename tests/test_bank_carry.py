@@ -1,0 +1,255 @@
+"""Device-resident adjacency bank carry (ISSUE 9 / DESIGN.md §9).
+
+The bank inverts the workspace dataflow: within a run the device streams
+are authoritative and the host only keeps the row directory. These tests
+pin the contract at its edges — zero-merge iterations leave the bank
+untouched, pow2 regrow preserves every row, groups dying mid-run stay
+bit-identical to the numpy backend, `host_rows` (the verification
+contract) matches `SluggerState.gather_rows`, and — the core guarantee —
+bank-EXTRACTED arena state is bit-identical to the host-rebuilt
+`from_workspace` path, with `REPRO_FORCE_PALLAS=1` forcing the kernel
+dispatch on the graphs the equivalence suite uses (ba/er/caveman).
+"""
+import numpy as np
+import pytest
+
+from repro.core.slugger import SluggerState
+from repro.graphs import generators as GG
+
+jax = pytest.importorskip("jax")
+
+
+def _ctx_with_bank(g, counter=None):
+    from repro.core.resident import ResidentRunContext
+    from repro.core.transfer import GLOBAL
+
+    ctx = ResidentRunContext(g, counter=counter or GLOBAL, bank=True)
+    assert ctx.bank is not None
+    return ctx
+
+
+def _merge_and_advance(st, ctx, A, Z):
+    """Mirror one applied batch on host state and bank, engine-style."""
+    A = np.asarray(A, dtype=np.int64)
+    Z = np.asarray(Z, dtype=np.int64)
+    M = st.merge_batch(A, Z)
+    ctx.advance([(A, Z, M, st.row_len[M].copy())])
+    return M
+
+
+def _assert_rows_match(st, ctx, roots):
+    """bank.host_rows == state.gather_rows for ``roots`` (both coalesce by
+    current resolution; gather_rows compacts the host arena in place)."""
+    got = ctx.bank.host_rows(roots, ctx._res_map)
+    seg, nbr, cnt = st.gather_rows(np.asarray(roots, dtype=np.int64))
+    for i in range(len(roots)):
+        sel = seg == i
+        want_nbr, want_cnt = nbr[sel], cnt[sel]
+        order = np.argsort(want_nbr, kind="stable")
+        assert np.array_equal(got[i][0], want_nbr[order]), roots[i]
+        assert np.array_equal(got[i][1], want_cnt[order]), roots[i]
+
+
+# -- degenerate iterations ----------------------------------------------------
+def test_bank_zero_merge_iteration_untouched():
+    from repro.core.transfer import TransferCounter
+
+    g = GG.caveman(4, 5, 0.0, seed=1)
+    counter = TransferCounter()
+    ctx = _ctx_with_bank(g, counter)
+    bank = ctx.bank
+    top0, cap0 = bank.top, bank.capacity
+    ptr0, len0 = bank.ptr_host.copy(), bank.len_host.copy()
+    rm0 = ctx.root_of_host()
+    bank0 = counter.snapshot()["phases"].get("bank", 0)
+    e = np.zeros(0, np.int64)
+    ctx.advance([])
+    ctx.advance([(e, e, e, e)])
+    assert bank.top == top0 and bank.capacity == cap0
+    assert np.array_equal(bank.ptr_host, ptr0)
+    assert np.array_equal(bank.len_host, len0)
+    assert counter.snapshot()["phases"].get("bank", 0) == bank0
+    assert np.array_equal(ctx.root_of_host(), rm0)
+
+
+def test_bank_mode_rejects_legacy_triples():
+    g = GG.caveman(2, 4, 0.0, seed=0)
+    ctx = _ctx_with_bank(g)
+    with pytest.raises(ValueError, match="on_batch"):
+        ctx.advance([(np.array([0]), np.array([1]), np.array([g.n]))])
+
+
+# -- row contract across merges, chains, and regrow ---------------------------
+def test_bank_rows_match_gather_rows_after_merges():
+    g = GG.caveman(3, 6, 0.08, seed=3)
+    st = SluggerState(g)
+    ctx = _ctx_with_bank(g)
+    _merge_and_advance(st, ctx, [0, 6, 12], [1, 7, 13])
+    _merge_and_advance(st, ctx, [2, 8], [3, 9])
+    roots = np.unique(st.root_of)
+    assert roots.size < g.n  # the fixture actually merged something
+    _assert_rows_match(st, ctx, list(roots[:8]))
+    # consumed roots own no bank row anymore
+    assert (ctx.bank.len_host[[0, 1, 6, 7]] == 0).all()
+
+
+def test_bank_pow2_regrow_preserves_rows():
+    """A chain of merges re-appends whole rows every step — enough to
+    outgrow the initial 2·m capacity and force (at least one) pow2 regrow;
+    every row must survive the device-to-device copy."""
+    g = GG.caveman(1, 16, 0.0, seed=0)  # one 16-clique
+    st = SluggerState(g)
+    ctx = _ctx_with_bank(g)
+    cap0 = ctx.bank.capacity
+    cur = 0
+    for nxt in range(1, 16):
+        M = _merge_and_advance(st, ctx, [cur], [nxt])
+        cur = int(M[0])
+    assert ctx.bank.capacity > cap0          # the regrow actually happened
+    assert ctx.bank.top > cap0
+    _assert_rows_match(st, ctx, [cur])
+    assert np.array_equal(ctx.root_of_host(), st.root_of)
+    # the final root absorbed the whole clique: its row is empty
+    assert ctx.bank.host_rows([cur], ctx._res_map)[0][0].size == 0
+
+
+def test_bank_stats_track_state_exactly():
+    g = GG.barabasi_albert(60, 3, seed=5)
+    st = SluggerState(g)
+    ctx = _ctx_with_bank(g)
+    _merge_and_advance(st, ctx, [0, 2, 4], [1, 3, 5])
+    _merge_and_advance(st, ctx, [g.n], [g.n + 1])  # minted parents re-merge
+    bank = ctx.bank
+    size = np.asarray(bank._size)
+    selfc = np.asarray(bank._selfc)
+    nd = np.asarray(bank._nd)
+    hgt = np.asarray(bank._hgt)
+    ids = np.arange(st.n_ids)
+    assert np.array_equal(size[ids], st.size[ids])
+    assert np.array_equal(selfc[ids], st.selfcnt[ids])
+    assert np.array_equal(nd[ids], st.ndesc[ids])
+    assert np.array_equal(hgt[ids], st.height[ids])
+
+
+# -- groups dying mid-run -----------------------------------------------------
+def test_bank_engine_matches_numpy_when_groups_die():
+    """A long resident run in which whole caves collapse to single roots
+    (their groups die mid-run) stays decision- and summary-identical to
+    the numpy backend, and dead roots leave the bank directory."""
+    from repro.core import summarize
+    from repro.core.engine import SummarizerEngine
+
+    g = GG.caveman(3, 5, 0.02, seed=13)
+    want = summarize(g, T=8, seed=6, backend="numpy")
+    e = SummarizerEngine(backend="resident", T=8, seed=6)
+    state, _ = e.merge_forest(g)
+    got = summarize(g, T=8, seed=6, backend="resident")
+    assert np.array_equal(want.parent, got.parent)
+    assert np.array_equal(want.edges, got.edges)
+    assert e._run_ctx is not None and e._run_ctx.bank is not None
+    fwd = state.forward[: state.n_ids]
+    dead = np.flatnonzero(fwd != np.arange(state.n_ids))
+    assert dead.size  # caves collapsed: some roots really died
+    assert (e._run_ctx.bank.len_host[dead] == 0).all()
+
+
+# -- extraction bit-identity vs the host-rebuilt path -------------------------
+def _extraction_case(g, batches, groups, G):
+    """After ``batches`` of merges, a bank-extracted arena must equal the
+    host-rebuilt `from_workspace` arena of the SAME chunk, bit for bit."""
+    from repro.core.merging import BatchedGroupWorkspace
+    from repro.core.resident import ResidentBitmapArena
+
+    st = SluggerState(g)
+    ctx = _ctx_with_bank(g)
+    for A, Z in batches:
+        _merge_and_advance(st, ctx, A, Z)
+    full = BatchedGroupWorkspace.build_bucket(st, groups, G)
+    shell = BatchedGroupWorkspace.build_bucket(st, groups, G, shell=True)
+    assert len(full) == len(shell)  # chunking is host-planned on both paths
+    for ws_f, ws_s in zip(full, shell):
+        assert ws_s.CNT.shape[2] == 0 and ws_s.bits.shape[2] == 1
+        assert np.array_equal(ws_f.members, ws_s.members)
+        a_host = ResidentBitmapArena.from_workspace(ws_f, top_j=4)
+        a_bank = ResidentBitmapArena.from_bank(ctx.bank, ws_s, ctx._res_map,
+                                               top_j=4)
+        assert a_bank.Bp == a_host.Bp and a_bank.Wp == a_host.Wp
+        assert a_bank.Rp == a_host.Rp
+        assert np.array_equal(a_bank.host_bits(), a_host.host_bits())
+        assert np.array_equal(a_bank.host_alive(), a_host.host_alive())
+        for got, want in zip(a_bank.host_counts(), a_host.host_counts()):
+            assert got.dtype == want.dtype
+            assert np.array_equal(got, want)
+        assert np.array_equal(np.asarray(a_bank._dirty),
+                              np.asarray(a_host._dirty))
+
+
+def _alive_groups(st, k):
+    roots = np.unique(st.root_of)
+    return [roots[i:i + k] for i in range(0, roots.size, k)
+            if roots[i:i + k].size >= 2]
+
+
+@pytest.mark.parametrize("force", ["0", "1"])
+def test_bank_extraction_bit_identical(force, monkeypatch):
+    monkeypatch.setenv("REPRO_FORCE_PALLAS", force)
+    g = GG.caveman(4, 6, 0.05, seed=2)
+    st = SluggerState(g)
+    batches = [([0, 6, 12], [1, 7, 13]), ([2, 18], [3, 19])]
+    for A, Z in batches:
+        st.merge_batch(np.asarray(A, np.int64), np.asarray(Z, np.int64))
+    groups = _alive_groups(st, 4)
+    _extraction_case(g, batches, groups, 4)
+
+
+@pytest.mark.parametrize("gen", ["ba", "er", "caveman"])
+def test_bank_extraction_forced_kernel_all_graphs(gen, monkeypatch):
+    """`REPRO_FORCE_PALLAS=1` on the three equivalence-suite graph
+    families: extraction AND a full forced-kernel sweep from the extracted
+    state agree with the host-rebuilt path."""
+    monkeypatch.setenv("REPRO_FORCE_PALLAS", "1")
+    g = {"ba": lambda: GG.barabasi_albert(80, 3, seed=7),
+         "er": lambda: GG.erdos_renyi(90, 0.06, seed=8),
+         "caveman": lambda: GG.caveman(5, 6, 0.1, seed=9)}[gen]()
+    st = SluggerState(g)
+    pairs = np.unique(st.root_of)[:8]
+    batches = [(pairs[0::2], pairs[1::2])]
+    for A, Z in batches:
+        st.merge_batch(np.asarray(A, np.int64), np.asarray(Z, np.int64))
+    groups = _alive_groups(st, 6)
+    _extraction_case(g, batches, groups, 8)
+
+
+def test_bank_sweep_plans_match_host_rebuilt(monkeypatch):
+    """Record-mode sweeps from a bank-extracted arena and a host-rebuilt
+    arena record IDENTICAL merge rounds (the decision-level face of the
+    extraction bit-identity), under the forced kernel dispatch."""
+    monkeypatch.setenv("REPRO_FORCE_PALLAS", "1")
+    from repro.core.merging import (BatchedGroupWorkspace, MergePlan,
+                                    ResidentRankSource)
+    from repro.core.resident import ResidentBitmapArena
+
+    g = GG.caveman(2, 8, 0.0, seed=4)
+    groups = [np.arange(8), np.arange(8) + 8]
+    seeds = np.arange(2, dtype=np.uint64) + 11
+
+    def sweep(shell):
+        st = SluggerState(g)
+        ctx = _ctx_with_bank(g)
+        plans = [MergePlan(gr) for gr in groups]
+        wss = BatchedGroupWorkspace.build_bucket(
+            st, groups, 8, plans=plans, group_seeds=seeds, shell=shell)
+        for ws in wss:
+            if shell:
+                arena = ResidentBitmapArena.from_bank(
+                    ctx.bank, ws, ctx._res_map, top_j=4)
+            else:
+                arena = ResidentBitmapArena.from_workspace(ws, top_j=4)
+            ws.sweep(0.0, ResidentRankSource(arena))
+        return plans
+
+    want, got = sweep(False), sweep(True)
+    for pw, pg in zip(want, got):
+        assert len(pw.rounds) == len(pg.rounds)
+        for (aw, zw), (ag, zg) in zip(pw.rounds, pg.rounds):
+            assert np.array_equal(aw, ag) and np.array_equal(zw, zg)

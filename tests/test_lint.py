@@ -15,10 +15,11 @@ import textwrap
 from repro.analysis.baseline import apply_baseline, load_baseline
 from repro.analysis.core import lint_source, lint_paths
 from repro.analysis.rules import (DTYPE_WIDTH, HOST_SYNC_IN_LOOP,
-                                  INT_RANK_ONLY, JIT_CACHE_BOUND,
-                                  KERNEL_TRIPLE, NO_RECURSION_LIMIT,
-                                  NONDET_ITER, RULES, SEED_DISCIPLINE,
-                                  TIME_MONOTONIC, rules_by_name)
+                                  INT_RANK_ONLY, ITER_REUPLOAD,
+                                  JIT_CACHE_BOUND, KERNEL_TRIPLE,
+                                  NO_RECURSION_LIMIT, NONDET_ITER, RULES,
+                                  SEED_DISCIPLINE, TIME_MONOTONIC,
+                                  rules_by_name)
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -257,6 +258,70 @@ def test_host_sync_in_loop_quiet_on_host_array_reshuffle():
     """
     assert rules_hit(src, "src/repro/core/merging.py",
                      HOST_SYNC_IN_LOOP()) == []
+
+
+# ---------------------------------------------------------------- REUPLOAD
+def test_iter_reupload_fires_on_loop_invariant_upload():
+    src = """
+        import jax.numpy as jnp
+        class A:
+            def run(self, bits, iters, counter):
+                for t in range(iters):
+                    dev = jnp.asarray(bits)   # same tensor every iteration
+                    counter.add_h2d(dev.nbytes)
+                return dev
+    """
+    assert rules_hit(src, "src/repro/core/resident.py", ITER_REUPLOAD()) == [
+        "ITER-REUPLOAD"]
+
+
+def test_iter_reupload_fires_on_put_method():
+    src = """
+        class A:
+            def run(self, instr_all, counter):
+                while True:
+                    dev = self._put(instr_all)
+                    counter.add_h2d(dev.nbytes)
+    """
+    assert rules_hit(src, "src/repro/core/resident.py", ITER_REUPLOAD()) == [
+        "ITER-REUPLOAD"]
+
+
+def test_iter_reupload_quiet_on_per_iteration_slabs():
+    src = """
+        import numpy as np
+        import jax.numpy as jnp
+        class A:
+            def run(self, batches, counter):
+                for batch in batches:
+                    slab = np.zeros((8, 64), dtype=np.int32)
+                    slab[0] = batch
+                    dev = jnp.asarray(slab)   # built fresh in the loop body
+                    counter.add_h2d(slab.nbytes)
+                # uploads outside any loop are one-time by construction
+                final = jnp.asarray(batches)
+                return dev, final
+    """
+    assert rules_hit(src, "src/repro/core/resident.py", ITER_REUPLOAD()) == []
+
+
+def test_iter_reupload_out_of_scope_and_suppressed():
+    src = """
+        import jax.numpy as jnp
+        def f(bits, iters):
+            for _ in range(iters):
+                dev = jnp.asarray(bits)
+            return dev
+    """
+    assert rules_hit(src, "src/repro/core/merging.py", ITER_REUPLOAD()) == []
+    sup = ("import jax.numpy as jnp\n"
+           "def f(bits, iters):\n"
+           "    for _ in range(iters):\n"
+           "        dev = jnp.asarray(bits)  # lint: disable=ITER-REUPLOAD "
+           "-- convergence probe re-reads a host-mutated buffer\n"
+           "    return dev\n")
+    res = lint_source(sup, "src/repro/core/resident.py", [ITER_REUPLOAD()])
+    assert res.findings == [] and len(res.suppressed) == 1
 
 
 # ---------------------------------------------------------------- TRIPLE

@@ -222,6 +222,20 @@ def test_engine_transfer_iters_sum_to_total():
     # the whole iteration is device-resident: candgen bytes are per-root
     # results only, and rank traffic is the (K,2) verdicts + θ̂ scalars
     assert any(d["phases"].get("candgen", 0) > 0 for d in iters)
+    # every crossing is attributed: no phase outside the audited set
+    allowed = {"init", "upload", "rank", "fold", "carry", "candgen",
+               "bank", "extract", "sync"}
+    assert set(total["phases"]) <= allowed, total["phases"]
+    # the bank path is live on this run: merge batches advance the bank,
+    # chunk state extracts on device, and NO iteration re-uploads host
+    # workspaces (phase `upload` stays zero even in iteration 1 — the bank
+    # seeds under `init`)
+    assert e._run_ctx is not None and e._run_ctx.bank is not None
+    assert total["phases"].get("bank", 0) > 0
+    assert total["phases"].get("extract", 0) > 0
+    assert total["phases"].get("upload", 0) == 0
+    assert total["phases"].get("carry", 0) == 0  # superseded by `bank`
+    assert iters[0]["phases"].get("init", 0) > 0  # seeding lands in iter 1
 
 
 def test_transfer_counter_thread_safe():
