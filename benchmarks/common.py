@@ -10,8 +10,11 @@ ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
 
 def save_result(name: str, payload: dict):
     os.makedirs(ARTIFACTS, exist_ok=True)
-    with open(os.path.join(ARTIFACTS, f"{name}.json"), "w") as f:
+    path = os.path.join(ARTIFACTS, f"{name}.json")
+    tmp = path + ".part"
+    with open(tmp, "w") as f:
         json.dump(payload, f, indent=1, default=float)
+    os.replace(tmp, path)
 
 
 def load_result(name: str):

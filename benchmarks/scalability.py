@@ -47,14 +47,36 @@ def run(quick: bool = True):
     return payload
 
 
-def _merge_phase_secs(engine: SummarizerEngine, g) -> dict:
-    engine.merge_forest(g)
+def _merge_phase_secs(engine: SummarizerEngine, g, **run_kw) -> dict:
+    engine.merge_forest(g, **run_kw)
     stats = engine.stats
     return {
         "sec": float(sum(stats[name] for name in STAGE_ORDER)),
         "stages": {name: float(stats[name]) for name in STAGE_ORDER},
         "merges": int(stats["merges"]),
+        "checkpoint_sec": float(stats.get("checkpoint", 0.0)),
     }
+
+
+def _checkpoint_overhead(g, backend: str, T: int) -> dict:
+    """Plan-log checkpoint commit cost as a fraction of merge wall (ISSUE
+    10 gate: < 5%). One engine run with per-iteration checkpointing into a
+    scratch dir; the fraction compares the atomic-commit time against the
+    five engine stages plus the commit itself."""
+    import shutil
+    import tempfile
+
+    ckpt = tempfile.mkdtemp(prefix="slugger-ckpt-bench-")
+    try:
+        res = _merge_phase_secs(
+            SummarizerEngine(partitions=1, backend=backend, T=T, seed=0),
+            g, checkpoint_dir=ckpt)
+    finally:
+        shutil.rmtree(ckpt, ignore_errors=True)
+    frac = res["checkpoint_sec"] / max(res["sec"] + res["checkpoint_sec"],
+                                       1e-12)
+    return {"merge_sec": res["sec"], "checkpoint_sec": res["checkpoint_sec"],
+            "fraction": frac, "fraction_ok": frac < 0.05}
 
 
 def run_partitioned(quick: bool = True, partitions=(1, 2, 4),
@@ -91,9 +113,17 @@ def run_partitioned(quick: bool = True, partitions=(1, 2, 4),
     print(f"\n== Partition sweep: merge phase on {name} (T={T}) ==")
     print(fmt_table(rows, ["graph", "m", "engine", "parts", "time", "merges",
                            "vs loop", "vs p1"]))
+    ckpt = _checkpoint_overhead(g, backend, T)
+    print(f"   checkpoint commit overhead: {ckpt['checkpoint_sec']*1e3:.1f}ms "
+          f"over {ckpt['merge_sec']:.2f}s merge = "
+          f"{100*ckpt['fraction']:.2f}% (gate < 5%)")
     payload = {"graph": name, "m": g.m, "T": T, "backend": backend,
-               "loop_baseline": loop, "partitions": sweep}
+               "loop_baseline": loop, "partitions": sweep,
+               "checkpoint_overhead": ckpt}
     save_result("BENCH_partitioned", payload)
+    assert ckpt["fraction_ok"], (
+        f"checkpoint commit cost {100*ckpt['fraction']:.2f}% of "
+        f"per-iteration wall exceeds the 5% gate")
     return payload
 
 
@@ -347,11 +377,20 @@ def run_bank_smoke():
     """CI bank-carry smoke (ISSUE 9): a tiny T=3 resident run, asserting
     the bank engaged, steady-state upload is zero, and decisions match the
     numpy backend bit for bit. Pair with ``REPRO_FORCE_PALLAS=1`` so the
-    extraction/fold kernels run (interpret mode on CPU)."""
+    extraction/fold kernels run (interpret mode on CPU). The run checkpoints
+    every iteration (ISSUE 10): plan-log commits are host-side file IO, so
+    the zero-steady-upload property must survive them unchanged."""
+    import shutil
+    import tempfile
+
     g = generators.caveman(40, 5, 0.05, seed=0)
     want = summarize(g, T=3, seed=0, backend="numpy")
     eng = SummarizerEngine(partitions=1, backend="resident", T=3, seed=0)
-    eng.merge_forest(g)
+    ckpt = tempfile.mkdtemp(prefix="slugger-ckpt-smoke-")
+    try:
+        eng.merge_forest(g, checkpoint_dir=ckpt)
+    finally:
+        shutil.rmtree(ckpt, ignore_errors=True)
     got = summarize(g, T=3, seed=0, backend="resident")
     assert np.array_equal(want.parent, got.parent)
     assert np.array_equal(want.edges, got.edges)

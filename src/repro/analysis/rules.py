@@ -557,10 +557,101 @@ class TIME_MONOTONIC(Rule):
                     "`time.perf_counter()` for durations")
 
 
+# ---------------------------------------------------------------------------
+# ATOMIC-WRITE
+# ---------------------------------------------------------------------------
+class ATOMIC_WRITE(Rule):
+    name = "ATOMIC-WRITE"
+    summary = ("durable artifacts (checkpoints, caches, spill runs, "
+               "manifests) are written temp-then-rename, never in place")
+    contract = (
+        "A kill mid-write leaves an in-place-written artifact truncated, "
+        "and every consumer then trusts a half file: a torn checkpoint "
+        "manifest resumes from garbage, a torn spill run merges partial "
+        "edges into a LATER ingestion. The protocol (ISSUE 10; "
+        "core/checkpoint.py, graphs/partitioned.py) is write to a "
+        "sibling temp path, then commit with the atomic `os.replace`/"
+        "`os.rename`. Flags: `open(path, 'w'/'wb')` or `np.save`/"
+        "`np.savez*` whose path expression mentions a durable-artifact "
+        "word (ckpt/checkpoint/artifact/cache/spill/sidecar/manifest) in "
+        "a scope with no `os.replace`/`os.rename` commit.")
+    scope = ("src/repro/", "benchmarks/")
+    exclude = ("src/repro/analysis/",)
+
+    _KEYWORD = re.compile(
+        r"ckpt|checkpoint|artifact|cache|spill|sidecar|manifest", re.I)
+    _NP_SAVERS = {"np.save", "numpy.save", "np.savez", "numpy.savez",
+                  "np.savez_compressed", "numpy.savez_compressed"}
+
+    def _arg_text(self, node) -> str:
+        """All identifiers + string literals in an expression subtree —
+        the haystack the durable-artifact keywords are matched against."""
+        parts = []
+        for leaf in ast.walk(node):
+            if isinstance(leaf, ast.Name):
+                parts.append(leaf.id)
+            elif isinstance(leaf, ast.Attribute):
+                parts.append(leaf.attr)
+            elif isinstance(leaf, ast.Constant) and isinstance(leaf.value, str):
+                parts.append(leaf.value)
+        return " ".join(parts)
+
+    def _write_target(self, call):
+        """The path expression of a durable write call, or None."""
+        fn = dotted(call.func)
+        if fn == "open":
+            mode = None
+            if len(call.args) >= 2:
+                mode = call.args[1]
+            for kw in call.keywords:
+                if kw.arg == "mode":
+                    mode = kw.value
+            if (isinstance(mode, ast.Constant) and isinstance(mode.value, str)
+                    and "w" in mode.value and call.args):
+                return call.args[0]
+            return None
+        if fn in self._NP_SAVERS and call.args:
+            return call.args[0]
+        return None
+
+    def check(self, ctx):
+        # group calls by enclosing function scope: the quiet condition is
+        # "this scope also commits with os.replace/os.rename"
+        scopes: dict = {}
+
+        def visit(node, scope):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                scope = node
+            elif isinstance(node, ast.Call):
+                scopes.setdefault(id(scope), [[], False])
+                entry = scopes[id(scope)]
+                fn = dotted(node.func)
+                if fn in ("os.replace", "os.rename"):
+                    entry[1] = True
+                else:
+                    target = self._write_target(node)
+                    if (target is not None
+                            and self._KEYWORD.search(self._arg_text(target))):
+                        entry[0].append(node)
+            for child in ast.iter_child_nodes(node):
+                visit(child, scope)
+
+        visit(ctx.tree, ctx.tree)
+        for writes, has_commit in scopes.values():
+            if has_commit:
+                continue
+            for call in writes:
+                yield ctx.finding(
+                    self, call,
+                    "in-place write of a durable artifact; write to a "
+                    "sibling temp path and commit with `os.replace` so a "
+                    "kill mid-write never leaves a torn file")
+
+
 RULES = (SEED_DISCIPLINE(), JIT_CACHE_BOUND(), INT_RANK_ONLY(),
          NONDET_ITER(), NO_RECURSION_LIMIT(), DTYPE_WIDTH(),
          HOST_SYNC_IN_LOOP(), ITER_REUPLOAD(), KERNEL_TRIPLE(),
-         TIME_MONOTONIC())
+         TIME_MONOTONIC(), ATOMIC_WRITE())
 
 
 def rules_by_name():

@@ -43,6 +43,7 @@ from concurrent.futures import ThreadPoolExecutor
 
 import numpy as np
 
+from repro import faults
 from repro.core.merging import apply_plans, build_merge_work
 from repro.core.minhash import candidate_groups
 from repro.core.pruning import prune
@@ -158,9 +159,17 @@ class SummarizerEngine:
                 rc = self._run_ctx
                 if _mesh is None and rc is not None and rc.bank is not None:
                     # bank path: the chunk state EXTRACTS on device from the
-                    # resident adjacency bank — ws is a shape-only shell
-                    return ResidentBitmapArena.from_bank(
-                        rc.bank, ws, rc._res_map, top_j=_j)
+                    # resident adjacency bank — ws is a shape-only shell.
+                    # Extraction failures surface as BankFault so the stage
+                    # loop can degrade to host-rebuilt workspaces (§11) —
+                    # the shell ws carries no tensors, so a plain retry
+                    # against it would read garbage.
+                    try:
+                        return ResidentBitmapArena.from_bank(
+                            rc.bank, ws, rc._res_map, top_j=_j)
+                    except Exception as e:
+                        raise faults.BankFault(
+                            f"bank extract failed: {e!r}") from e
                 return ResidentBitmapArena.from_workspace(ws, top_j=_j,
                                                           mesh=_mesh)
             self._resident_factory = factory
@@ -249,18 +258,42 @@ class SummarizerEngine:
         Under the single-device resident backend the applied (A, Z, M)
         batches also feed the run context, which replays them against its
         device root map (plan-driven carry — the map never re-uploads)."""
+        ctx.merges = self._replay_plans(ctx.state, ctx.plans)
+
+    def _replay_plans(self, state, plans: list) -> int:
+        """Apply recorded plans to the global state — shared by the
+        exchange stage and checkpoint-resume replay. A live resident run
+        context rides along on the applied (A, Z, M) batches; if its bank
+        advance fails the GLOBAL state is already correct (plans applied
+        first), so the run degrades to the host workspace path and keeps
+        going instead of crashing."""
         if self._run_ctx is not None:
             batches: list = []
-            st = ctx.state
             # row_len[M] is pristine exactly at the on_batch hook — the bank
             # carry needs the minted rows' unique-external counts
-            ctx.merges = apply_plans(
-                ctx.state, ctx.plans,
+            merges = apply_plans(
+                state, plans,
                 on_batch=lambda A, Z, M: batches.append(
-                    (A, Z, M, st.row_len[M].copy())))
-            self._run_ctx.advance(batches)
-        else:
-            ctx.merges = apply_plans(ctx.state, ctx.plans)
+                    (A, Z, M, state.row_len[M].copy())))
+            try:
+                self._run_ctx.advance(batches)
+            except Exception as e:
+                self._degrade_to_host(state, "resident.bank.advance", e)
+            return merges
+        return apply_plans(state, plans)
+
+    def _degrade_to_host(self, state, site: str, exc) -> None:
+        """§11 degradation policy: drop the resident run context (bank,
+        device root map, device shingles) and finish the run on the
+        host-rebuilt workspace path — bit-identical by the unified-u32
+        shingle/ranking contract, just slower. Counted in
+        ``stats["degradations"]`` via the global ledger."""
+        faults.DEGRADATIONS.record(site, exc)
+        log.warning("degrading to host workspace path after %s fault: %r",
+                    site, exc)
+        self._run_ctx = None
+        from repro.core.minhash import host_shingle_provider
+        self._shingle_provider = host_shingle_provider(state.g)
 
     def _group_partitions(self, ctx: IterationContext) -> np.ndarray:
         """Partition of each group = owner of its smallest member root's
@@ -276,11 +309,36 @@ class SummarizerEngine:
         return ctx.pg.owner[min_leaf[key_roots]]
 
     # ------------------------------------------------------------------ run
-    def merge_forest(self, g):
+    def _config(self) -> dict:
+        """JSON-safe config snapshot recorded in checkpoints. The
+        DECISION_KEYS subset is resume-enforced; backend/partitions are
+        informational — replay determinism makes checkpoints portable
+        across both (test-enforced in tests/test_checkpoint_resume.py)."""
+        height = self.height_bound
+        return {
+            "T": self.T,
+            "seed": int(self.seed),
+            "max_group": int(self.max_group),
+            "top_j": int(self.top_j),
+            "height_bound": None if height is None else int(height),
+            "prune_steps": list(self.prune_steps),
+            "backend": self.backend,
+            "partitions": self.partitions,
+        }
+
+    def merge_forest(self, g, checkpoint_dir=None, resume: bool = False,
+                     checkpoint_every: int = 1):
         """Run the T merge iterations only; returns ``(state, pg)`` — the
         merge-forest state and the partitioned graph. Per-stage wall
         seconds land in ``self.stats``; the partition-sweep benchmark
-        reads the merge phase from there."""
+        reads the merge phase from there.
+
+        With ``checkpoint_dir`` set, the iteration's applied plan log is
+        committed atomically after every ``checkpoint_every``-th iteration
+        (`core/checkpoint.PlanCheckpointer`); ``resume=True`` replays the
+        newest committed log and continues from the next iteration — the
+        resumed summary is bit-identical to an uninterrupted run on every
+        backend and partition count (DESIGN.md §11)."""
         from repro.core.transfer import GLOBAL as TRANSFER
 
         pg = as_partitioned(g, self.partitions)
@@ -289,18 +347,62 @@ class SummarizerEngine:
         self._setup_dispatches(state.g)
         self.stats = {name: 0.0 for name in STAGE_ORDER}
         self.stats["merges"] = 0
+        self.stats["checkpoint"] = 0.0
+        deg_mark = faults.DEGRADATIONS.count()
         transfer_prev = transfer0
         self.stats["transfer_iters"] = []
+        ckpt = None
+        fingerprint = None
+        plan_log: list = []
+        t_start = 1
+        if checkpoint_dir is not None:
+            from repro.core.checkpoint import PlanCheckpointer, \
+                graph_fingerprint
+            fingerprint = graph_fingerprint(state.g)
+            ckpt = PlanCheckpointer(checkpoint_dir)
+            if resume:
+                loaded = ckpt.load_latest(fingerprint, self._config())
+                if loaded is not None:
+                    t_done, plan_log = loaded
+                    t0 = time.perf_counter()
+                    for plans in plan_log:
+                        self.stats["merges"] += self._replay_plans(state,
+                                                                   plans)
+                    self.stats["exchange"] += time.perf_counter() - t0
+                    t_start = t_done + 1
+                    self.stats["resumed_from"] = t_done
+                    log.info("resumed from checkpoint at iter %d (%d plans "
+                             "replayed)", t_done,
+                             sum(len(p) for p in plan_log))
         iter_streams = np.random.SeedSequence(self.seed).spawn(max(self.T, 1))
-        for t in range(1, self.T + 1):
+        for t in range(t_start, self.T + 1):
             theta = 0.0 if t == self.T else 1.0 / (1 + t)
             ctx = IterationContext(t, theta, state, pg)
             ctx.ss_groups, ctx.ss_merge = iter_streams[t - 1].spawn(2)
             for name in STAGE_ORDER:
                 t0 = time.perf_counter()
-                self.stages[name](self, ctx)
+                try:
+                    self.stages[name](self, ctx)
+                except faults.BankFault as e:
+                    # bank extraction died mid-stage: plans/thunks built
+                    # against the bank are shells — degrade, then rebuild
+                    # pack onward against the same iteration-start snapshot
+                    # and spawned streams (pure functions → identical
+                    # decisions, DESIGN.md §11)
+                    self._degrade_to_host(ctx.state,
+                                          "resident.bank.extract", e)
+                    self.stages["pack"](self, ctx)
+                    if name == "merge_round":
+                        self.stages["merge_round"](self, ctx)
                 self.stats[name] += time.perf_counter() - t0
+                faults.check(f"engine.{name}", iteration=t)
             self.stats["merges"] += ctx.merges
+            if ckpt is not None:
+                plan_log.append(ctx.plans)
+                if t % max(1, checkpoint_every) == 0 or t == self.T:
+                    t0 = time.perf_counter()
+                    ckpt.save(t, plan_log, fingerprint, self._config())
+                    self.stats["checkpoint"] += time.perf_counter() - t0
             snap = TRANSFER.snapshot()
             self.stats["transfer_iters"].append(
                 TRANSFER.delta_since(transfer_prev, now=snap))
@@ -310,11 +412,15 @@ class SummarizerEngine:
                 t, theta, len(ctx.groups), ctx.merges, state.alive.size,
                 self.partitions)
         self.stats["transfer"] = TRANSFER.delta_since(transfer0)
+        self.stats["degradations"] = faults.DEGRADATIONS.count() - deg_mark
         return state, pg
 
-    def run(self, g):
+    def run(self, g, checkpoint_dir=None, resume: bool = False,
+            checkpoint_every: int = 1):
         """Summarize end to end; returns the (pruned) `Summary`."""
-        state, pg = self.merge_forest(g)
+        state, pg = self.merge_forest(g, checkpoint_dir=checkpoint_dir,
+                                      resume=resume,
+                                      checkpoint_every=checkpoint_every)
         owner = pg.owner if self.partitions > 1 else None
         t0 = time.perf_counter()
         summary = _emit_encoding(state, backend=self.backend, owner=owner)

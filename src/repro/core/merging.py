@@ -25,6 +25,8 @@ makes every engine lossless by construction regardless of merge order.
 """
 from __future__ import annotations
 
+import logging
+
 import numpy as np
 
 from repro.core.bitops import popcount
@@ -176,6 +178,21 @@ class MergePlan:
     @property
     def n_merges(self) -> int:
         return sum(a.size for a, _ in self.rounds)
+
+    # -- checkpoint serialization (core/checkpoint.py) ---------------------
+    def to_state(self) -> dict:
+        """Plain-dict form for the plan-log checkpoint — decoupled from the
+        class layout so the on-disk format is versioned independently."""
+        return {"members0": self.members0,
+                "rounds": [(a, z) for a, z in self.rounds]}
+
+    @classmethod
+    def from_state(cls, state: dict) -> "MergePlan":
+        plan = cls(state["members0"])
+        for a, z in state["rounds"]:
+            plan.rounds.append((np.asarray(a, dtype=np.int64),
+                                np.asarray(z, dtype=np.int64)))
+        return plan
 
 
 def apply_plans(state, plans: list, on_batch=None) -> int:
@@ -490,7 +507,18 @@ class HostRankSource:
 
     def ranked(self, ws, rb, rr, j_max):
         if self.dispatch is not None:
-            inter_all = self.dispatch(ws.bits.view(np.uint32))  # (B, G, G)
+            try:
+                inter_all = self.dispatch(ws.bits.view(np.uint32))  # (B, G, G)
+            except Exception as e:
+                # degrade: the host popcount computes the SAME integer
+                # intersections, so ranking (and the summary) is unchanged —
+                # drop the dispatch for the rest of this source's life
+                from repro import faults
+                faults.DEGRADATIONS.record("rank.dispatch", e)
+                logging.getLogger("repro.engine").warning(
+                    "rank dispatch failed, degrading to host popcount: %r", e)
+                self.dispatch = None
+        if self.dispatch is not None:
             deg = np.diagonal(inter_all, axis1=1, axis2=2)
             inter = inter_all[rb, rr]
         else:

@@ -44,9 +44,14 @@ bytes-per-iteration reduction on these numbers.
 """
 from __future__ import annotations
 
+import logging
+
 import numpy as np
 
+from repro import faults
 from repro.core.transfer import GLOBAL as TRANSFER
+
+log = logging.getLogger("repro.engine")
 
 
 def _jax():
@@ -57,6 +62,27 @@ def _jax():
             "backend='resident' needs jax; install jax or use "
             "backend='numpy'") from e
     return jax
+
+
+def _run_round_op(arena, site: str, build, args):
+    """Run one compiled round op; a failed Pallas dispatch retries ONCE on
+    the jnp `ref.py` twin (§11 degradation policy — bit-identical by the
+    kernel twin contract), dropping ``use_kernel`` for the arena's life.
+    The retry is safe for injected faults because the dispatch wrappers in
+    `kernels/*/ops.py` raise BEFORE the compiled call touches its donated
+    buffers; a genuine mid-execution failure may have consumed them, in
+    which case the retry surfaces that error instead of masking it."""
+    fn = build(arena.use_kernel)
+    try:
+        return fn(*args)
+    except Exception as e:
+        if not arena.use_kernel:
+            raise
+        faults.DEGRADATIONS.record(site, e)
+        log.warning("kernel dispatch %s failed; retrying on the jnp twin: "
+                    "%r", site, e)
+        arena.use_kernel = False
+        return build(False)(*args)
 
 
 class ResidentBitmapArena:
@@ -174,6 +200,7 @@ class ResidentBitmapArena:
         from repro.kernels.common import (default_interpret,
                                           default_use_kernel, pow2)
 
+        faults.check("resident.bank.extract")
         arena = cls.__new__(cls)
         B, G, R = int(ws.B), int(ws.G), int(ws.R)
         arena.counter = counter
@@ -245,11 +272,15 @@ class ResidentBitmapArena:
         rows = np.zeros((n_pad, 2), dtype=np.int32)
         rows[:n, 0] = rb
         rows[:n, 1] = rr
-        fn = topj_fn(self.Bp, self.G, self.Wp, self.J, n_pad,
-                     use_kernel=self.use_kernel, interpret=self.interpret,
-                     mesh=self.mesh, axes=self.axes)
+
+        def build(uk):
+            return topj_fn(self.Bp, self.G, self.Wp, self.J, n_pad,
+                           use_kernel=uk, interpret=self.interpret,
+                           mesh=self.mesh, axes=self.axes)
         self.counter.add_h2d(rows.nbytes, phase="rank")
-        out = np.asarray(fn(self._bits, self._alive, self._replicate(rows)))
+        out = np.asarray(_run_round_op(
+            self, "kernel.bitset_fold.topj", build,
+            (self._bits, self._alive, self._replicate(rows))))
         self.counter.add_d2h(out.nbytes, phase="rank")
         self.counter.tick_round()
         self.rounds += 1
@@ -283,12 +314,15 @@ class ResidentBitmapArena:
         instr[b, slot, 4] = cz >> 5
         instr[b, slot, 5] = cz & 31
         instr[b, slot, 6] = 1
-        fn = fold_fn(self.Bp, self.G, self.Wp, P_pairs,
-                     use_kernel=self.use_kernel, interpret=self.interpret,
-                     mesh=self.mesh, axes=self.axes)
+
+        def build(uk):
+            return fold_fn(self.Bp, self.G, self.Wp, P_pairs,
+                           use_kernel=uk, interpret=self.interpret,
+                           mesh=self.mesh, axes=self.axes)
         self.counter.add_h2d(instr.nbytes, phase="fold")
-        self._bits, self._alive = fn(self._bits, self._alive,
-                                     self._put(instr))
+        self._bits, self._alive = _run_round_op(
+            self, "kernel.bitset_fold.fold", build,
+            (self._bits, self._alive, self._put(instr)))
 
     # ----------------------------------------- v2: whole-iteration residency
     def _state(self):
@@ -316,12 +350,16 @@ class ResidentBitmapArena:
             raise RuntimeError("propose_rows needs attach_counts state")
         n = rb.size
         K = pow2(n, floor=64)
-        fn = round_fn(self.Bp, self.G, self.Rp, self.Wp, K, self.J, self.J,
-                      height_bound=height_bound,
-                      use_kernel=self.use_kernel, interpret=self.interpret,
-                      mesh=self.mesh, axes=self.axes)
+
+        def build(uk):
+            return round_fn(self.Bp, self.G, self.Rp, self.Wp, K, self.J,
+                            self.J, height_bound=height_bound,
+                            use_kernel=uk, interpret=self.interpret,
+                            mesh=self.mesh, axes=self.axes)
         self.counter.add_h2d(4, phase="rank")  # the θ̂ scalar
-        self._dirty, out = fn(*self._state(), jnp.uint32(theta_p))
+        self._dirty, out = _run_round_op(
+            self, "kernel.bitset_fold.round", build,
+            self._state() + (jnp.uint32(theta_p),))
         out = np.asarray(out)
         self.counter.add_d2h(out.nbytes, phase="rank")
         self.counter.tick_round()
@@ -354,14 +392,18 @@ class ResidentBitmapArena:
         instr[b, slot, 0] = a
         instr[b, slot, 1] = z
         instr[b, slot, 2] = 1
-        fn = fold_counts_fn(self.Bp, self.G, self.Rp, self.Wp, P_pairs,
-                            use_kernel=self.use_kernel,
-                            interpret=self.interpret, mesh=self.mesh,
-                            axes=self.axes)
+
+        def build(uk):
+            return fold_counts_fn(self.Bp, self.G, self.Rp, self.Wp,
+                                  P_pairs, use_kernel=uk,
+                                  interpret=self.interpret, mesh=self.mesh,
+                                  axes=self.axes)
         self.counter.add_h2d(instr.nbytes, phase="fold")
         (self._bits, self._alive, self._dirty, self._CNT, self._colsize,
          self._s, self._selfc, self._nd, self._hgt,
-         self._cost) = fn(*self._state(), self._put(instr))
+         self._cost) = _run_round_op(
+            self, "kernel.bitset_fold.fold_counts", build,
+            self._state() + (self._put(instr),))
 
     # --------------------------------------------------- sync-back contract
     def sync_rows(self, b: np.ndarray, g: np.ndarray) -> np.ndarray:
@@ -478,6 +520,10 @@ class ResidentAdjacencyBank:
                                                      bank_grow_fn)
         from repro.kernels.common import pow2
 
+        # checked BEFORE any host directory mutation: a fault here leaves
+        # the bank untouched, so the engine's advance degradation can just
+        # drop the run context without unwinding partial state
+        faults.check("resident.bank.advance")
         for A, Z, M, lens in batches:
             m = int(A.size)
             if m == 0:

@@ -33,6 +33,8 @@ from __future__ import annotations
 
 import threading
 
+from repro import faults
+
 
 class TransferCounter:
     """Byte/round tallies for one device path (monotonic; snapshot+delta).
@@ -62,11 +64,13 @@ class TransferCounter:
         self.phases[phase] = self.phases.get(phase, 0) + int(nbytes)
 
     def add_h2d(self, nbytes: int, phase: str | None = None):
+        faults.check("transfer.h2d")
         with self._lock:
             self.bytes_h2d += int(nbytes)
             self._phase_add(phase, nbytes)
 
     def add_d2h(self, nbytes: int, phase: str | None = None):
+        faults.check("transfer.d2h")
         with self._lock:
             self.bytes_d2h += int(nbytes)
             self._phase_add(phase, nbytes)

@@ -17,11 +17,13 @@ from __future__ import annotations
 import gzip
 import hashlib
 import os
+import time
 import urllib.error
 import urllib.request
 
 import numpy as np
 
+from repro import faults
 from repro.graphs import generators as G
 from repro.graphs.csr import Graph
 
@@ -106,13 +108,25 @@ def _sha256(path: str) -> str:
     return h.hexdigest()
 
 
-def fetch(name: str, cache: str | None = None, opener=None) -> str:
+def fetch(name: str, cache: str | None = None, opener=None,
+          retries: int = 3, backoff: float = 0.5, retry_seed: int = 0,
+          sleep=time.sleep) -> str:
     """Return the local path of dataset ``name``, downloading on miss.
 
     Cache layout: ``<cache>/<name><ext>`` plus a ``.sha256`` sidecar. A hit
     is served only if its digest matches the pinned (or recorded) one; a
     corrupt file raises instead of silently re-parsing. ``opener`` overrides
     ``urllib.request.urlopen`` (tests inject a mock here).
+
+    Transient network errors retry up to ``retries`` times with exponential
+    backoff (``backoff * 2**attempt`` seconds) scaled by a DETERMINISTIC
+    jitter in [0.5, 1.5) drawn from ``SeedSequence((retry_seed, attempt))``
+    — reproducible like every other randomness in the repo, but still
+    decorrelating parallel fetchers that pass distinct seeds. Checksum
+    mismatches never retry: a pinned-digest failure means a corrupt or
+    tampered payload, and re-downloading it would just re-fetch the same
+    bytes. ``sleep`` is injectable so tests assert the schedule without
+    waiting it out.
     """
     if name not in REMOTE:
         raise KeyError(f"unknown remote dataset {name!r}; "
@@ -136,14 +150,26 @@ def fetch(name: str, cache: str | None = None, opener=None) -> str:
             f"{got}. Delete the file to re-download, or replace it with a "
             f"correct copy from {url}.")
     opener = opener or urllib.request.urlopen
-    try:
-        with opener(url) as resp:
-            data = resp.read()
-    except (urllib.error.URLError, OSError, ValueError) as e:
+    last_err = None
+    for attempt in range(max(0, int(retries)) + 1):
+        if attempt:
+            jitter = 0.5 + np.random.default_rng(
+                np.random.SeedSequence((int(retry_seed), attempt))).random()
+            sleep(backoff * 2 ** (attempt - 1) * jitter)
+        faults.check("datasets.fetch")
+        try:
+            with opener(url) as resp:
+                data = resp.read()
+            break
+        except (urllib.error.URLError, OSError, ValueError) as e:
+            last_err = e
+    else:
         raise DatasetFetchError(
-            f"could not download {name} from {url}: {e}. If this host is "
-            f"offline, fetch the file elsewhere and place it at {path} "
-            f"(cache dir overridable via ${_CACHE_ENV}).") from e
+            f"could not download {name} from {url} after "
+            f"{max(0, int(retries)) + 1} attempts: {last_err}. If this "
+            f"host is offline, fetch the file elsewhere and place it at "
+            f"{path} (cache dir overridable via ${_CACHE_ENV}).") \
+            from last_err
     got = hashlib.sha256(data).hexdigest()
     if pinned is not None and got != pinned:
         raise DatasetFetchError(
@@ -153,8 +179,10 @@ def fetch(name: str, cache: str | None = None, opener=None) -> str:
     with open(tmp, "wb") as f:
         f.write(data)
     os.replace(tmp, path)
-    with open(sidecar, "w") as f:
+    tmp_sc = sidecar + ".part"
+    with open(tmp_sc, "w") as f:
         f.write(got + "\n")
+    os.replace(tmp_sc, sidecar)
     return path
 
 

@@ -40,6 +40,26 @@ def block_owner(n: int, n_parts: int) -> np.ndarray:
     return (np.arange(n, dtype=np.int64) * n_parts) // n
 
 
+def _clean_stale_runs(spill_dir: str) -> int:
+    """Remove spill-run files left by a crashed prior ingestion.
+
+    Run files are namespaced ``run-<part>-<idx>.npy`` (plus ``.tmp``
+    half-writes from a kill mid-write) and are consumed by the ingestion
+    that wrote them — any survivor is an orphan, and letting it linger
+    would at best waste disk and at worst be merged into a LATER ingestion
+    sharing the spill dir. Returns the number of files removed."""
+    removed = 0
+    for fname in os.listdir(spill_dir):
+        if fname.startswith("run-") and (fname.endswith(".npy")
+                                         or fname.endswith(".npy.tmp")):
+            try:
+                os.remove(os.path.join(spill_dir, fname))
+                removed += 1
+            except OSError:  # pragma: no cover - racing cleaner is fine
+                pass
+    return removed
+
+
 def _check_owner(owner: np.ndarray, n: int, n_parts: int) -> np.ndarray:
     """Validate an ownership map: one entry per node, values in range —
     an out-of-range owner would silently drop that node's adjacency."""
@@ -146,6 +166,7 @@ class PartitionedGraph:
         owner = _check_owner(owner, n, n_parts)
         if spill_dir is not None:
             os.makedirs(spill_dir, exist_ok=True)
+            _clean_stale_runs(spill_dir)
         runs: list = [[] for _ in range(n_parts)]
         n_runs = 0
         for chunk in chunks:
@@ -166,7 +187,13 @@ class PartitionedGraph:
                     continue
                 if spill_dir is not None:
                     path = os.path.join(spill_dir, f"run-{p}-{n_runs}.npy")
-                    np.save(path, sel)
+                    # temp + atomic rename: a kill mid-write leaves only a
+                    # .tmp file, which the next ingestion sweeps away — a
+                    # committed run file is always a complete .npy
+                    tmp = path + ".tmp"
+                    with open(tmp, "wb") as f:
+                        np.save(f, sel)
+                    os.replace(tmp, path)
                     runs[p].append(path)
                 else:
                     runs[p].append(sel)

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import faults
 from repro.kernels.bitset_fold import ref
 from repro.kernels.bitset_fold.kernel import (bitset_fold_kernel,
                                               jaccard_topj_kernel)
@@ -34,6 +35,17 @@ _FOLD_CACHE = LruCache(16)
 _ROUND_CACHE = LruCache(32)
 _FOLDC_CACHE = LruCache(16)
 _EXTRACT_CACHE = LruCache(32)
+
+
+def _checked(site: str, fn):
+    """Fault-injection hook around one compiled dispatch. The check runs
+    BEFORE the jit call, while the donated input buffers are still intact —
+    an injected dispatch fault is therefore retry-safe (the arena retries
+    once on the ref twin, DESIGN.md §11)."""
+    def call(*args):
+        faults.check(site)
+        return fn(*args)
+    return call
 
 
 def _shard(fn, mesh, axes, n_in, n_out):
@@ -77,6 +89,7 @@ def topj_fn(B: int, G: int, W: int, J: int, n_pad: int, *, use_kernel: bool,
         def fn(bits, alive, rows):
             return ref.topj_rows(bits, alive, rows, J).astype(jnp.int8)
 
+    fn = _checked("kernel.bitset_fold.topj", fn)
     _TOPJ_CACHE[key] = fn
     return fn
 
@@ -104,7 +117,8 @@ def fold_fn(B: int, G: int, W: int, P_pairs: int, *, use_kernel: bool,
         # instr crosses the wire as int16; index arithmetic wants int32
         return folded(bits, alive, instr.astype(jnp.int32))
 
-    fn = jax.jit(widened, donate_argnums=(0, 1))
+    fn = _checked("kernel.bitset_fold.fold",
+                  jax.jit(widened, donate_argnums=(0, 1)))
     _FOLD_CACHE[key] = fn
     return fn
 
@@ -188,6 +202,7 @@ def round_fn(B: int, G: int, R: int, W: int, K: int, J: int, top_j: int, *,
                 ok.astype(dirty.dtype), mode="drop")
             return dirty, out
 
+    fn = _checked("kernel.bitset_fold.round", fn)
     _ROUND_CACHE[key] = fn
     return fn
 
@@ -218,6 +233,7 @@ def extract_fn(Bp: int, G: int, Rp: int, Wp: int, Lp: int, cap: int,
                                  0, 0, 0))(gids, cnts, size, selfc, nd,
                                            hgt, res_map, members, ptr, lens)
 
+    fn = _checked("kernel.bitset_fold.extract", fn)
     _EXTRACT_CACHE[key] = fn
     return fn
 
@@ -261,6 +277,8 @@ def fold_counts_fn(B: int, G: int, R: int, W: int, P_pairs: int, *,
         one = ref.fold_pairs_counts
     v = jax.vmap(one)
     folded = _shard(v, mesh, axes, 12, 10) if mesh is not None else v
-    fn = jax.jit(folded, donate_argnums=(0, 1, 2, 3, 4, 6, 7, 8, 9, 10))
+    fn = _checked("kernel.bitset_fold.fold_counts",
+                  jax.jit(folded, donate_argnums=(0, 1, 2, 3, 4, 6, 7, 8,
+                                                  9, 10)))
     _FOLDC_CACHE[key] = fn
     return fn

@@ -19,6 +19,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import faults
 from repro.core.transfer import GLOBAL as TRANSFER
 from repro.kernels.bitset_jaccard import ref
 from repro.kernels.bitset_jaccard.kernel import (
@@ -78,6 +79,9 @@ def batched_pairwise_intersections(bits: np.ndarray, tile_b: int = 64,
     """
     if interpret is None:
         interpret = default_interpret()
+    # checked before any tile dispatch: an injected fault leaves the bitmap
+    # batch untouched, so HostRankSource can fall back to the host popcount
+    faults.check("kernel.bitset_jaccard.intersections")
     B, G, W = bits.shape
     Wp = pow2(W)
     out = np.empty((B, G, G), dtype=np.int64)

@@ -34,6 +34,24 @@ def pad_to_slots(chunk: list, slots: int) -> list:
     return list(chunk) + [chunk[-1]] * (slots - len(chunk))
 
 
+class RequestError:
+    """Per-request failure record returned IN PLACE of an answer.
+
+    A malformed request (or one cut off by a batch timeout) must not kill
+    the whole drain loop — the server answers everything else and marks the
+    failed slot with one of these, keeping submission-order alignment.
+    Shared by the LM `BatchServer` and the summary-query server."""
+
+    __slots__ = ("request", "reason")
+
+    def __init__(self, request, reason: str):
+        self.request = request
+        self.reason = str(reason)
+
+    def __repr__(self):
+        return f"RequestError({self.request!r}, {self.reason!r})"
+
+
 class BatchServer:
     """Fixed-slot continuous batching: requests occupy slots; every step is
     one batched decode; finished slots are refilled from the queue."""
@@ -45,16 +63,55 @@ class BatchServer:
         self.decode = jax.jit(
             lambda p, c, t, pos: self.api.decode_step(p, cfg, c, t, pos))
 
-    def run(self, prompts: list, gen_tokens: int = 16, greedy=True, seed=0):
-        """prompts: list of 1-D int arrays (equal length for simplicity)."""
+    def _invalid_reason(self, arr: np.ndarray, ref_len):
+        if arr.ndim != 1 or arr.size == 0:
+            return "prompt must be a non-empty 1-D token array"
+        if arr.dtype.kind not in "iu":
+            return f"prompt dtype {arr.dtype} is not integer"
+        if int(arr.min()) < 0 or int(arr.max()) >= self.cfg.vocab:
+            return f"token ids out of range [0, {self.cfg.vocab})"
+        if ref_len is not None and arr.size != ref_len:
+            return f"prompt length {arr.size} != batch length {ref_len}"
+        return None
+
+    def run(self, prompts: list, gen_tokens: int = 16, greedy=True, seed=0,
+            timeout: float | None = None):
+        """prompts: list of 1-D int arrays (equal length for simplicity).
+
+        Answers come back in submission order. A malformed prompt (wrong
+        rank/dtype/length, out-of-vocab tokens) gets a `RequestError` in
+        its slot instead of poisoning the whole drain loop. With
+        ``timeout`` (wall-clock seconds) the loop stops starting new
+        batches once the deadline passes — at least one batch always runs,
+        finished answers are flushed, and the cut-off slots are marked
+        with timeout `RequestError`\\ s."""
         if not prompts:  # nothing queued: don't pad (chunk[-1] of []) or decode
             return []
         cfg = self.cfg
-        rng = np.random.default_rng(seed)
-        out = []
-        for i in range(0, len(prompts), self.B):
-            chunk = pad_to_slots(prompts[i : i + self.B], self.B)
-            toks = jnp.asarray(np.stack(chunk), jnp.int32)
+        out: list = [None] * len(prompts)
+        valid: list = []
+        ref_len = None
+        for i, p in enumerate(prompts):
+            arr = np.asarray(p)
+            reason = self._invalid_reason(arr, ref_len)
+            if reason is not None:
+                out[i] = RequestError(p, reason)
+                continue
+            ref_len = arr.size
+            valid.append((i, arr))
+        deadline = (None if timeout is None
+                    else time.perf_counter() + float(timeout))
+        started = False
+        for c0 in range(0, len(valid), self.B):
+            # the first batch always runs — a timeout bounds extra batches,
+            # it never starves the queue of all progress
+            if started and deadline is not None \
+                    and time.perf_counter() >= deadline:
+                break
+            chunk = valid[c0 : c0 + self.B]
+            toks = jnp.asarray(
+                np.stack([a for _, a in pad_to_slots(chunk, self.B)]),
+                jnp.int32)
             plen = toks.shape[1]
             logits, cache = self.api.prefill(
                 self.params, cfg, {"tokens": toks}, cache_len=plen + gen_tokens)
@@ -66,7 +123,14 @@ class BatchServer:
                 cur = jnp.argmax(lg, axis=-1).reshape(-1, 1).astype(jnp.int32)
                 gen.append(np.asarray(cur))
             seqs = np.concatenate(gen, axis=1)
-            out.extend(seqs[: len(prompts[i : i + self.B])])
+            for j, (i, _) in enumerate(chunk):
+                out[i] = seqs[j]
+            started = True
+        for i, p in enumerate(prompts):
+            if out[i] is None:
+                out[i] = RequestError(
+                    p, f"batch timed out after {timeout:.3f}s; "
+                       f"partial results flushed")
         return out
 
 

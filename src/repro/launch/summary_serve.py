@@ -25,7 +25,7 @@ from repro.core.query_batch import (BACKENDS, edge_exists_batch,
 from repro.core.slugger import summarize
 from repro.core.summary_ir import PackedSummary
 from repro.graphs.generators import SERVING_GRAPHS
-from repro.launch.serve import pad_to_slots
+from repro.launch.serve import RequestError, pad_to_slots
 
 
 class SummaryQueryServer:
@@ -43,26 +43,67 @@ class SummaryQueryServer:
         self.B = int(batch_slots)
         self.backend = backend
 
-    def run(self, queries: list) -> list:
+    def _invalid_reason(self, q):
+        """Reason string for a malformed/out-of-range query, else None."""
+        if not isinstance(q, (tuple, list)) or not q:
+            return "query must be a ('neighbors', v) or ('edge', u, v) tuple"
+        kind = q[0]
+        if kind not in ("neighbors", "edge"):
+            return f"unknown query kind {kind!r}"
+        want = 2 if kind == "neighbors" else 3
+        if len(q) != want:
+            return f"{kind!r} query takes {want - 1} id(s), got {len(q) - 1}"
+        for v in q[1:]:
+            if not isinstance(v, (int, np.integer)):
+                return f"query id {v!r} is not an integer"
+            if not 0 <= int(v) < self.ps.n_leaves:
+                return (f"query id {int(v)} out of range "
+                        f"[0, {self.ps.n_leaves})")
+        return None
+
+    def run(self, queries: list, timeout: float | None = None) -> list:
         """``queries``: ("neighbors", v) or ("edge", u, v) tuples.
 
         Returns answers in submission order: a sorted int64 id array per
-        neighbors query, a bool per edge query."""
+        neighbors query, a bool per edge query. A malformed or
+        out-of-range query gets a `RequestError` record in its slot — the
+        drain loop keeps serving the rest of the batch. With ``timeout``
+        (wall-clock seconds) no NEW batch starts after the deadline (the
+        first always runs); answered batches are flushed and cut-off
+        queries come back as timeout `RequestError`\\ s."""
         if not queries:
             return []
         out: list = [None] * len(queries)
-        nb = [(i, q[1]) for i, q in enumerate(queries) if q[0] == "neighbors"]
-        eg = [(i, q[1], q[2]) for i, q in enumerate(queries) if q[0] == "edge"]
-        if len(nb) + len(eg) != len(queries):
-            bad = next(q for q in queries if q[0] not in ("neighbors", "edge"))
-            raise ValueError(f"unknown query kind {bad[0]!r}")
+        nb: list = []
+        eg: list = []
+        for i, q in enumerate(queries):
+            reason = self._invalid_reason(q)
+            if reason is not None:
+                out[i] = RequestError(q, reason)
+            elif q[0] == "neighbors":
+                nb.append((i, q[1]))
+            else:
+                eg.append((i, q[1], q[2]))
+        deadline = (None if timeout is None
+                    else time.perf_counter() + float(timeout))
+        started = False
+
+        def expired():
+            return (started and deadline is not None
+                    and time.perf_counter() >= deadline)
+
         for c0 in range(0, len(nb), self.B):
+            if expired():
+                break
             real = nb[c0: c0 + self.B]
             vs = np.array([v for _, v in pad_to_slots(real, self.B)], dtype=np.int64)
             indptr, ids = neighbors_batch(self.ps, vs, backend=self.backend)
             for j, (i, _) in enumerate(real):
                 out[i] = ids[indptr[j]: indptr[j + 1]]
+            started = True
         for c0 in range(0, len(eg), self.B):
+            if expired():
+                break
             real = eg[c0: c0 + self.B]
             chunk = pad_to_slots(real, self.B)
             us = np.array([u for _, u, _ in chunk], dtype=np.int64)
@@ -70,6 +111,12 @@ class SummaryQueryServer:
             hit = edge_exists_batch(self.ps, us, vs, backend=self.backend)
             for j, (i, _, _) in enumerate(real):
                 out[i] = bool(hit[j])
+            started = True
+        for i, q in enumerate(queries):
+            if out[i] is None:
+                out[i] = RequestError(
+                    q, f"batch timed out after {timeout:.3f}s; "
+                       f"partial results flushed")
         return out
 
 

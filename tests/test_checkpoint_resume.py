@@ -1,0 +1,295 @@
+"""Crash-safety tests (ISSUE 10): plan-log checkpoint/resume bit-identity
+across backends and partition counts, deterministic fault injection, and
+the graceful-degradation policy (DESIGN.md §11).
+
+The contract under test: the merge forest is a pure function of (graph,
+config, plan log), so killing the engine at ANY stage boundary and resuming
+from the newest committed checkpoint must reproduce the uninterrupted
+summary array-for-array — on every backend, at every partition count, and
+even across backend/partition changes between the kill and the resume.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+import pytest
+
+from repro import faults
+from repro.core import checkpoint as ckpt_mod
+from repro.core.checkpoint import (CheckpointMismatch, PlanCheckpointer,
+                                   graph_fingerprint, pack_plans,
+                                   unpack_plans)
+from repro.core.engine import STAGE_ORDER, SummarizerEngine
+from repro.core.merging import MergePlan
+from repro.graphs import generators as GG
+
+G = GG.caveman(14, 6, 0.05, seed=13)
+T = 4
+KILL_AT = 2  # iteration the stage faults fire in (commit lands after iters)
+
+
+def engine(backend="numpy", partitions=1, seed=3, T_=T):
+    return SummarizerEngine(partitions=partitions, backend=backend, T=T_,
+                            seed=seed)
+
+
+def assert_same(a, b):
+    assert np.array_equal(a.parent, b.parent)
+    assert np.array_equal(a.edges, b.edges)
+
+
+# ---------------------------------------------------------------- tentpole
+@pytest.mark.parametrize("backend,partitions", [
+    ("numpy", 1), ("numpy", 2), ("numpy", 4),
+    ("batched", 1), ("batched", 2), ("batched", 4),
+    ("resident", 1), ("resident", 2), ("resident", 4),
+])
+def test_kill_at_every_stage_boundary_resumes_bit_identical(
+        backend, partitions, tmp_path):
+    want = engine(backend, partitions).run(G)
+    assert want.validate_lossless(G)
+    for stage in STAGE_ORDER:
+        ckpt = str(tmp_path / f"ckpt-{stage}")
+        with pytest.raises(faults.InjectedFault):
+            with faults.inject(f"engine.{stage}", iteration=KILL_AT):
+                engine(backend, partitions).run(G, checkpoint_dir=ckpt)
+        eng = engine(backend, partitions)
+        got = eng.run(G, checkpoint_dir=ckpt, resume=True)
+        # the commit lands after the iteration's stages: a kill anywhere
+        # inside iteration KILL_AT resumes from KILL_AT - 1
+        assert eng.stats["resumed_from"] == KILL_AT - 1, stage
+        assert_same(got, want)
+        assert got.validate_lossless(G)
+
+
+def test_resume_crosses_backend_and_partition_count(tmp_path):
+    """A checkpoint is plans + identity, not backend state: written under
+    numpy/partitions=1, it must resume under resident/partitions=4 (and
+    batched/2) bit-identically — replay determinism is what makes the
+    format portable."""
+    want = engine().run(G)
+    for backend, partitions in (("resident", 4), ("batched", 2),
+                                ("numpy", 2)):
+        ckpt = str(tmp_path / f"ckpt-{backend}-{partitions}")
+        with pytest.raises(faults.InjectedFault):
+            with faults.inject("engine.merge_round", iteration=3):
+                engine().run(G, checkpoint_dir=ckpt)
+        eng = engine(backend, partitions)
+        got = eng.run(G, checkpoint_dir=ckpt, resume=True)
+        assert eng.stats["resumed_from"] == 2
+        assert_same(got, want)
+
+
+def test_resume_with_no_checkpoint_starts_fresh(tmp_path):
+    eng = engine()
+    got = eng.run(G, checkpoint_dir=str(tmp_path / "empty"), resume=True)
+    assert "resumed_from" not in eng.stats
+    assert_same(got, engine().run(G))
+
+
+def test_resume_of_completed_run_replays_to_the_end(tmp_path):
+    ckpt = str(tmp_path / "ckpt")
+    want = engine().run(G, checkpoint_dir=ckpt)
+    eng = engine()
+    got = eng.run(G, checkpoint_dir=ckpt, resume=True)
+    assert eng.stats["resumed_from"] == T  # nothing left to run
+    assert_same(got, want)
+
+
+def test_checkpoint_every_commits_less_often_same_result(tmp_path):
+    ckpt = str(tmp_path / "ckpt")
+    want = engine().run(G)
+    with pytest.raises(faults.InjectedFault):
+        with faults.inject("engine.exchange", iteration=3):
+            engine().run(G, checkpoint_dir=ckpt, checkpoint_every=2)
+    eng = engine()
+    got = eng.run(G, checkpoint_dir=ckpt, resume=True, checkpoint_every=2)
+    # iteration 3 was killed before its (t % 2 == 0 or t == T) commit at
+    # t=4 — the newest commit is t=2
+    assert eng.stats["resumed_from"] == 2
+    assert_same(got, want)
+
+
+def test_checkpoint_commit_cost_is_tracked(tmp_path):
+    eng = engine()
+    eng.run(G, checkpoint_dir=str(tmp_path / "ckpt"))
+    assert eng.stats["checkpoint"] > 0.0
+
+
+# ------------------------------------------------------------- identity
+def test_resume_refuses_different_graph(tmp_path):
+    ckpt = str(tmp_path / "ckpt")
+    engine().run(G, checkpoint_dir=ckpt)
+    other = GG.caveman(15, 6, 0.05, seed=14)
+    with pytest.raises(CheckpointMismatch, match="fingerprint"):
+        engine().run(other, checkpoint_dir=ckpt, resume=True)
+
+
+@pytest.mark.parametrize("kw,val", [("seed", 99), ("T_", T + 2)])
+def test_resume_refuses_decision_config_change(tmp_path, kw, val):
+    ckpt = str(tmp_path / "ckpt")
+    engine().run(G, checkpoint_dir=ckpt)
+    with pytest.raises(CheckpointMismatch, match="config mismatch"):
+        engine(**{kw: val}).run(G, checkpoint_dir=ckpt, resume=True)
+
+
+def test_fingerprint_is_stable_and_graph_sensitive():
+    assert graph_fingerprint(G) == graph_fingerprint(G)
+    assert graph_fingerprint(G) != graph_fingerprint(
+        GG.caveman(15, 6, 0.05, seed=14))
+
+
+# ------------------------------------------------------------- atomicity
+def test_half_written_tmp_dir_is_ignored_and_swept(tmp_path):
+    ckpt = str(tmp_path / "ckpt")
+    engine().run(G, checkpoint_dir=ckpt)
+    committed = sorted(d for d in os.listdir(ckpt) if not d.endswith(".tmp"))
+    # simulate a kill mid-save: a .tmp dir with a torn manifest
+    torn = os.path.join(ckpt, "it_000099.tmp")
+    os.makedirs(torn)
+    with open(os.path.join(torn, "manifest.json"), "w") as f:
+        f.write('{"version": 1, "t": 99')  # truncated JSON
+    eng = engine()
+    got = eng.run(G, checkpoint_dir=ckpt, resume=True)
+    assert eng.stats["resumed_from"] == T  # newest COMMITTED dir won
+    assert not os.path.exists(torn)  # swept by the next checkpointer
+    assert_same(got, engine().run(G))
+    assert sorted(d for d in os.listdir(ckpt)
+                  if not d.endswith(".tmp")) == committed
+
+
+def test_gc_keeps_last_two_checkpoints(tmp_path):
+    ckpt = str(tmp_path / "ckpt")
+    engine().run(G, checkpoint_dir=ckpt)
+    dirs = sorted(os.listdir(ckpt))
+    assert dirs == [f"it_{T-1:06d}", f"it_{T:06d}"]
+
+
+def test_pack_unpack_plans_round_trip():
+    plans = []
+    rng = np.random.default_rng(np.random.SeedSequence(7))
+    for k in range(5):
+        p = MergePlan(rng.integers(0, 100, size=3 + k))
+        for r in range(k % 3):
+            p.record(rng.integers(0, 50, size=2 + r),
+                     rng.integers(50, 99, size=2 + r))
+        plans.append(p)
+    out = unpack_plans(pack_plans(plans))
+    assert len(out) == len(plans)
+    for a, b in zip(plans, out):
+        assert np.array_equal(a.members0, b.members0)
+        assert len(a.rounds) == len(b.rounds)
+        for (aa, az), (ba, bz) in zip(a.rounds, b.rounds):
+            assert np.array_equal(aa, ba) and np.array_equal(az, bz)
+    assert unpack_plans(pack_plans([])) == []
+
+
+def test_checkpointer_version_gate(tmp_path):
+    ckpt = PlanCheckpointer(str(tmp_path))
+    fp = graph_fingerprint(G)
+    ckpt.save(1, [[MergePlan(np.array([1, 2]))]], fp, {"T": 1})
+    import json
+    d = os.path.join(str(tmp_path), "it_000001")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    manifest["version"] = ckpt_mod.CKPT_VERSION + 1
+    with open(os.path.join(d, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    with pytest.raises(CheckpointMismatch, match="version"):
+        PlanCheckpointer(str(tmp_path)).load_latest(fp, {"T": 1})
+
+
+# ------------------------------------------------------------- fault plans
+def test_fault_plan_exact_site_and_iteration():
+    plan = faults.FaultPlan("engine.pack", iteration=3)
+    plan.note("engine.pack", iteration=2)  # wrong iteration: no fire
+    plan.note("engine.group", iteration=3)  # wrong site: no fire
+    with pytest.raises(faults.InjectedFault) as ei:
+        plan.note("engine.pack", iteration=3)
+    assert ei.value.site == "engine.pack" and ei.value.iteration == 3
+    plan.note("engine.pack", iteration=3)  # disarmed after `times` firings
+
+
+def test_fault_plan_prefix_match_and_hit_targeting():
+    plan = faults.FaultPlan("kernel.", hit=3)
+    plan.note("kernel.bitset_fold.topj")
+    plan.note("kernel.bitset_jaccard.intersections")
+    with pytest.raises(faults.InjectedFault):
+        plan.note("kernel.bitset_fold.round")
+    plan = faults.FaultPlan("kernel.", hit=1)
+    plan.note("transfer.h2d")  # not under the prefix
+
+
+def test_fault_plan_from_spec_round_trips():
+    plan = faults.FaultPlan.from_spec("engine.merge_round@3#2")
+    assert (plan.site, plan.iteration, plan.hit) == ("engine.merge_round",
+                                                     3, 2)
+    plan = faults.FaultPlan.from_spec("kernel.#5")
+    assert (plan.site, plan.iteration, plan.hit) == ("kernel.", None, 5)
+
+
+def test_fault_plan_seeded_is_deterministic():
+    a = faults.FaultPlan.seeded(11)
+    b = faults.FaultPlan.seeded(11)
+    assert (a.site, a.iteration) == (b.site, b.iteration)
+    assert a.site in faults.STAGE_SITES
+    picks = {(faults.FaultPlan.seeded(s).site,
+              faults.FaultPlan.seeded(s).iteration) for s in range(32)}
+    assert len(picks) > 1  # the seed actually varies the kill point
+
+
+def test_env_plan_arms_and_disarms(monkeypatch):
+    monkeypatch.setenv(faults.ENV_VAR, "engine.pack@1")
+    faults.install_env_plan()
+    try:
+        with pytest.raises(faults.InjectedFault):
+            engine().run(G)
+    finally:
+        monkeypatch.delenv(faults.ENV_VAR)
+        faults.install_env_plan()
+    engine().run(G)  # disarmed again
+
+
+def test_check_is_noop_when_nothing_armed():
+    faults.check("engine.pack", iteration=1)  # must not raise
+
+
+# ------------------------------------------------------------ degradation
+def test_kernel_dispatch_fault_degrades_to_ref_twin(monkeypatch):
+    """With the Pallas path forced on (interpret mode on CPU), a dispatch
+    fault must retry once on the jnp twin and finish bit-identically."""
+    monkeypatch.setenv("REPRO_FORCE_PALLAS", "1")
+    want = engine().run(G)
+    eng = engine(backend="resident")
+    with faults.inject("kernel.bitset_fold.round", hit=2):
+        got = eng.run(G)
+    assert eng.stats["degradations"] >= 1
+    assert_same(got, want)
+    assert got.validate_lossless(G)
+
+
+def test_bank_extract_fault_degrades_to_host_path():
+    want = engine().run(G)
+    eng = engine(backend="resident")
+    with faults.inject("resident.bank.extract"):
+        got = eng.run(G)
+    assert eng.stats["degradations"] >= 1
+    assert eng._run_ctx is None  # resident context dropped for the run
+    assert_same(got, want)
+    assert got.validate_lossless(G)
+
+
+def test_bank_advance_fault_degrades_to_host_path():
+    want = engine().run(G)
+    eng = engine(backend="resident")
+    with faults.inject("resident.bank.advance"):
+        got = eng.run(G)
+    assert eng.stats["degradations"] >= 1
+    assert_same(got, want)
+
+
+def test_clean_run_reports_zero_degradations():
+    eng = engine(backend="resident")
+    eng.run(G)
+    assert eng.stats["degradations"] == 0

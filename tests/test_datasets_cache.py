@@ -21,17 +21,25 @@ EDGE_TEXT = b"""\
 
 
 class _MockOpener:
-    """urlopen stand-in serving fixed bytes and counting calls."""
+    """urlopen stand-in serving fixed bytes and counting calls.
 
-    def __init__(self, payload: bytes, fail: Exception | None = None):
+    ``fail`` raises on every call; ``fail_first`` raises on only the first
+    N calls and then serves — the transient-outage fixture for the bounded
+    retry loop."""
+
+    def __init__(self, payload: bytes, fail: Exception | None = None,
+                 fail_first: int = 0):
         self.payload = payload
         self.fail = fail
+        self.fail_first = fail_first
         self.calls = 0
 
     def __call__(self, url):
         self.calls += 1
         if self.fail is not None:
             raise self.fail
+        if self.calls <= self.fail_first:
+            raise urllib.error.URLError(f"transient outage {self.calls}")
         return io.BytesIO(self.payload)
 
 
@@ -84,6 +92,62 @@ def test_pinned_digest_rejects_tampered_download(tmp_path, monkeypatch):
         datasets.fetch("ca-GrQc", cache=str(tmp_path), opener=opener)
     assert "refusing to cache" in str(ei.value)
     assert not list(tmp_path.glob("*.txt.gz"))
+
+
+def test_transient_failure_retries_then_succeeds(tmp_path):
+    opener = _MockOpener(_gz_payload(), fail_first=2)
+    slept = []
+    path = datasets.fetch("ca-GrQc", cache=str(tmp_path), opener=opener,
+                          retries=3, backoff=0.5, sleep=slept.append)
+    assert opener.calls == 3  # 2 failures + the success
+    assert len(slept) == 2  # one backoff before each retry
+    # exponential schedule with deterministic jitter in [0.5, 1.5)
+    assert 0.5 * 0.5 <= slept[0] < 0.5 * 1.5
+    assert 1.0 * 0.5 <= slept[1] < 1.0 * 1.5
+    # the jitter is seeded: the same retry_seed reproduces the schedule
+    opener2 = _MockOpener(_gz_payload(), fail_first=2)
+    slept2 = []
+    datasets.fetch("ca-GrQc", cache=str(tmp_path / "b"), opener=opener2,
+                   retries=3, backoff=0.5, sleep=slept2.append)
+    assert slept == slept2
+    with open(path, "rb") as f:
+        assert f.read() == _gz_payload()
+
+
+def test_distinct_retry_seeds_decorrelate_jitter(tmp_path):
+    schedules = []
+    for seed in (0, 1):
+        opener = _MockOpener(_gz_payload(), fail_first=1)
+        slept = []
+        datasets.fetch("ca-GrQc", cache=str(tmp_path / str(seed)),
+                       opener=opener, retry_seed=seed, sleep=slept.append)
+        schedules.append(tuple(slept))
+    assert schedules[0] != schedules[1]
+
+
+def test_permanent_failure_exhausts_bounded_retries(tmp_path):
+    opener = _MockOpener(b"", fail=urllib.error.URLError("down for good"))
+    slept = []
+    with pytest.raises(datasets.DatasetFetchError) as ei:
+        datasets.fetch("ca-GrQc", cache=str(tmp_path), opener=opener,
+                       retries=3, sleep=slept.append)
+    assert opener.calls == 4  # initial attempt + 3 retries, then give up
+    assert len(slept) == 3
+    assert "after 4 attempts" in str(ei.value)
+
+
+def test_checksum_mismatch_never_retries(tmp_path, monkeypatch):
+    """A pinned-digest failure is corruption, not weather — re-downloading
+    would fetch the same bad bytes, so the loop must not spin."""
+    url, _ = datasets.REMOTE["ca-GrQc"]
+    monkeypatch.setitem(datasets.REMOTE, "ca-GrQc", (url, "0" * 64))
+    opener = _MockOpener(_gz_payload())
+    slept = []
+    with pytest.raises(datasets.DatasetFetchError):
+        datasets.fetch("ca-GrQc", cache=str(tmp_path), opener=opener,
+                       retries=3, sleep=slept.append)
+    assert opener.calls == 1
+    assert slept == []
 
 
 def test_unknown_remote_name():

@@ -14,12 +14,12 @@ import textwrap
 
 from repro.analysis.baseline import apply_baseline, load_baseline
 from repro.analysis.core import lint_source, lint_paths
-from repro.analysis.rules import (DTYPE_WIDTH, HOST_SYNC_IN_LOOP,
-                                  INT_RANK_ONLY, ITER_REUPLOAD,
-                                  JIT_CACHE_BOUND, KERNEL_TRIPLE,
-                                  NO_RECURSION_LIMIT, NONDET_ITER, RULES,
-                                  SEED_DISCIPLINE, TIME_MONOTONIC,
-                                  rules_by_name)
+from repro.analysis.rules import (ATOMIC_WRITE, DTYPE_WIDTH,
+                                  HOST_SYNC_IN_LOOP, INT_RANK_ONLY,
+                                  ITER_REUPLOAD, JIT_CACHE_BOUND,
+                                  KERNEL_TRIPLE, NO_RECURSION_LIMIT,
+                                  NONDET_ITER, RULES, SEED_DISCIPLINE,
+                                  TIME_MONOTONIC, rules_by_name)
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -408,6 +408,79 @@ def test_baseline_is_a_multiset():
              "snippet": f.snippet, "justification": "fixture"}
     m = apply_baseline([f, f], [entry])  # one entry cannot cover two hits
     assert len(m.matched) == 1 and len(m.new) == 1
+
+
+# ---------------------------------------------------------------- ATOMIC
+def test_atomic_write_fires_on_in_place_artifact_write():
+    src = """
+        import json, os
+        def save(payload, ckpt_dir):
+            with open(os.path.join(ckpt_dir, "manifest.json"), "w") as f:
+                json.dump(payload, f)
+    """
+    assert rules_hit(src, "src/repro/x.py", ATOMIC_WRITE()) == [
+        "ATOMIC-WRITE"]
+
+
+def test_atomic_write_fires_on_np_save_to_spill():
+    src = """
+        import numpy as np
+        def cut(sel, spill_dir):
+            np.save(spill_dir + "/run-0.npy", sel)
+    """
+    assert rules_hit(src, "src/repro/x.py", ATOMIC_WRITE()) == [
+        "ATOMIC-WRITE"]
+
+
+def test_atomic_write_quiet_with_replace_commit():
+    src = """
+        import json, os
+        def save(payload, ckpt_dir):
+            path = os.path.join(ckpt_dir, "manifest.json")
+            tmp = path + ".part"
+            with open(tmp, "w") as f:
+                json.dump(payload, f)
+            os.replace(tmp, path)
+    """
+    assert rules_hit(src, "src/repro/x.py", ATOMIC_WRITE()) == []
+
+
+def test_atomic_write_quiet_on_reads_and_ephemeral_paths():
+    src = """
+        import json
+        def load(ckpt_path, scratch):
+            with open(ckpt_path) as f:          # read: fine
+                payload = json.load(f)
+            with open(scratch + "/log.txt", "w") as f:  # not durable
+                f.write("hi")
+            return payload
+    """
+    assert rules_hit(src, "src/repro/x.py", ATOMIC_WRITE()) == []
+
+
+def test_atomic_write_scope_is_per_function():
+    # a commit in ANOTHER function does not quiet this one
+    src = """
+        import json, os
+        def committer(tmp, path):
+            os.replace(tmp, path)
+        def save(payload, ckpt_dir):
+            with open(ckpt_dir + "/manifest.json", "w") as f:
+                json.dump(payload, f)
+    """
+    assert rules_hit(src, "src/repro/x.py", ATOMIC_WRITE()) == [
+        "ATOMIC-WRITE"]
+
+
+def test_atomic_write_suppressed_with_reason():
+    src = ("import json\n"
+           "def save(payload, cache_dir):\n"
+           "    f = open(cache_dir + '/x.json', 'w')  "
+           "# lint: disable=ATOMIC-WRITE -- "
+           "append-only debug log, torn tail is acceptable\n"
+           "    json.dump(payload, f)\n")
+    res = lint_source(src, "src/repro/x.py", [ATOMIC_WRITE()])
+    assert res.findings == [] and len(res.suppressed) == 1
 
 
 # ---------------------------------------------------------------- meta

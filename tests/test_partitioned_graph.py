@@ -49,6 +49,53 @@ def test_from_edge_stream_spill_dir_matches_in_memory(tmp_path):
     assert not list(spill.glob("*.npy"))  # spilled runs were cleaned up
 
 
+def test_spill_dir_survives_kill_mid_run_write(tmp_path):
+    """Crash-safety of spilled ingestion (ISSUE 10): a prior run killed
+    mid-write leaves committed orphan runs and a half-written ``.npy.tmp``
+    in the spill dir. The next ingestion must sweep BOTH — a stale
+    committed run merged into a later build would silently add edges."""
+    g = GG.caveman(10, 6, 0.05, seed=3)
+    spill = tmp_path / "runs"
+    spill.mkdir()
+    # orphan committed run from a "crashed" previous ingestion + a torn
+    # half-write (np.save got killed partway)
+    np.save(str(spill / "run-0-7.npy"),
+            np.array([0 * g.n + 59, 59 * g.n + 0], dtype=np.int64))
+    (spill / "run-1-3.npy.tmp").write_bytes(b"\x93NUMPY torn")
+    pg = PartitionedGraph.from_edge_stream(
+        g.n, GG.stream_edges(g, chunk_edges=41), n_parts=3,
+        spill_dir=str(spill))
+    assert pg.to_graph() == g  # the orphan's fake edge did NOT leak in
+    assert not list(spill.glob("run-*"))  # orphans swept, new runs consumed
+
+
+def test_spill_run_files_commit_atomically(tmp_path, monkeypatch):
+    """Every committed run file appears via rename: at no point during
+    ingestion does a partially-written ``.npy`` exist under its final
+    name. Asserted by auditing the dir at every os.replace boundary."""
+    import os as _os
+
+    g = GG.caveman(10, 6, 0.05, seed=3)
+    spill = tmp_path / "runs"
+    real_replace = _os.replace
+    seen_tmp = []
+
+    def audited_replace(src, dst):
+        if str(spill) in str(dst):
+            assert str(src).endswith(".tmp")
+            seen_tmp.append(src)
+            # the committed name must not exist until this rename
+            assert not _os.path.exists(dst)
+        return real_replace(src, dst)
+
+    monkeypatch.setattr(_os, "replace", audited_replace)
+    pg = PartitionedGraph.from_edge_stream(
+        g.n, GG.stream_edges(g, chunk_edges=41), n_parts=3,
+        spill_dir=str(spill))
+    assert pg.to_graph() == g
+    assert seen_tmp  # the atomic path was actually exercised
+
+
 def test_from_edge_stream_cleans_dirty_chunks():
     # self-loops, duplicates, and cross-chunk duplicates must all fold away
     chunks = [

@@ -12,6 +12,7 @@ from repro.core.summary_ir import (PackedSummary, pack_for_serving,
                                    pack_sign_bits, unpack_sign_bits)
 from repro.graphs import generators as GG
 from repro.graphs.csr import Graph
+from repro.launch.serve import RequestError
 from repro.launch.summary_serve import SummaryQueryServer, make_queries
 
 
@@ -148,8 +149,54 @@ def test_query_server_mixed_queries_in_order():
             else:
                 assert a == bool(np.isin(q[2], s.neighbors(q[1]))), q
     assert SummaryQueryServer(ps).run([]) == []
-    with pytest.raises(ValueError):
-        SummaryQueryServer(ps).run([("bfs", 0)])
+
+
+def test_query_server_malformed_queries_get_error_records():
+    """A bad query must not poison the drain loop (ISSUE 10): it comes
+    back as a `RequestError` in its slot and every other query is still
+    answered."""
+    g = GG.caveman(12, 6, 0.05, seed=1)
+    s = summarize(g, T=5, seed=1)
+    ps = s.pack_for_serving()
+    bad = [("bfs", 0),                      # unknown kind
+           ("neighbors", 1, 2),             # wrong arity
+           ("neighbors", ps.n_leaves + 5),  # out of range
+           ("edge", 0, "x"),                # non-integer id
+           "neighbors",                     # not a tuple at all
+           ("edge", 0, -1)]                 # negative id
+    good = ("neighbors", 0)
+    queries = bad[:3] + [good] + bad[3:]
+    server = SummaryQueryServer(ps, batch_slots=4)
+    answers = server.run(queries)
+    assert len(answers) == len(queries)
+    for q, a in zip(queries, answers):
+        if q == good:
+            assert np.array_equal(a, s.neighbors(0))
+        else:
+            assert isinstance(a, RequestError)
+            assert a.request == q and a.reason
+    # the error reasons are actionable, not generic
+    assert "unknown query kind" in answers[0].reason
+    assert "out of range" in answers[2].reason
+
+
+def test_query_server_timeout_flushes_partial_results():
+    g = GG.caveman(12, 6, 0.05, seed=1)
+    s = summarize(g, T=5, seed=1)
+    ps = s.pack_for_serving()
+    queries = [("neighbors", int(v) % g.n) for v in range(40)]
+    server = SummaryQueryServer(ps, batch_slots=8)
+    # deadline already expired: the FIRST batch still runs (no starvation),
+    # later batches are cut off and marked with timeout records
+    answers = server.run(queries, timeout=0.0)
+    assert not any(isinstance(a, RequestError) for a in answers[:8])
+    assert all(isinstance(a, RequestError) for a in answers[8:])
+    assert "timed out" in answers[-1].reason
+    for q, a in zip(queries[:8], answers[:8]):
+        assert np.array_equal(a, s.neighbors(q[1]))
+    # a generous deadline answers everything
+    answers = server.run(queries, timeout=60.0)
+    assert not any(isinstance(a, RequestError) for a in answers)
 
 
 def test_query_batch_property_hypothesis():

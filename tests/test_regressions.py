@@ -78,6 +78,53 @@ def test_batch_server_empty_prompt_list():
     assert server.run([]) == []
 
 
+def test_batch_server_all_malformed_prompts_never_decode():
+    """Every malformed prompt gets a `RequestError` record; with nothing
+    valid queued the model is never touched (params=None stays safe)."""
+    from repro.configs.registry import get_config
+    from repro.launch.serve import BatchServer, RequestError
+
+    cfg = get_config("qwen2.5-3b", smoke=True)
+    server = BatchServer(cfg, params=None)
+    prompts = [np.zeros((2, 3), dtype=np.int64),          # wrong rank
+               np.zeros(0, dtype=np.int64),               # empty
+               np.array([0.5, 1.5]),                      # float dtype
+               np.array([0, cfg.vocab], dtype=np.int64)]  # out of vocab
+    out = server.run(prompts)
+    assert len(out) == len(prompts)
+    assert all(isinstance(o, RequestError) for o in out)
+    assert "non-empty 1-D" in out[0].reason
+    assert "not integer" in out[2].reason
+    assert "out of range" in out[3].reason
+
+
+def test_batch_server_mixed_malformed_and_timeout():
+    """A bad prompt must not poison the batch (ISSUE 10): the valid ones
+    still decode, in submission order; an expired deadline still runs the
+    FIRST batch and marks the cut-off slots with timeout records."""
+    import jax
+    from repro.configs.registry import get_config
+    from repro.launch.serve import BatchServer, RequestError
+    from repro.models.api import get_api
+
+    cfg = get_config("qwen2.5-3b", smoke=True)
+    params = get_api(cfg).init_params(cfg, jax.random.key(0))
+    server = BatchServer(cfg, params, batch_slots=2)
+    rng = np.random.default_rng(1)
+    good = [rng.integers(0, cfg.vocab, size=5) for _ in range(3)]
+    prompts = [good[0], np.zeros((2, 2), dtype=np.int64), good[1], good[2]]
+    out = server.run(prompts, gen_tokens=2)
+    assert isinstance(out[1], RequestError)
+    want = server.run(good, gen_tokens=2)
+    for o, w in zip([out[0], out[2], out[3]], want):
+        assert np.array_equal(o, w)
+    # timeout: 3 valid prompts / 2 slots = 2 batches; an already-expired
+    # deadline lets only the first run
+    out = server.run(good, gen_tokens=2, timeout=0.0)
+    assert np.array_equal(out[0], want[0]) and np.array_equal(out[1], want[1])
+    assert isinstance(out[2], RequestError) and "timed out" in out[2].reason
+
+
 # ------------------------------------------------- ISSUE 8 linter-found
 def test_token_stream_seed_step_streams_do_not_alias():
     """The old `(seed << 20) ^ step` derivation collided whenever step
